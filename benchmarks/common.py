@@ -1,0 +1,46 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark prints a CSV-ish table AND writes JSON next to it under
+``experiments/figures/``.  The simulator drives the REAL scheduler; stage
+durations come from the calibrated hardware model (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+import repro.configs.paper_models  # noqa: F401  (registers llama models)
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIG_DIR = os.path.join(HERE, "..", "experiments", "figures")
+
+
+def save_json(name: str, data) -> str:
+    os.makedirs(FIG_DIR, exist_ok=True)
+    path = os.path.join(FIG_DIR, name)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+    return path
+
+
+def print_table(headers: List[str], rows: List[List]) -> None:
+    w = [max(len(str(h)), max((len(str(r[i])) for r in rows), default=0))
+         for i, h in enumerate(headers)]
+    print(" | ".join(str(h).ljust(w[i]) for i, h in enumerate(headers)))
+    print("-+-".join("-" * x for x in w))
+    for r in rows:
+        print(" | ".join(str(c).ljust(w[i]) for i, c in enumerate(r)))
+
+
+# The paper's three Fig. 6 settings.
+FIG6_SETTINGS = [
+    # (label, hw, arch, trace, tp, rates)
+    ("T4+LLaMa-2-7B+OSC", "t4_g4dn", "llama2-7b", "osc", 1,
+     (0.25, 0.5, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0)),
+    ("A10G+LLaMa-3.1-8B+AC", "a10g_g5_4x", "llama31-8b", "ac", 1,
+     (0.4, 0.8, 1.2, 1.6, 2.0, 2.4, 2.8, 3.2, 4.0, 4.8)),
+    ("2xH100+LLaMa-3.1-70B+AC", "h100_sxm", "llama31-70b", "ac", 2,
+     (0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 5.0, 6.0)),
+]

@@ -1,0 +1,81 @@
+"""Real-engine benchmark (Fig. 10b spirit): GPU token throughput of the
+actual NeoEngine on this host, smoke-scale models, feeding a whole trace at
+once (the paper's "feed the Azure Code trace all at once" methodology).
+
+Compares NEO scheduling vs the GPU-only baseline ON REAL EXECUTION — the
+numbers are host-CPU wall times (not TPU projections), so the meaningful
+output is the RELATIVE behaviour and the scheduler decision mix.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import print_table, save_json
+from repro.config import EngineConfig
+from repro.configs import get_smoke_config
+from repro.core.engine import NeoEngine
+from repro.models.api import get_model
+from repro.serving.traces import get_trace
+
+
+def run(policy: str, n: int, seed: int = 0):
+    cfg = get_smoke_config("qwen3-0.6b")
+    model = get_model(cfg)
+    import jax
+
+    params = model.init(jax.random.key(seed))
+    ecfg = EngineConfig(
+        device_pool_pages=24, host_pool_pages=128, max_batch_tokens=1024,
+        policy=policy, seed=seed,
+    )
+    eng = NeoEngine(cfg, ecfg, params=params)
+    rng = np.random.default_rng(seed)
+    trace = get_trace("osc", n, 1e9, seed)  # all at once
+    total_tokens = 0
+    for t in trace:
+        t.prompt_len = min(t.prompt_len, 256)
+        t.output_len = min(t.output_len, 16)
+        t.materialise(rng, cfg.vocab_size)
+        eng.submit(t.prompt, t.output_len)
+        total_tokens += t.prompt_len + t.output_len
+    t0 = time.perf_counter()
+    eng.run_until_done(max_iters=5000)
+    wall = time.perf_counter() - t0
+    done = sum(1 for r in eng.requests.values() if r.state.name == "FINISHED")
+    return {
+        "policy": policy,
+        "requests_done": done,
+        "token_throughput": round(total_tokens / wall, 1),
+        "wall_s": round(wall, 2),
+        "iterations": eng.stats.iterations,
+        "offloaded": eng.stats.offloaded_decodes,
+        "device": eng.stats.device_decodes,
+        "swap_MB": round(eng.pool.swap_bytes / 1e6, 1) if eng.pool else 0,
+        "modes": dict(eng.stats.mode_counts),
+        "host_busy_s": round(eng.stats.host_busy_time, 2),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=12)
+    args = ap.parse_args(argv)
+    rows = []
+    results = {}
+    for pol in ("gpu_only", "neo", "fastdecode"):
+        r = run(pol, args.n)
+        results[pol] = r
+        rows.append([r["policy"], r["requests_done"], r["token_throughput"],
+                     r["iterations"], r["offloaded"], r["device"], r["swap_MB"]])
+    print("=== Real engine (smoke qwen3-0.6b, OSC burst, this host) ===")
+    print_table(["policy", "done", "tok/s", "iters", "offl dec", "dev dec", "swap MB"], rows)
+    save_json("engine_real.json", results)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

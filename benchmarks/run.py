@@ -1,0 +1,56 @@
+"""Benchmark aggregator: one section per paper table/figure plus the
+dry-run roofline table.  ``python -m benchmarks.run [--quick]``."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweeps (CI-sized)")
+    ap.add_argument("--skip-real", action="store_true",
+                    help="skip the real-engine benchmark (slowest section)")
+    args = ap.parse_args(argv)
+    q = ["--quick"] if args.quick else []
+    t0 = time.time()
+
+    from benchmarks import (engine_real, fig6_load_latency, fig8_fastdecode,
+                            fig9_lengths, fig10a_cpu, kernels, roofline_table)
+
+    print("#" * 70)
+    print("# NEO-on-TPU benchmark suite (simulator figures use the real")
+    print("# scheduler + calibrated hardware model; see DESIGN.md §7)")
+    print("#" * 70)
+
+    sections = [
+        ("Fig. 6/7 load-latency", lambda: fig6_load_latency.main(q + ["--dist"])),
+        ("Fig. 8 FastDecode+", lambda: fig8_fastdecode.main(q)),
+        ("Fig. 9 length grid", lambda: fig9_lengths.main(q)),
+        ("Fig. 10a host bandwidth", lambda: fig10a_cpu.main(q)),
+        ("Kernels", lambda: kernels.main([])),
+    ]
+    if not args.skip_real:
+        sections.append(("Real engine (Fig. 10b spirit)", lambda: engine_real.main([])))
+    sections.append(("Roofline table", lambda: roofline_table.main()))
+
+    failures = []
+    for name, fn in sections:
+        print(f"\n{'=' * 70}\n== {name}\n{'=' * 70}")
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            import traceback
+
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    print(f"\n[benchmarks] done in {time.time() - t0:.0f}s; "
+          f"{len(failures)} failures {failures if failures else ''}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,13 @@
+"""NEO core: the paper's contribution.
+
+- paged dual-pool KV cache (device HBM pool + host DRAM pool)
+- analytic + online-calibrated performance model (offline profiling with
+  linear interpolation, EWMA refresh = straggler mitigation)
+- load-aware scheduler (the six-step procedure of §3.2)
+- asymmetric GPU-CPU pipelining executor (§3.1)
+- the online serving engine with continuous batching
+"""
+
+from repro.core.engine import NeoEngine  # noqa: F401
+from repro.core.request import Request, RequestState  # noqa: F401
+from repro.core.scheduler import BatchPlan, NeoScheduler  # noqa: F401

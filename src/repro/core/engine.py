@@ -1,0 +1,361 @@
+"""NeoEngine — the online serving engine (continuous batching + NEO offload).
+
+One :meth:`step` = one inference iteration (Fig. 5): the load-aware scheduler
+builds a plan; KV swaps execute; the prefill sub-batch and the decode
+sub-batches run; new tokens are sampled; finished requests release pages.
+
+Fault tolerance: every accepted request is journaled (prompt + sampling params
++ emitted tokens).  :meth:`export_journal` / :meth:`replay_journal` implement
+prefill-replay recovery — after an engine loss, unfinished requests resume by
+prefilling ``prompt + tokens_so_far`` (decode continues exactly where it
+stopped; emitted tokens are never re-issued).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig, EngineConfig
+from repro.core.executor import ContiguousExecutor, PagedExecutor
+from repro.core.host_attention import HostAttention
+from repro.core.kv_cache import DualPool
+from repro.core.perfmodel import PerfModel
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import BatchPlan, NeoScheduler, PoolView
+from repro.models.api import get_model
+
+PAGED_FAMILIES = ("dense", "moe", "vlm")
+
+
+@dataclass
+class EngineStats:
+    iterations: int = 0
+    tokens_out: int = 0
+    prefill_tokens: int = 0
+    mode_counts: Dict[str, int] = field(default_factory=dict)
+    offloaded_decodes: int = 0
+    device_decodes: int = 0
+    wall_time: float = 0.0
+    host_busy_time: float = 0.0
+    plans: List[str] = field(default_factory=list)
+
+    def record_plan(self, plan: BatchPlan) -> None:
+        self.mode_counts[plan.mode] = self.mode_counts.get(plan.mode, 0) + 1
+        if len(self.plans) < 1000:
+            self.plans.append(plan.summary())
+
+
+class NeoEngine:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        engine_cfg: EngineConfig = EngineConfig(),
+        *,
+        params: Optional[Dict[str, Any]] = None,
+        rng: Optional[jax.Array] = None,
+        kernel_impl: str = "ref",
+    ):
+        self.cfg = cfg
+        self.engine_cfg = engine_cfg
+        self.model = get_model(cfg)
+        if params is None:
+            params = self.model.init(rng if rng is not None else jax.random.key(engine_cfg.seed))
+        self.params = params
+        self.perf = PerfModel.for_arch(cfg, engine_cfg.hw_profile, engine_cfg.ewma_alpha)
+        self.scheduler = NeoScheduler(cfg, engine_cfg, self.perf)
+        self.paged = cfg.family in PAGED_FAMILIES and cfg.supports_offload
+        if self.paged:
+            self.pool = DualPool(cfg, engine_cfg.device_pool_pages, engine_cfg.host_pool_pages)
+            self._scratch = self.pool.device.alloc(1)  # page 0 = decode scratch
+            self.host_attn = HostAttention(
+                cfg, self.pool.host.k, self.pool.host.v, threads=engine_cfg.host_threads
+            )
+            self.executor = PagedExecutor(
+                self.model, params, self.pool, self.host_attn, impl=kernel_impl
+            )
+            self._page = cfg.kv_block_size
+        else:
+            slots = min(engine_cfg.max_requests, 64)
+            capacity = engine_cfg.max_batch_tokens
+            self.executor = ContiguousExecutor(
+                self.model, params, slots=slots, capacity=capacity
+            )
+            self._page = capacity  # 1 "page" == 1 slot in scheduler accounting
+            self.pool = None
+            self.host_attn = None
+        self._rng = np.random.default_rng(engine_cfg.seed)
+        self._next_rid = 0
+        self.requests: Dict[int, Request] = {}
+        self.stats = EngineStats()
+        self._journal: List[Dict[str, Any]] = []
+        self.clock = 0.0  # virtual clock (arrival bookkeeping in offline runs)
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        prompt: Sequence[int],
+        max_new_tokens: int,
+        *,
+        arrival_time: Optional[float] = None,
+        eos_token: Optional[int] = None,
+        extras: Optional[Dict[str, np.ndarray]] = None,
+    ) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(
+            rid=rid,
+            prompt=list(map(int, prompt)),
+            max_new_tokens=int(max_new_tokens),
+            arrival_time=self.clock if arrival_time is None else arrival_time,
+            eos_token=eos_token,
+        )
+        if extras:
+            req.extras = extras  # type: ignore[attr-defined]
+        self.requests[rid] = req
+        self.scheduler.add_request(req)
+        self._journal.append(
+            {
+                "rid": rid,
+                "prompt": list(req.prompt),
+                "max_new_tokens": req.max_new_tokens,
+                "arrival_time": req.arrival_time,
+                "eos_token": eos_token,
+                "out_tokens": req.out_tokens,  # aliased: auto-updates
+            }
+        )
+        return rid
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+    def _pool_view(self) -> PoolView:
+        if self.paged:
+            return PoolView(
+                page_size=self._page,
+                device_free=self.pool.device.free_pages,
+                host_free=self.pool.host.free_pages,
+                device_total=self.pool.device.num_pages - 1,  # minus scratch
+                host_total=self.pool.host.num_pages,
+            )
+        return PoolView(
+            page_size=self._page,
+            device_free=len(self.executor.free_slots),
+            host_free=0,
+            device_total=self.executor.slots,
+            host_total=0,
+        )
+
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.engine_cfg.decode_sample == "greedy":
+            return int(np.argmax(logits))
+        z = logits.astype(np.float64)
+        z = z - z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self._rng.choice(len(p), p=p))
+
+    def _emit(self, req: Request, logits: np.ndarray, now: float,
+              emitted: List[Tuple[int, int]]) -> None:
+        tok = self._sample(logits)
+        req.out_tokens.append(tok)
+        if req.first_token_time is None:
+            req.first_token_time = now
+        emitted.append((req.rid, tok))
+        self.stats.tokens_out += 1
+
+    def _finish(self, req: Request, now: float) -> None:
+        req.state = RequestState.FINISHED
+        req.finish_time = now
+        if self.paged:
+            if req.pages:
+                pool = self.pool.device if req.location == "gpu" else self.pool.host
+                pool.free(req.pages)
+        else:
+            if req.pages:
+                self.executor.free_slot(req.pages[0])
+        req.pages = []
+
+    @staticmethod
+    def _extras_batch(reqs: List[Request], S: int) -> Dict[str, jnp.ndarray]:
+        ex = [getattr(r, "extras", None) for r in reqs]
+        if not any(ex):
+            return {}
+        keys = set().union(*[set(e) for e in ex if e])
+        out = {}
+        for k in keys:
+            rows = [e[k] if e and k in e else np.zeros_like(next(iter(
+                e2[k] for e2 in ex if e2 and k in e2))) for e in ex]
+            out[k] = jnp.asarray(np.stack(rows))
+        return out
+
+    # ------------------------------------------------------------------
+    # one iteration
+    # ------------------------------------------------------------------
+    def step(self, now: Optional[float] = None) -> List[Tuple[int, int]]:
+        """Run one inference iteration; returns [(rid, new_token), ...]."""
+        t0 = time.perf_counter()
+        now = self.clock if now is None else now
+        self.clock = now
+        host_busy0 = self.host_attn.busy_time if self.host_attn else 0.0
+
+        plan = self.scheduler.plan(self._pool_view())
+        if plan.is_empty():
+            return []
+        self.stats.iterations += 1
+        self.stats.record_plan(plan)
+
+        emitted: List[Tuple[int, int]] = []
+        if self.paged:
+            self._step_paged(plan, now, emitted)
+        else:
+            self._step_contiguous(plan, now, emitted)
+
+        # -- finish bookkeeping ------------------------------------------------
+        for req in plan.prefill + plan.decode_rows:
+            if req.state == RequestState.RUNNING and req.is_done():
+                self._finish(req, now)
+        self.scheduler.remove_finished()
+
+        # -- perf-model refresh (EWMA; straggler mitigation) -------------------
+        t_iter = time.perf_counter() - t0
+        self.stats.wall_time += t_iter
+        if self.host_attn:
+            host_busy = self.host_attn.busy_time - host_busy0
+            self.stats.host_busy_time += host_busy
+            st, L = plan.stages, self.cfg.num_layers
+            pred_host = L * (st.t_ca0 + st.t_ca1)
+            if pred_host > 0 and host_busy > 0:
+                self.perf.observe("cpu_attn", pred_host, host_busy)
+        return emitted
+
+    # -- paged families ------------------------------------------------------
+    def _step_paged(self, plan: BatchPlan, now: float, emitted: List[Tuple[int, int]]) -> None:
+        # 1. recompute preemption (both pools full): drop KV, requeue
+        for r in plan.preempt:
+            pool = self.pool.device if r.location == "gpu" else self.pool.host
+            pool.free(r.pages)
+            r.pages = []
+            r.location = "gpu"
+        # 2. swaps (whole-request KV moves; layer-wise overlap is modelled)
+        for r in plan.swap_out:
+            self.pool.swap_request(r, "cpu")
+        for r in plan.swap_in:
+            self.pool.swap_request(r, "gpu")
+        self.scheduler.commit(plan)
+
+        # 3. prefill sub-batch (integrated into batch-0); replayed prefills
+        #    (recompute preemption) re-derive their last token deterministically
+        #    and must not emit it twice
+        if plan.prefill:
+            page = self._page
+            to_host: List[bool] = []
+            for r in plan.prefill:
+                host = r in plan.prefill_to_host
+                npages = -(-r.prefill_len // page)
+                pool = self.pool.host if host else self.pool.device
+                r.pages = pool.alloc(npages)
+                to_host.append(host)
+            logits = self.executor.prefill(plan.prefill, to_host, self._extras_batch)
+            self.stats.prefill_tokens += sum(r.prefill_len for r in plan.prefill)
+            for i, r in enumerate(plan.prefill):
+                if not r.out_tokens:
+                    self._emit(r, logits[i], now, emitted)
+
+        # 3. decode sub-batches (batch-0 device+host rows, batch-1 host rows —
+        #    one fused dispatch; see executor docstring for the overlap note)
+        rows = [r for r in plan.decode_rows if r.state == RequestState.RUNNING
+                and r not in plan.prefill]
+        if rows:
+            page = self._page
+            host_flags: List[bool] = []
+            for r in rows:
+                host = r.location == "cpu"
+                if r.kv_len % page == 0 and r.kv_len // page >= len(r.pages):
+                    pool = self.pool.host if host else self.pool.device
+                    r.pages = r.pages + pool.alloc(1)
+                host_flags.append(host)
+            logits = self.executor.decode(rows, host_flags)
+            self.stats.offloaded_decodes += sum(host_flags)
+            self.stats.device_decodes += len(rows) - sum(host_flags)
+            for i, r in enumerate(rows):
+                self._emit(r, logits[i], now, emitted)
+
+    # -- contiguous families ---------------------------------------------------
+    def _step_contiguous(self, plan: BatchPlan, now: float, emitted: List[Tuple[int, int]]) -> None:
+        self.scheduler.commit(plan)
+        for r in plan.prefill:
+            slot = self.executor.alloc_slot()
+            r.pages = [slot]
+            extras = getattr(r, "extras", None)
+            if extras:
+                extras = {k: jnp.asarray(v)[None] for k, v in extras.items()}
+            logits = self.executor.prefill(r, slot, extras)
+            self.stats.prefill_tokens += r.prompt_len
+            self._emit(r, logits, now, emitted)
+        rows = [r for r in plan.decode_rows if r.state == RequestState.RUNNING
+                and r not in plan.prefill]
+        if rows:
+            tokens_by_slot = np.zeros((self.executor.slots,), np.int32)
+            for r in rows:
+                tokens_by_slot[r.pages[0]] = r.all_tokens[-1]
+            logits = self.executor.decode(tokens_by_slot)
+            self.stats.device_decodes += len(rows)
+            for r in rows:
+                self._emit(r, logits[r.pages[0]], now, emitted)
+
+    # ------------------------------------------------------------------
+    # drivers
+    # ------------------------------------------------------------------
+    def run_until_done(self, max_iters: int = 10_000) -> Dict[int, List[int]]:
+        """Drain all queued work; returns {rid: out_tokens}."""
+        it = 0
+        while self.scheduler.num_queued > 0 and it < max_iters:
+            self.step(now=self.clock + 1e-3)
+            it += 1
+        return {rid: list(r.out_tokens) for rid, r in self.requests.items()}
+
+    # ------------------------------------------------------------------
+    # fault tolerance: journal + prefill-replay recovery
+    # ------------------------------------------------------------------
+    def export_journal(self) -> List[Dict[str, Any]]:
+        out = []
+        for e in self._journal:
+            req = self.requests[e["rid"]]
+            out.append(
+                {
+                    **{k: v for k, v in e.items() if k != "out_tokens"},
+                    "out_tokens": list(req.out_tokens),
+                    "finished": req.state in (RequestState.FINISHED, RequestState.ABORTED),
+                }
+            )
+        return out
+
+    def replay_journal(self, journal: List[Dict[str, Any]]) -> Dict[int, int]:
+        """Resume unfinished journaled requests on THIS engine (prefill-replay).
+
+        Returns {old_rid: new_rid}.  Emitted tokens are preserved by extending
+        the replay prompt; generation continues from the exact next position.
+        """
+        mapping: Dict[int, int] = {}
+        for e in journal:
+            if e.get("finished"):
+                continue
+            done = len(e["out_tokens"])
+            if done >= e["max_new_tokens"]:
+                continue
+            new_rid = self.submit(
+                list(e["prompt"]) + list(e["out_tokens"]),
+                e["max_new_tokens"] - done,
+                arrival_time=e.get("arrival_time", 0.0),
+                eos_token=e.get("eos_token"),
+            )
+            mapping[e["rid"]] = new_rid
+        return mapping

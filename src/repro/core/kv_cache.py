@@ -1,0 +1,180 @@
+"""Paged dual-pool KV cache: device (HBM) pool + host (DRAM) pool.
+
+Layout per pool: K and V arrays of shape ``[L, P, page, KV, hd]`` — page-major
+so a page is one contiguous DMA unit (the swap granularity).  The device pool
+is a jax array; the host pool is numpy (it stands for pinned host memory on a
+real TPU VM; the host attention kernel reads it directly).
+
+Free-page accounting is host-side (Python) exactly like vLLM's block manager.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig
+
+
+class PagePool:
+    """One pool (device or host) with a free list."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        num_pages: int,
+        *,
+        backend: str,  # "device" | "host"
+        num_layers: Optional[int] = None,
+        dtype=None,
+    ):
+        self.cfg = cfg
+        self.backend = backend
+        self.page_size = cfg.kv_block_size
+        self.num_pages = num_pages
+        L = num_layers if num_layers is not None else cfg.num_attention_layers
+        self.num_layers = L
+        shape = (L, num_pages, self.page_size, cfg.num_kv_heads, cfg.head_dim)
+        self.dtype = dtype or (np.float32 if cfg.activation_dtype == "float32" else jnp.bfloat16)
+        if backend == "device":
+            self.k = jnp.zeros(shape, self.dtype)
+            self.v = jnp.zeros(shape, self.dtype)
+        else:
+            np_dt = np.float32 if cfg.activation_dtype == "float32" else np.float32
+            self.k = np.zeros(shape, np_dt)
+            self.v = np.zeros(shape, np_dt)
+        self._free: List[int] = list(range(num_pages))
+
+    # -- accounting ------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return len(self._free) >= n
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise MemoryError(
+                f"{self.backend} pool out of pages: want {n}, have {len(self._free)}"
+            )
+        pages, self._free = self._free[:n], self._free[n:]
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            assert 0 <= p < self.num_pages
+        dup = set(pages) & set(self._free)
+        if dup:
+            raise ValueError(f"double free of pages {sorted(dup)}")
+        self._free.extend(pages)
+
+    # -- device pool writes (jit'd) --------------------------------------------
+    def write_decode_tokens(self, layer_kv: Tuple[jnp.ndarray, jnp.ndarray],
+                            layer: int, page_ids: jnp.ndarray, offsets: jnp.ndarray,
+                            valid: jnp.ndarray) -> None:
+        """Write one token per row into device pool pages.
+
+        layer_kv: (k, v) each [R, KV, hd]; page_ids/offsets/valid: [R].
+        """
+        assert self.backend == "device"
+        k_new, v_new = layer_kv
+        self.k = _scatter_tokens(self.k, k_new, layer, page_ids, offsets, valid)
+        self.v = _scatter_tokens(self.v, v_new, layer, page_ids, offsets, valid)
+
+    def write_prefill_pages(self, layer: int, page_ids: np.ndarray,
+                            k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                            valid: np.ndarray) -> None:
+        """Write whole pages: k_pages [NPg, page, KV, hd]; page_ids/valid [NPg]."""
+        assert self.backend == "device"
+        self.k = _scatter_pages(self.k, k_pages, layer, jnp.asarray(page_ids), jnp.asarray(valid))
+        self.v = _scatter_pages(self.v, v_pages, layer, jnp.asarray(page_ids), jnp.asarray(valid))
+
+    # -- host pool writes (numpy) ------------------------------------------------
+    def write_host_pages(self, layer: int, page_ids: np.ndarray,
+                         k_pages: np.ndarray, v_pages: np.ndarray,
+                         valid: np.ndarray) -> None:
+        assert self.backend == "host"
+        ids = page_ids[valid]
+        self.k[layer, ids] = k_pages[valid]
+        self.v[layer, ids] = v_pages[valid]
+
+    def write_host_tokens(self, layer: int, page_ids: np.ndarray, offsets: np.ndarray,
+                          k_new: np.ndarray, v_new: np.ndarray, valid: np.ndarray) -> None:
+        assert self.backend == "host"
+        ids, offs = page_ids[valid], offsets[valid]
+        self.k[layer, ids, offs] = k_new[valid]
+        self.v[layer, ids, offs] = v_new[valid]
+
+    # -- swap I/O ---------------------------------------------------------------
+    def read_pages(self, pages: List[int]) -> Tuple[np.ndarray, np.ndarray]:
+        """[L, n, page, KV, hd] numpy copies (device→host PCIe DMA analogue)."""
+        idx = np.asarray(pages, np.int32)
+        if self.backend == "device":
+            return (np.asarray(self.k[:, idx], np.float32),
+                    np.asarray(self.v[:, idx], np.float32))
+        return self.k[:, idx].copy(), self.v[:, idx].copy()
+
+    def put_pages(self, pages: List[int], k_np: np.ndarray, v_np: np.ndarray) -> None:
+        idx = np.asarray(pages, np.int32)
+        if self.backend == "device":
+            self.k = self.k.at[:, idx].set(jnp.asarray(k_np, self.k.dtype))
+            self.v = self.v.at[:, idx].set(jnp.asarray(v_np, self.v.dtype))
+        else:
+            self.k[:, idx] = k_np
+            self.v[:, idx] = v_np
+
+
+@jax.jit
+def _scatter_tokens(pool, new, layer, page_ids, offsets, valid):
+    # pool: [L, P, page, KV, hd]; new: [R, KV, hd]
+    safe_pid = jnp.where(valid, page_ids, 0)
+    safe_off = jnp.where(valid, offsets, 0)
+    cur = pool[layer, safe_pid, safe_off]
+    upd = jnp.where(valid[:, None, None], new.astype(pool.dtype), cur)
+    return pool.at[layer, safe_pid, safe_off].set(upd)
+
+
+@jax.jit
+def _scatter_pages(pool, pages_data, layer, page_ids, valid):
+    # pool: [L, P, page, KV, hd]; pages_data: [NPg, page, KV, hd]
+    safe = jnp.where(valid, page_ids, 0)
+    cur = pool[layer, safe]
+    upd = jnp.where(valid[:, None, None, None], pages_data.astype(pool.dtype), cur)
+    return pool.at[layer, safe].set(upd)
+
+
+class DualPool:
+    """Device + host pools plus whole-request swap (the scheduler's swap-in/out)."""
+
+    def __init__(self, cfg: ArchConfig, device_pages: int, host_pages: int):
+        self.cfg = cfg
+        self.page_size = cfg.kv_block_size
+        self.device = PagePool(cfg, device_pages, backend="device")
+        self.host = PagePool(cfg, host_pages, backend="host")
+        self.swap_bytes = 0  # PCIe traffic accounting
+
+    def pool(self, location: str) -> PagePool:
+        return self.device if location == "gpu" else self.host
+
+    def swap_request(self, req, to: str) -> None:
+        """Move a request's whole KV between pools. ``to``: "gpu" | "cpu"."""
+        src = self.device if to == "cpu" else self.host
+        dst = self.host if to == "cpu" else self.device
+        if not req.pages:
+            req.location = "gpu" if to == "gpu" else "cpu"
+            return
+        k_np, v_np = src.read_pages(req.pages)
+        new_pages = dst.alloc(len(req.pages))
+        dst.put_pages(new_pages, k_np, v_np)
+        src.free(req.pages)
+        req.pages = new_pages
+        req.location = "gpu" if to == "gpu" else "cpu"
+        self.swap_bytes += k_np.nbytes + v_np.nbytes

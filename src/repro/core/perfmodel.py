@@ -1,0 +1,180 @@
+"""Stage-time performance model (§3.2).
+
+The paper profiles T_l (linear), T_ga (GPU attention) and T_ca (CPU attention)
+offline for typical lengths and linearly interpolates; NEO additionally
+refreshes the model online.  We implement that as an analytic roofline-style
+base model (FLOPs / bandwidth terms from the hardware profile) multiplied by
+per-stage calibration scale factors that are EWMA-updated from measured stage
+times — the same mechanism doubles as straggler mitigation: a slow host pushes
+its scale factor up and the scheduler offloads less.
+
+All times are PER TRANSFORMER LAYER, matching the paper's
+``T_tr = L × (max{T_l0, T_ca1} + max{T_l1 + T_ga0, T_ca0})``.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict
+
+from repro.config import ArchConfig
+from repro.roofline.hw import HardwareProfile, get_profile
+
+# Fixed per-stage dispatch overheads (seconds): kernel launch / host dispatch.
+# 75us/stage calibrates to a SwiftLLM-class Pythonic engine (the paper's §4
+# discusses its launch overheads at length); a fused-XLA TPU engine would sit
+# nearer 10-25us — the overhead is a perf-model knob, swept in tests.
+GPU_STAGE_OVERHEAD = 75e-6
+CPU_STAGE_OVERHEAD = 10e-6
+
+
+@dataclass
+class PerfModel:
+    cfg: ArchConfig
+    hw: HardwareProfile
+    ewma_alpha: float = 0.2
+    # online calibration factors (measured / predicted), one per stage kind
+    scale: Dict[str, float] = field(
+        default_factory=lambda: {"linear": 1.0, "gpu_attn": 1.0, "cpu_attn": 1.0, "swap": 1.0}
+    )
+
+    @classmethod
+    def for_arch(cls, cfg: ArchConfig, hw_name: str = "tpu_v5e",
+                 ewma_alpha: float = 0.2, tp: int = 1):
+        hw = get_profile(hw_name)
+        if tp > 1:
+            # TP scales device compute/bandwidth and PCIe lanes; the host stays
+            # a single NUMA node (§5.1: "We confine our system to running on a
+            # single NUMA node when running 2-GPU experiments").
+            import dataclasses
+
+            hw = dataclasses.replace(
+                hw,
+                device_flops=hw.device_flops * tp,
+                device_hbm_bw=hw.device_hbm_bw * tp,
+                device_hbm_bytes=hw.device_hbm_bytes * tp,
+                pcie_bw=hw.pcie_bw * tp,
+            )
+        return cls(cfg=cfg, hw=hw, ewma_alpha=ewma_alpha)
+
+    # -- derived per-layer constants (cached: param counting is eval_shape) ----
+    @functools.cached_property
+    def layer_params(self) -> float:
+        """Active (per-token) parameters per layer, excluding embeddings."""
+        cfg = self.cfg
+        n = cfg.active_param_count() - cfg.vocab_size * cfg.d_model
+        return max(n, 1) / max(cfg.num_layers, 1)
+
+    @functools.cached_property
+    def kv_bytes_per_token_layer(self) -> float:
+        cfg = self.cfg
+        return 2 * cfg.num_kv_heads * cfg.head_dim * 2  # K+V, bf16
+
+    # -- stage estimators (seconds per layer) -----------------------------------
+    def t_linear(self, n_tokens: int) -> float:
+        """Pre+post projections + FFN for `n_tokens` rows, one layer."""
+        if n_tokens <= 0:
+            return 0.0
+        p = self.layer_params
+        flops = 2.0 * p * n_tokens
+        t_compute = flops / (self.hw.device_flops * self.hw.linear_eff)
+        t_mem = (p * 2) / self.hw.device_hbm_bw  # weights are read once per layer
+        return self.scale["linear"] * (max(t_compute, t_mem) + GPU_STAGE_OVERHEAD)
+
+    def t_prefill_attn(self, sq_token_sum: float) -> float:
+        """Device prefill self-attention per layer.
+
+        ``sq_token_sum`` = Σ S_i² over the prefill requests in the batch;
+        causal flash attention ≈ 2·S²·H·hd FLOPs per layer (QKᵀ + PV, halved
+        by causality), compute-bound.
+        """
+        if sq_token_sum <= 0:
+            return 0.0
+        flops = 2.0 * sq_token_sum * self.cfg.num_heads * self.cfg.head_dim
+        return self.scale["linear"] * flops / (self.hw.device_flops * self.hw.linear_eff)
+
+    def t_gpu_attn(self, kv_tokens: int) -> float:
+        """Decode attention on device over `kv_tokens` total cached tokens."""
+        if kv_tokens <= 0:
+            return 0.0
+        t = (kv_tokens * self.kv_bytes_per_token_layer) / (
+            self.hw.device_hbm_bw * self.hw.attn_bw_eff
+        )
+        return self.scale["gpu_attn"] * (t + GPU_STAGE_OVERHEAD)
+
+    def t_cpu_attn(self, kv_tokens: int) -> float:
+        """Decode attention on the host over `kv_tokens` total cached tokens.
+
+        Memory-bandwidth bound (§2.2): the host reads K+V once per step.
+        The host KV cache is 16-bit (the paper's PACPU kernel streams fp16;
+        this container's numpy pool is fp32 purely because numpy lacks bf16 —
+        sizing and timing model the deployment layout).
+        """
+        if kv_tokens <= 0:
+            return 0.0
+        bytes_ = kv_tokens * 2 * self.cfg.num_kv_heads * self.cfg.head_dim * 2
+        t_bw = bytes_ / (self.hw.host_mem_bw * self.hw.host_bw_eff)
+        flops = 4.0 * kv_tokens * self.cfg.num_heads * self.cfg.head_dim
+        t_fl = flops / self.hw.host_flops
+        return self.scale["cpu_attn"] * (max(t_bw, t_fl) + CPU_STAGE_OVERHEAD)
+
+    def t_swap(self, n_tokens: int) -> float:
+        """PCIe transfer of `n_tokens` of one layer's KV."""
+        if n_tokens <= 0:
+            return 0.0
+        return self.scale["swap"] * (
+            n_tokens * self.kv_bytes_per_token_layer / self.hw.pcie_bw
+        )
+
+    def t_transfer_qo(self, n_rows: int) -> float:
+        """Q down + attention-output up for offloaded rows (TrQKV/TrO)."""
+        if n_rows <= 0:
+            return 0.0
+        bytes_ = n_rows * self.cfg.num_heads * self.cfg.head_dim * 2 * 2
+        return bytes_ / self.hw.pcie_bw
+
+    # -- iteration-level composition (the paper's T_tr formula) ------------------
+    def iteration_time(
+        self,
+        *,
+        batch0_tokens: int,
+        batch1_tokens: int,
+        gpu_kv_tokens: int,
+        cpu0_kv_tokens: int,
+        cpu1_kv_tokens: int,
+        swap_tokens: int = 0,
+    ) -> float:
+        L = self.cfg.num_layers
+        t_l0 = self.t_linear(batch0_tokens)
+        t_l1 = self.t_linear(batch1_tokens)
+        t_ga0 = self.t_gpu_attn(gpu_kv_tokens)
+        t_ca0 = self.t_cpu_attn(cpu0_kv_tokens)
+        t_ca1 = self.t_cpu_attn(cpu1_kv_tokens)
+        t_sw = self.t_swap(swap_tokens)
+        half1 = max(t_l0, t_ca1)
+        half2 = max(t_l1 + t_ga0, t_ca0, t_sw)
+        return L * (half1 + half2)
+
+    def gpu_only_time(self, *, batch_tokens: int, gpu_kv_tokens: int,
+                      prefill_sq_sum: float = 0.0) -> float:
+        L = self.cfg.num_layers
+        return L * (
+            self.t_linear(batch_tokens)
+            + self.t_prefill_attn(prefill_sq_sum)
+            + self.t_gpu_attn(gpu_kv_tokens)
+        )
+
+    # -- online refresh (EWMA) = straggler mitigation -----------------------------
+    # Calibration is clamped: a straggling host should shift load, not push
+    # the model into a regime where offloading is never chosen again (the
+    # scheduler's anti-starvation aging covers pathological stalls anyway).
+    SCALE_MIN, SCALE_MAX = 0.2, 16.0
+
+    def observe(self, stage: str, predicted: float, measured: float) -> None:
+        if predicted <= 0 or measured <= 0:
+            return
+        ratio = measured / predicted * self.scale[stage]
+        a = self.ewma_alpha
+        s = (1 - a) * self.scale[stage] + a * ratio
+        self.scale[stage] = min(max(s, self.SCALE_MIN), self.SCALE_MAX)

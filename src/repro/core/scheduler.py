@@ -1,0 +1,512 @@
+"""Load-aware scheduler — the paper's §3.2 six-step per-iteration procedure.
+
+Queues (Fig. 2): a prefill **waitqueue**, a **GPU decoding runqueue** (device-
+resident KV) and a **CPU decoding runqueue** (host-resident KV).  Each
+iteration the scheduler builds BOTH a two-batch asymmetric plan and a
+device-only plan and picks the higher estimated throughput (**Greedy**), while
+enforcing the no-bubble inequalities
+
+    T_ca1 <= T_l0              (batch-1 host attention hides under batch-0 linear)
+    T_ca0 <= T_l1 + T_ga0      (batch-0 host attention hides under batch-1
+                                linear + batch-0 device attention)
+
+(**Balancing** / **Hiding-CPU**), and packing as much work as memory allows
+(**Maximizing-GPU**).
+
+Policies:
+  * ``neo``        — the full algorithm above.
+  * ``gpu_only``   — never offloads; when the device pool is full, requests
+                     are preempted by swapping KV to the host (vLLM-style) and
+                     only resume after swap-in.  This is the SwiftLLM baseline.
+  * ``fastdecode`` — FastDecode+ (§5.3): NEO's pipelining but ALL decode
+                     attention offloaded to the host; no balance constraint.
+  * ``simple``     — strawman #1 (§3.1): full offload, no overlap (the perf
+                     model adds stages serially instead of max-combining).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Iterable, List, Optional, Tuple
+
+from repro.config import ArchConfig, EngineConfig
+from repro.core.perfmodel import PerfModel
+from repro.core.request import Request, RequestState
+
+
+@dataclass
+class PoolView:
+    """Free-page accounting snapshot handed to the scheduler."""
+
+    page_size: int
+    device_free: int
+    host_free: int
+    # Total pool sizes (admission control: a prompt larger than every pool can
+    # never run and must be rejected instead of deadlocking the FIFO head).
+    device_total: int = 1 << 30
+    host_total: int = 1 << 30
+
+    def device_take(self, n: int) -> bool:
+        if n > self.device_free:
+            return False
+        self.device_free -= n
+        return True
+
+    def host_take(self, n: int) -> bool:
+        if n > self.host_free:
+            return False
+        self.host_free -= n
+        return True
+
+
+@dataclass
+class StageEstimates:
+    """Per-layer stage times of the chosen plan (the paper's T_* symbols)."""
+
+    t_l0: float = 0.0
+    t_l1: float = 0.0
+    t_ga0: float = 0.0
+    t_ca0: float = 0.0
+    t_ca1: float = 0.0
+    t_swap: float = 0.0
+
+
+@dataclass
+class BatchPlan:
+    mode: str = "asym"  # "asym" | "gpu_only" | "idle"
+    # batch-0
+    prefill: List[Request] = field(default_factory=list)
+    prefill_to_host: List[Request] = field(default_factory=list)  # subset of prefill
+    decode_gpu: List[Request] = field(default_factory=list)
+    decode_cpu0: List[Request] = field(default_factory=list)
+    # batch-1
+    decode_cpu1: List[Request] = field(default_factory=list)
+    # pool moves to perform before compute
+    swap_out: List[Request] = field(default_factory=list)  # device -> host
+    swap_in: List[Request] = field(default_factory=list)  # host -> device
+    # recompute preemption: KV dropped entirely, request returns to the
+    # waitqueue for prefill-replay (both pools were full)
+    preempt: List[Request] = field(default_factory=list)
+    # estimates
+    est_iter_time: float = 0.0
+    est_tokens: int = 0
+    stages: StageEstimates = field(default_factory=StageEstimates)
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def batch0_tokens(self) -> int:
+        return sum(r.prefill_len for r in self.prefill) + len(self.decode_gpu) + len(
+            self.decode_cpu0
+        )
+
+    @property
+    def batch1_tokens(self) -> int:
+        return len(self.decode_cpu1)
+
+    @property
+    def decode_rows(self) -> List[Request]:
+        return self.decode_gpu + self.decode_cpu0 + self.decode_cpu1
+
+    @property
+    def host_rows(self) -> List[Request]:
+        return self.decode_cpu0 + self.decode_cpu1
+
+    def is_empty(self) -> bool:
+        return not (self.prefill or self.decode_rows or self.swap_in
+                    or self.swap_out or self.preempt)
+
+    def summary(self) -> str:
+        return (
+            f"mode={self.mode} prefill={len(self.prefill)}"
+            f"(host={len(self.prefill_to_host)}) dec_gpu={len(self.decode_gpu)} "
+            f"dec_cpu0={len(self.decode_cpu0)} dec_cpu1={len(self.decode_cpu1)} "
+            f"swap_out={len(self.swap_out)} swap_in={len(self.swap_in)} "
+            f"preempt={len(self.preempt)} "
+            f"est={self.est_iter_time * 1e3:.2f}ms/{self.est_tokens}tok"
+        )
+
+
+class NeoScheduler:
+    def __init__(self, cfg: ArchConfig, engine_cfg: EngineConfig, perf: PerfModel):
+        self.cfg = cfg
+        self.engine_cfg = engine_cfg
+        self.perf = perf
+        self.waitq: Deque[Request] = deque()
+        self.gpu_runq: List[Request] = []
+        self.cpu_runq: List[Request] = []
+        self.policy = engine_cfg.policy
+        if not cfg.supports_offload and self.policy != "gpu_only":
+            # NEO degrades to non-offloading mode when there is nothing to
+            # offload (attention-free archs — DESIGN.md §Arch-applicability).
+            self.policy = "gpu_only"
+
+    # ------------------------------------------------------------------
+    def add_request(self, req: Request) -> None:
+        assert req.state == RequestState.WAITING
+        self.waitq.append(req)
+
+    def running(self) -> List[Request]:
+        return self.gpu_runq + self.cpu_runq
+
+    @property
+    def num_queued(self) -> int:
+        return len(self.waitq) + len(self.gpu_runq) + len(self.cpu_runq)
+
+    def remove_finished(self) -> List[Request]:
+        done = [r for r in self.gpu_runq + self.cpu_runq if r.state == RequestState.FINISHED]
+        self.gpu_runq = [r for r in self.gpu_runq if r.state != RequestState.FINISHED]
+        self.cpu_runq = [r for r in self.cpu_runq if r.state != RequestState.FINISHED]
+        return done
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+    def _new_pages_for_decode(self, req: Request, page_size: int) -> int:
+        """Pages to allocate so the next token fits."""
+        return max(0, req.pages_needed(page_size, 1) - len(req.pages))
+
+    def _kv_tokens(self, reqs: Iterable[Request]) -> int:
+        return sum(r.kv_len + 1 for r in reqs)
+
+    def _prefill_sq(self, plan: BatchPlan) -> float:
+        return float(sum(r.prefill_len ** 2 for r in plan.prefill))
+
+    def _t_l0(self, plan: BatchPlan, extra_tokens: int = 0) -> float:
+        """Batch-0 device stage per layer: linear + prefill self-attention."""
+        return self.perf.t_linear(plan.batch0_tokens + extra_tokens) + \
+            self.perf.t_prefill_attn(self._prefill_sq(plan))
+
+    # ------------------------------------------------------------------
+    # the six-step procedure (§3.2)
+    # ------------------------------------------------------------------
+    def plan(self, pools: PoolView) -> BatchPlan:
+        self._admission_control(pools)
+        if self.policy == "gpu_only":
+            return self._plan_gpu_only(pools)
+        if self.policy in ("fastdecode", "simple"):
+            return self._plan_full_offload(pools)
+        return self._plan_neo(pools)
+
+    def _admission_control(self, pools: PoolView) -> None:
+        """Reject queued prompts that can never fit any pool."""
+        page = pools.page_size
+        cap = pools.device_total
+        if self.policy in ("neo", "fastdecode", "simple"):
+            cap = max(cap, pools.host_total)
+        if self.policy in ("fastdecode", "simple"):
+            cap = pools.host_total
+        keep: Deque[Request] = deque()
+        while self.waitq:
+            r = self.waitq.popleft()
+            pages = -(-(r.prompt_len + r.max_new_tokens) // page)
+            if pages > cap or r.prompt_len > self.engine_cfg.max_batch_tokens:
+                r.state = RequestState.ABORTED
+            else:
+                keep.append(r)
+        self.waitq = keep
+
+    # -- NEO ------------------------------------------------------------
+    def _plan_neo(self, pools: PoolView) -> BatchPlan:
+        cfg, perf = self.engine_cfg, self.perf
+        page = pools.page_size
+        plan = BatchPlan(mode="asym")  # step 1: initialise
+
+        # ---- step 2: GPU decode requests -> batch-0; swap to fit ----------
+        gpu_decode = sorted(self.gpu_runq, key=lambda r: r.arrival_time)
+        need = sum(self._new_pages_for_decode(r, page) for r in gpu_decode)
+        # shed largest-KV requests until the device pool holds all new KV:
+        # swap to the host when it has room, otherwise recompute-preempt
+        # (drop KV + requeue for prefill-replay) — without the fallback a
+        # full host pool deadlocks the whole device batch.
+        by_size = sorted(gpu_decode, key=lambda r: -r.kv_len)
+        while need > pools.device_free and by_size:
+            v = by_size.pop(0)
+            if pools.host_take(len(v.pages) + self._new_pages_for_decode(v, page)):
+                plan.swap_out.append(v)
+                plan.decode_cpu1.append(v)  # decodes on the host this iteration
+            else:
+                plan.preempt.append(v)
+            gpu_decode.remove(v)
+            pools.device_free += len(v.pages)
+            need -= self._new_pages_for_decode(v, page)
+        pools.device_free -= sum(self._new_pages_for_decode(r, page) for r in gpu_decode)
+        plan.decode_gpu = gpu_decode
+
+        # swap IN when there is ample device space (Maximizing GPU)
+        for r in sorted(self.cpu_runq, key=lambda r: r.kv_len):
+            pages = len(r.pages) + self._new_pages_for_decode(r, page)
+            headroom = pools.device_free - pages
+            if headroom < int(0.25 * pools.device_free):
+                break
+            pools.device_free -= pages
+            plan.swap_in.append(r)
+            plan.decode_gpu.append(r)
+
+        # ---- step 3: prefill requests -> batch-0 (Maximizing GPU) ---------
+        budget = cfg.max_batch_tokens - plan.batch0_tokens
+        while self.waitq and len(plan.prefill) + len(plan.decode_rows) < cfg.max_requests:
+            nxt = self.waitq[0]
+            if nxt.prefill_len > budget:
+                break
+            pages = -(-nxt.prefill_len // page)
+            if pools.device_take(pages):
+                plan.prefill.append(self.waitq.popleft())
+            elif pools.host_take(pages):
+                req = self.waitq.popleft()
+                plan.prefill.append(req)
+                plan.prefill_to_host.append(req)
+            else:
+                break
+            budget -= nxt.prefill_len
+
+        # ---- step 4: CPU decode requests -> batch-0 / batch-1 -------------
+        in_plan = set(id(r) for r in plan.swap_in)
+        t_ga0 = perf.t_gpu_attn(self._kv_tokens(plan.decode_gpu))
+        cpu_candidates = [r for r in self.cpu_runq if id(r) not in in_plan]
+        # swap-out victims already decode on the host in batch-1
+        kv0 = 0  # host kv tokens in batch-0
+        kv1 = self._kv_tokens(plan.swap_out)  # host kv tokens in batch-1
+        # FIFO scan (paper: "scan the CPU decoding runqueue") — skipped
+        # requests retry next iteration, so no request starves.
+        starve = self.engine_cfg.starvation_limit
+        # Fill order (refinement over the paper, recorded in EXPERIMENTS §Perf):
+        # batch-1's linear stage re-reads every layer's weights even for one
+        # row, so batch-1 only pays when batch-0's device stage is LONG
+        # (prefill integrated).  Decode-only iterations fill batch-0's CPU
+        # share first — those rows hide under the device attention t_ga0 at
+        # zero extra weight traffic.
+        prefer_b1 = bool(plan.prefill)
+        for r in sorted(cpu_candidates, key=lambda r: r.arrival_time):
+            if self._new_pages_for_decode(r, page) > 0 and not pools.host_take(
+                self._new_pages_for_decode(r, page)
+            ):
+                # host pool exhausted: a stuck host row pins dozens of pages —
+                # after the starvation limit, recompute-preempt it so the pool
+                # drains instead of deadlocking
+                r.skipped += 1
+                if r.skipped >= starve:
+                    plan.preempt.append(r)
+                    pools.host_free += len(r.pages)
+                    r.skipped = 0
+                continue
+            # a request skipped `starvation_limit` times in a row is forced in
+            # — without this a mis-calibrated perf model can park host
+            # requests forever while they pin host pages (queue deadlock).
+            t_l1_next = perf.t_linear(plan.batch1_tokens + 1)
+            fits_b1 = perf.t_cpu_attn(kv1 + r.kv_len + 1) <= self._t_l0(plan, 1)
+            fits_b0 = perf.t_cpu_attn(kv0 + r.kv_len + 1) <= t_l1_next + t_ga0
+            if prefer_b1 and (fits_b1 or r.skipped >= starve):
+                plan.decode_cpu1.append(r)
+                kv1 += r.kv_len + 1
+                r.skipped = 0
+            elif fits_b0:
+                plan.decode_cpu0.append(r)
+                kv0 += r.kv_len + 1
+                r.skipped = 0
+            elif fits_b1 or r.skipped >= starve:
+                plan.decode_cpu1.append(r)
+                kv1 += r.kv_len + 1
+                r.skipped = 0
+            else:
+                # would violate both inequalities: retry next iteration
+                r.skipped += 1
+                if self._new_pages_for_decode(r, page) > 0:
+                    pools.host_free += self._new_pages_for_decode(r, page)
+
+        # ---- step 5: reduce prefill (drop host-destined prefills) ---------
+        # A host-destined prefill costs swap-out PCIe time and feeds the CPU
+        # queue.  Drop it ONLY when the CPU already has more queued attention
+        # work than one iteration can hide (otherwise the CPU would go idle in
+        # future iterations — "Balancing"), and only while the no-bubble
+        # inequality T_ca1 <= T_l0 still holds after the removal.
+        cpu_demand = perf.t_cpu_attn(
+            self._kv_tokens(self.cpu_runq) + sum(r.prompt_len for r in plan.prefill_to_host)
+        )
+        for req in list(plan.prefill_to_host):
+            hideable = self._t_l0(plan) + perf.t_linear(plan.batch1_tokens) + t_ga0
+            if cpu_demand <= hideable:
+                break  # CPU underfed: keep feeding it host-destined prefills
+            without = self._t_l0(plan) - (
+                perf.t_linear(plan.batch0_tokens)
+                - perf.t_linear(plan.batch0_tokens - req.prompt_len)
+            ) - perf.t_prefill_attn(req.prompt_len ** 2)
+            if perf.t_cpu_attn(kv1) <= without:
+                plan.prefill.remove(req)
+                plan.prefill_to_host.remove(req)
+                self.waitq.appendleft(req)
+                pools.host_free += -(-req.prefill_len // page)
+                cpu_demand -= perf.t_cpu_attn(req.prompt_len)
+
+        # ---- step 6: greedy decision vs the device-only plan --------------
+        self._estimate(plan)
+        gpu_plan = self._gpu_only_variant(plan)
+        if gpu_plan is not None and self._throughput(gpu_plan) > self._throughput(plan):
+            return gpu_plan
+        return plan
+
+    def _gpu_only_variant(self, plan: BatchPlan) -> Optional[BatchPlan]:
+        """Step 6 (paper): "taking batch-0 and excluding all the CPU decoding
+        requests added in step 4" — prefills (including host-destined ones)
+        stay in BOTH candidate plans, so the greedy comparison isolates the
+        marginal tokens-per-time of the offloaded decode rows."""
+        step4_cpu0 = plan.decode_cpu0
+        step4_cpu1 = [r for r in plan.decode_cpu1 if r not in plan.swap_out]
+        if step4_cpu0 or step4_cpu1:
+            g = BatchPlan(
+                mode="gpu_only",
+                prefill=list(plan.prefill),
+                prefill_to_host=list(plan.prefill_to_host),
+                decode_gpu=list(plan.decode_gpu),
+                swap_out=list(plan.swap_out),
+                swap_in=list(plan.swap_in),
+                preempt=list(plan.preempt),
+                # swap-out victims still decode (on host): their KV already
+                # left the device this iteration.
+                decode_cpu1=list(plan.swap_out),
+            )
+            self._estimate(g)
+            return g
+        return None
+
+    # -- baselines -------------------------------------------------------
+    def _plan_gpu_only(self, pools: PoolView) -> BatchPlan:
+        page = pools.page_size
+        plan = BatchPlan(mode="gpu_only")
+        gpu_decode = sorted(self.gpu_runq, key=lambda r: r.arrival_time)
+        need = sum(self._new_pages_for_decode(r, page) for r in gpu_decode)
+        by_size = sorted(gpu_decode, key=lambda r: -r.kv_len)
+        while need > pools.device_free and by_size:
+            v = by_size.pop(0)
+            if pools.host_take(len(v.pages)):
+                plan.swap_out.append(v)  # swapped: does NOT decode this iter
+            else:
+                plan.preempt.append(v)  # host full too: recompute-preempt
+            gpu_decode.remove(v)
+            pools.device_free += len(v.pages)
+            need -= self._new_pages_for_decode(v, page)
+        pools.device_free -= sum(self._new_pages_for_decode(r, page) for r in gpu_decode)
+        plan.decode_gpu = gpu_decode
+        # swap preempted requests back in when space allows
+        for r in sorted(self.cpu_runq, key=lambda r: r.kv_len):
+            pages = len(r.pages) + self._new_pages_for_decode(r, page)
+            if pools.device_free - pages < 0:
+                break
+            pools.device_free -= pages
+            plan.swap_in.append(r)
+            plan.decode_gpu.append(r)
+        budget = self.engine_cfg.max_batch_tokens - plan.batch0_tokens
+        while self.waitq and len(plan.prefill) + len(plan.decode_rows) < self.engine_cfg.max_requests:
+            nxt = self.waitq[0]
+            pages = -(-nxt.prefill_len // page)
+            if nxt.prefill_len > budget or not pools.device_take(pages):
+                break
+            plan.prefill.append(self.waitq.popleft())
+            budget -= nxt.prefill_len
+        self._estimate(plan)
+        return plan
+
+    def _plan_full_offload(self, pools: PoolView) -> BatchPlan:
+        """FastDecode+ / simple-offloading: ALL decode KV lives on the host."""
+        page = pools.page_size
+        mode = "asym" if self.policy == "fastdecode" else "serial"
+        plan = BatchPlan(mode=mode)
+        # every running request is (or becomes) a host request
+        for r in list(self.gpu_runq):
+            if pools.host_take(len(r.pages) + self._new_pages_for_decode(r, page)):
+                plan.swap_out.append(r)
+                plan.decode_cpu1.append(r)
+        starve = self.engine_cfg.starvation_limit
+        for r in self.cpu_runq:
+            if self._new_pages_for_decode(r, page) and not pools.host_take(
+                self._new_pages_for_decode(r, page)
+            ):
+                r.skipped += 1
+                if r.skipped >= starve:
+                    plan.preempt.append(r)
+                    pools.host_free += len(r.pages)
+                    r.skipped = 0
+                continue
+            r.skipped = 0
+            plan.decode_cpu1.append(r)
+        budget = self.engine_cfg.max_batch_tokens
+        while self.waitq and len(plan.prefill) + len(plan.decode_rows) < self.engine_cfg.max_requests:
+            nxt = self.waitq[0]
+            pages = -(-nxt.prefill_len // page)
+            if nxt.prefill_len > budget or not pools.host_take(pages):
+                break
+            req = self.waitq.popleft()
+            plan.prefill.append(req)
+            plan.prefill_to_host.append(req)
+            budget -= nxt.prompt_len
+        self._estimate(plan)
+        return plan
+
+    # -- estimation -------------------------------------------------------
+    def _estimate(self, plan: BatchPlan) -> None:
+        perf = self.perf
+        st = StageEstimates(
+            t_l0=self._t_l0(plan),
+            t_l1=perf.t_linear(plan.batch1_tokens),
+            t_ga0=perf.t_gpu_attn(self._kv_tokens(plan.decode_gpu)),
+            t_ca0=perf.t_cpu_attn(self._kv_tokens(plan.decode_cpu0)),
+            t_ca1=perf.t_cpu_attn(self._kv_tokens(plan.decode_cpu1))
+            ,
+            t_swap=perf.t_swap(
+                sum(r.kv_len for r in plan.swap_out)
+                + sum(r.kv_len for r in plan.swap_in)
+                + sum(r.prompt_len for r in plan.prefill_to_host)
+            ),
+        )
+        plan.stages = st
+        L = self.cfg.num_layers
+        if plan.mode == "serial":  # strawman #1: no overlap
+            plan.est_iter_time = L * (st.t_l0 + st.t_l1 + st.t_ga0 + st.t_ca0 + st.t_ca1 + st.t_swap)
+        elif plan.mode == "gpu_only" and not plan.decode_cpu1:
+            plan.est_iter_time = perf.gpu_only_time(
+                batch_tokens=plan.batch0_tokens,
+                gpu_kv_tokens=self._kv_tokens(plan.decode_gpu),
+                prefill_sq_sum=self._prefill_sq(plan),
+            )
+        else:
+            plan.est_iter_time = L * (
+                max(st.t_l0, st.t_ca1) + max(st.t_l1 + st.t_ga0, st.t_ca0, st.t_swap)
+            )
+        plan.est_tokens = len(plan.decode_rows) + len(plan.prefill)
+
+    @staticmethod
+    def _throughput(plan: BatchPlan) -> float:
+        if plan.est_iter_time <= 0:
+            return 0.0
+        return plan.est_tokens / plan.est_iter_time
+
+    # ------------------------------------------------------------------
+    # post-iteration bookkeeping
+    # ------------------------------------------------------------------
+    def commit(self, plan: BatchPlan) -> None:
+        """Apply queue moves implied by the plan (engine calls after swaps)."""
+        for r in plan.preempt:
+            if r in self.gpu_runq:
+                self.gpu_runq.remove(r)
+            if r in self.cpu_runq:
+                self.cpu_runq.remove(r)
+            r.state = RequestState.WAITING
+            self.waitq.appendleft(r)
+        for r in plan.swap_out:
+            if r in self.gpu_runq:
+                self.gpu_runq.remove(r)
+            if r not in self.cpu_runq:
+                self.cpu_runq.append(r)
+        for r in plan.swap_in:
+            if r in self.cpu_runq:
+                self.cpu_runq.remove(r)
+            if r not in self.gpu_runq:
+                self.gpu_runq.append(r)
+        for r in plan.prefill:
+            r.state = RequestState.RUNNING
+            if r in plan.prefill_to_host:
+                r.location = "cpu"
+                self.cpu_runq.append(r)
+            else:
+                r.location = "gpu"
+                self.gpu_runq.append(r)

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticTokens, make_batches  # noqa: F401

@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingContext,
+    activate,
+    current_context,
+    logical_spec,
+    model_axis_size,
+    shard,
+    sharding_for,
+)

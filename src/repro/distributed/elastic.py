@@ -1,0 +1,137 @@
+"""Elastic scaling + fault handling for the distributed runtime.
+
+At thousand-node scale the failure model is: a host (and its chips) drops
+out mid-run; the job must (1) detect it, (2) re-form a smaller mesh,
+(3) re-lower the step functions, (4) resume from the last checkpoint
+(training) or the request journal (serving).  This module implements the
+mesh-side mechanics; the state-side recovery lives in
+``checkpoint.CheckpointManager`` and ``NeoEngine.replay_journal``.
+
+Policy (MaxText-style): the ``model`` axis is sacred (weights are sharded
+over it — losing a chip of a model group kills the whole replica), so
+elasticity happens on the ``data``/``pod`` axes in whole-replica units:
+a 16×16 mesh that loses a host re-forms as 15×16, dropping one data
+replica; batch re-shards over the survivors.
+
+``ElasticRunner`` wraps a step factory and re-lowers on every topology
+change; ``simulate_failure`` drives it in tests (real detection at scale
+comes from the coordinator heartbeats; this container has one process).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.config import ArchConfig
+from repro.distributed.sharding import ShardingContext, activate
+
+
+@dataclass
+class Topology:
+    """Live device grid: data × model (pod folded into data replicas)."""
+
+    devices: Any  # np.ndarray of jax devices, shape [data, model]
+    generation: int = 0
+
+    @property
+    def data(self) -> int:
+        return self.devices.shape[0]
+
+    @property
+    def model(self) -> int:
+        return self.devices.shape[1]
+
+    def mesh(self) -> Mesh:
+        return Mesh(self.devices, ("data", "model"))
+
+
+def initial_topology(model_axis: int = 1) -> Topology:
+    import numpy as np
+
+    devs = np.asarray(jax.devices())
+    n = (len(devs) // model_axis) * model_axis
+    return Topology(devs[:n].reshape(-1, model_axis))
+
+
+def drop_data_replica(topo: Topology, replica: int) -> Topology:
+    """A host died: remove its whole data replica (model axis is sacred)."""
+    import numpy as np
+
+    if topo.data <= 1:
+        raise RuntimeError("cannot drop the last data replica")
+    keep = [i for i in range(topo.data) if i != replica]
+    return Topology(topo.devices[np.asarray(keep)], topo.generation + 1)
+
+
+def add_data_replica(topo: Topology, devices: Sequence[Any]) -> Topology:
+    """Scale up: a new host joined with one replica's worth of chips."""
+    import numpy as np
+
+    row = np.asarray(devices).reshape(1, topo.model)
+    return Topology(np.concatenate([topo.devices, row], 0), topo.generation + 1)
+
+
+class ElasticRunner:
+    """Re-lowers a step function whenever the topology changes.
+
+    ``step_factory(cfg, mesh)`` must return a jit-able callable; lowered
+    executables are cached per topology generation.
+    """
+
+    def __init__(self, cfg: ArchConfig, step_factory: Callable[[ArchConfig, Mesh], Callable],
+                 topo: Optional[Topology] = None, model_axis: int = 1):
+        self.cfg = cfg
+        self.step_factory = step_factory
+        self.topo = topo or initial_topology(model_axis)
+        self._cache: Dict[int, Callable] = {}
+        self.relower_events: List[Dict[str, Any]] = []
+
+    @property
+    def mesh(self) -> Mesh:
+        return self.topo.mesh()
+
+    def step_fn(self) -> Callable:
+        gen = self.topo.generation
+        if gen not in self._cache:
+            t0 = time.perf_counter()
+            mesh = self.mesh
+            with activate(ShardingContext.for_arch(self.cfg, mesh)):
+                self._cache[gen] = self.step_factory(self.cfg, mesh)
+            self.relower_events.append({
+                "generation": gen,
+                "data": self.topo.data,
+                "model": self.topo.model,
+                "relower_s": round(time.perf_counter() - t0, 3),
+            })
+        return self._cache[gen]
+
+    def run(self, *args, **kwargs):
+        with activate(ShardingContext.for_arch(self.cfg, self.mesh)):
+            return self.step_fn()(*args, **kwargs)
+
+    # -- failure / scale events ------------------------------------------------
+    def on_failure(self, replica: int) -> None:
+        self.topo = drop_data_replica(self.topo, replica)
+
+    def on_join(self, devices: Sequence[Any]) -> None:
+        self.topo = add_data_replica(self.topo, devices)
+
+
+def reshard_batch(batch: Dict[str, Any], topo: Topology) -> Dict[str, Any]:
+    """Trim the global batch to a multiple of the surviving replica count and
+    place it on the new mesh (the data pipeline is stateless-per-step, so
+    shrinking is just reslicing)."""
+    mesh = topo.mesh()
+    out = {}
+    for k, v in batch.items():
+        b = (v.shape[0] // topo.data) * topo.data
+        spec = ("data",) + (None,) * (v.ndim - 1)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        out[k] = jax.device_put(v[:b], NamedSharding(mesh, P(*spec)))
+    return out

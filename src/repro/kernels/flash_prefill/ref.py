@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for causal (optionally sliding-window) GQA flash attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(
+    q: jnp.ndarray,  # [B, S, H, hd]
+    k: jnp.ndarray,  # [B, S, KV, hd]
+    v: jnp.ndarray,  # [B, S, KV, hd]
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    qpk = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    kr = jnp.repeat(k, qpk, axis=2)
+    vr = jnp.repeat(v, qpk, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32) * scale
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window:
+        mask &= pos[:, None] - pos[None, :] < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(vr.dtype), vr)

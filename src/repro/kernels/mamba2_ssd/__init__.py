@@ -1,0 +1,1 @@
+from repro.kernels.mamba2_ssd.ops import mamba2_ssd  # noqa: F401

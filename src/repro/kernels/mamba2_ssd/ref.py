@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for the Mamba2 SSD recurrence (arXiv:2405.21060).
+
+Per head h (state N, head channels P), scalar decay a_t = exp(dt_t * A_h):
+
+    S_t[n,p] = a_t * S_{t-1}[n,p] + dt_t * B_t[n] * x_t[p]
+    y_t[p]   = sum_n C_t[n] * S_t[n,p] + D_h * x_t[p]
+
+Naive scan oracle + the exact chunked (matmul-form) algorithm used by the
+Pallas kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba2_ssd_ref(
+    x: jnp.ndarray,  # [B, T, H, P]
+    dt: jnp.ndarray,  # [B, T, H] (post-softplus, > 0)
+    A: jnp.ndarray,  # [H] (negative)
+    Bm: jnp.ndarray,  # [B, T, N]  (single B/C group shared across heads)
+    Cm: jnp.ndarray,  # [B, T, N]
+    D: jnp.ndarray,  # [H]
+    state0: jnp.ndarray,  # [B, H, N, P]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    dtype = x.dtype
+    x32, dt32, B32, C32 = (a.astype(jnp.float32) for a in (x, dt, Bm, Cm))
+    A32, D32 = A.astype(jnp.float32), D.astype(jnp.float32)
+
+    def step(S, inp):
+        xt, dtt, bt, ct = inp  # [B,H,P], [B,H], [B,N], [B,N]
+        a = jnp.exp(dtt * A32[None])  # [B, H]
+        upd = (dtt[..., None] * xt)[:, :, None, :] * bt[:, None, :, None]
+        S = a[..., None, None] * S + upd  # [B,H,N,P]
+        y = jnp.einsum("bn,bhnp->bhp", ct, S) + D32[None, :, None] * xt
+        return S, y
+
+    xs = (
+        x32.swapaxes(0, 1),
+        dt32.swapaxes(0, 1),
+        B32.swapaxes(0, 1),
+        C32.swapaxes(0, 1),
+    )
+    stateT, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1).astype(dtype), stateT
+
+
+def mamba2_ssd_chunked_ref(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    Bm: jnp.ndarray,
+    Cm: jnp.ndarray,
+    D: jnp.ndarray,
+    state0: jnp.ndarray,
+    chunk: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact chunked matmul form (the SSD algorithm). T % chunk == 0."""
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    C = chunk
+    assert T % C == 0
+    n_chunks = T // C
+    dtype = x.dtype
+
+    x32 = x.astype(jnp.float32).reshape(B, n_chunks, C, H, P).swapaxes(0, 1)
+    dt32 = dt.astype(jnp.float32).reshape(B, n_chunks, C, H).swapaxes(0, 1)
+    B32 = Bm.astype(jnp.float32).reshape(B, n_chunks, C, N).swapaxes(0, 1)
+    C32 = Cm.astype(jnp.float32).reshape(B, n_chunks, C, N).swapaxes(0, 1)
+    A32, D32 = A.astype(jnp.float32), D.astype(jnp.float32)
+
+    def chunk_step(S, inp):
+        xt, dtt, bt, ct = inp  # [B,C,H,P], [B,C,H], [B,C,N], [B,C,N]
+        la = dtt * A32[None, None]  # log per-step decay, [B,C,H]
+        cum = jnp.cumsum(la, axis=1)  # inclusive
+        # inter-chunk (state) term: y_state[t] = (C_t ⊙ exp(cum_t-?)) ...
+        # decay applied to S for output at t: exp(cum_t) (S is pre-chunk state,
+        # decayed by steps 1..t inclusive since update at t happens before read).
+        dec_t = jnp.exp(cum)  # [B,C,H]
+        y_state = jnp.einsum("bcn,bch,bhnp->bchp", ct, dec_t, S)
+        # intra-chunk: pair decay exp(cum_t - cum_s) for s <= t (incl. s == t: 1 at diag)
+        pair = jnp.exp(
+            jnp.clip(cum[:, :, None] - cum[:, None, :], -60.0, 60.0)
+        )  # [B, C(t), C(s), H]
+        mask = jnp.tril(jnp.ones((C, C), bool))
+        scores = jnp.einsum("btn,bsn->bts", ct, bt)[:, :, :, None] * pair
+        scores = scores * mask[None, :, :, None]
+        xdt = xt * dtt[..., None]  # [B,C,H,P]
+        y_intra = jnp.einsum("btsh,bshp->bthp", scores, xdt)
+        y = y_state + y_intra + D32[None, None, :, None] * xt
+        # state update
+        total = cum[:, -1]  # [B,H]
+        k_dec = jnp.exp(jnp.clip(total[:, None] - cum, -60.0, 60.0))  # [B,C,H]
+        S = jnp.exp(total)[..., None, None] * S + jnp.einsum(
+            "bsn,bsh,bshp->bhnp", bt, k_dec, xdt
+        )
+        return S, y
+
+    stateT, ys = jax.lax.scan(
+        chunk_step, state0.astype(jnp.float32), (x32, dt32, B32, C32)
+    )
+    y = ys.swapaxes(0, 1).reshape(B, T, H, P)
+    return y.astype(dtype), stateT

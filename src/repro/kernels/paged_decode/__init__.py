@@ -1,0 +1,1 @@
+from repro.kernels.paged_decode.ops import paged_decode_attention  # noqa: F401

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for paged GQA decode attention (PagedAttention,
+arXiv:2309.06180, adapted to TPU layouts)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_decode_ref(
+    q: jnp.ndarray,  # [B, H, hd]
+    k_pages: jnp.ndarray,  # [P, page, KV, hd]
+    v_pages: jnp.ndarray,  # [P, page, KV, hd]
+    block_tables: jnp.ndarray,  # [B, maxp] int32 (page ids; dead entries must be valid indices)
+    lens: jnp.ndarray,  # [B] int32 — tokens valid in the cache (incl. current)
+) -> jnp.ndarray:
+    B, H, hd = q.shape
+    P, page, KV, _ = k_pages.shape
+    maxp = block_tables.shape[1]
+    qpk = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    k = k_pages[block_tables].reshape(B, maxp * page, KV, hd)
+    v = v_pages[block_tables].reshape(B, maxp * page, KV, hd)
+    kr = jnp.repeat(k, qpk, axis=2)
+    vr = jnp.repeat(v, qpk, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q, kr).astype(jnp.float32) * scale
+    pos = jnp.arange(maxp * page)
+    mask = pos[None, :] < lens[:, None]
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, None, :], p, 0.0)
+    return jnp.einsum("bhs,bshd->bhd", p.astype(vr.dtype), vr)

@@ -1,0 +1,1 @@
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan  # noqa: F401

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for the RWKV6 (Finch) linear recurrence.
+
+Recurrence (per head, key-dim j, value-dim i):
+
+    y_t[i] = sum_j r_t[j] * ( S_{t-1}[j,i] + u[j] * k_t[j] * v_t[i] )
+    S_t[j,i] = w_t[j] * S_{t-1}[j,i] + k_t[j] * v_t[i]
+
+with data-dependent per-channel decay ``w_t`` in (0, 1).
+
+Two references: a naive ``lax.scan`` (the ground-truth oracle) and an exact
+chunked form (the algorithm the Pallas kernel implements).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(
+    r: jnp.ndarray,  # [B, T, H, N]
+    k: jnp.ndarray,  # [B, T, H, N]
+    v: jnp.ndarray,  # [B, T, H, N]
+    w: jnp.ndarray,  # [B, T, H, N] decay in (0,1)
+    u: jnp.ndarray,  # [H, N] bonus for the current token
+    state0: jnp.ndarray,  # [B, H, N, N]  (key-dim, value-dim)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Naive step-by-step scan. Returns (y [B,T,H,N], stateT [B,H,N,N])."""
+    dtype = r.dtype
+    r32, k32, v32, w32 = (a.astype(jnp.float32) for a in (r, k, v, w))
+    u32 = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # [B, H, N]
+        kv = kt[..., :, None] * vt[..., None, :]  # [B,H,N,N]
+        y = jnp.einsum("bhj,bhji->bhi", rt, S + u32[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(a.swapaxes(0, 1) for a in (r32, k32, v32, w32))  # T-major
+    stateT, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1).astype(dtype), stateT
+
+
+def rwkv6_chunked_ref(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    state0: jnp.ndarray,
+    chunk: int = 16,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact chunked-parallel form (log-space intra-chunk pair decays).
+
+    Matches :func:`rwkv6_scan_ref` to fp32 tolerance.  ``T % chunk == 0``.
+    """
+    B, T, H, N = r.shape
+    assert T % chunk == 0, (T, chunk)
+    C = chunk
+    n_chunks = T // C
+    dtype = r.dtype
+
+    def to_chunks(a):
+        return a.astype(jnp.float32).reshape(B, n_chunks, C, H, N).swapaxes(0, 1)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))  # [n, B, C, H, N]
+    u32 = u.astype(jnp.float32)
+    logw = jnp.log(jnp.maximum(wc, 1e-38))  # [n, B, C, H, N]
+
+    def chunk_step(S, inp):
+        rt, kt, vt, lw = inp  # [B, C, H, N]
+        b = jnp.cumsum(lw, axis=1)  # inclusive log-decay from chunk start
+        b_excl = b - lw  # exclusive: decay applied to state BEFORE step t
+        # state contribution: y_state[t] = (r_t ⊙ exp(b_excl_t)) @ S
+        r_dec = rt * jnp.exp(b_excl)
+        y_state = jnp.einsum("bchj,bhji->bchi", r_dec, S)
+        # intra-chunk: pair decay exp(b_excl[t] - b[s]) for s < t; u-term at s == t.
+        pair = jnp.exp(
+            jnp.clip(b_excl[:, :, None] - b[:, None, :], -60.0, 60.0)
+        )  # [B, C(t), C(s), H, N]
+        scores = jnp.einsum("bthj,bsthj,bshj->bths", rt, pair.swapaxes(1, 2), kt)
+        mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        scores = scores * mask[None, :, None, :]
+        y_intra = jnp.einsum("bths,bshi->bthi", scores, vt)
+        y_u = jnp.einsum("bthj,hj,bthj,bthi->bthi", rt, u32, kt, vt)
+        y = y_state + y_intra + y_u
+        # state update: S' = exp(b_C) ⊙ S + Σ_s exp(b_C - b_s) k_s v_s^T
+        total = b[:, -1]  # [B, H, N]
+        k_dec = kt * jnp.exp(jnp.clip(total[:, None] - b, -60.0, 60.0))
+        S = jnp.exp(total)[..., None] * S + jnp.einsum("bshj,bshi->bhji", k_dec, vt)
+        return S, y
+
+    stateT, ys = jax.lax.scan(chunk_step, state0.astype(jnp.float32), (rc, kc, vc, logw))
+    y = ys.swapaxes(0, 1).reshape(B, T, H, N)
+    return y.astype(dtype), stateT

@@ -1,0 +1,267 @@
+"""Cell construction for the (architecture × input-shape × mesh) grid.
+
+One "cell" = a jit-able step function plus fully-sharded
+``jax.ShapeDtypeStruct`` stand-ins for every input (weak-type-correct,
+shardable, no device allocation) — exactly what ``.lower().compile()`` needs.
+
+Step kinds per ShapeConfig.kind:
+  * train    -> ``train_step``  (loss + grads + optimizer + ZeRO constraints)
+  * prefill  -> ``serve_prefill_step``
+  * decode   -> ``serve_decode_step`` (one new token over a seq_len KV cache;
+                the KV cache is a donated input)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ArchConfig, ShapeConfig, TrainConfig
+from repro.distributed.sharding import ShardingContext, activate
+from repro.distributed.zero import zero_spec_for
+from repro.models.api import cache_capacity, decode_window, get_model
+from repro.train.optimizer import OPTIMIZERS
+from repro.train.trainer import make_train_step
+
+Pytree = Any
+
+
+def _divides(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    names = (axes,) if isinstance(axes, str) else axes
+    n = 1
+    for a in names:
+        n *= mesh.shape.get(a, 1)
+    return dim % n == 0
+
+
+def spec_for_input(ctx: ShardingContext, shape: Tuple[int, ...], logical) -> P:
+    """Logical axes -> PartitionSpec, dropping axes that don't divide."""
+    full = ctx.spec(logical)
+    parts = list(full) + [None] * (len(shape) - len(full))
+    out = []
+    for dim, part in zip(shape, parts):
+        if part is not None and not _divides(dim, ctx.mesh, part):
+            part = None
+        out.append(part)
+    return P(*out)
+
+
+def struct_and_sharding(ctx: ShardingContext, shape, dtype, logical):
+    spec = spec_for_input(ctx, tuple(shape), logical)
+    return (
+        jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype)),
+        NamedSharding(ctx.mesh, spec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# params / optimizer-state specs
+# ---------------------------------------------------------------------------
+
+
+def _path_key(path, strip: int = 0) -> Tuple[str, ...]:
+    return tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path[strip:])
+
+
+def param_structs(model, ctx: ShardingContext):
+    specs = model.param_specs()
+    flat_axes = {p: ax for p, ax in _iter_axes(model.param_logical_axes())}
+
+    def spec_of(path, leaf) -> P:
+        ax = flat_axes.get(_path_key(path))
+        if ax is None or len(ax) != len(leaf.shape):
+            return P(*[None] * len(leaf.shape))
+        return spec_for_input(ctx, leaf.shape, ax)
+
+    structs = jax.tree_util.tree_map_with_path(
+        lambda p, l: jax.ShapeDtypeStruct(l.shape, l.dtype), specs
+    )
+    shards = jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(ctx.mesh, spec_of(p, l)), specs
+    )
+    return structs, shards
+
+
+def opt_structs(model, ctx: ShardingContext, train_cfg: TrainConfig):
+    opt_init, _ = OPTIMIZERS[train_cfg.optimizer]
+    state_specs = jax.eval_shape(opt_init, model.param_specs())
+    flat_axes = {p: ax for p, ax in _iter_axes(model.param_logical_axes())}
+
+    def spec_of(path, leaf) -> P:
+        # strip the leading "m"/"v"; factored adafactor leaves (row/col paths
+        # that don't resolve) stay replicated — they are small
+        ax = flat_axes.get(_path_key(path, strip=1))
+        if ax is None or len(ax) != len(leaf.shape):
+            spec = P(*[None] * len(leaf.shape))
+        else:
+            spec = spec_for_input(ctx, leaf.shape, ax)
+        spec = zero_spec_for(spec, leaf.shape, ctx.mesh)
+        # re-validate divisibility after the ZeRO extension
+        parts = []
+        for dim, part in zip(leaf.shape, list(spec) + [None] * (len(leaf.shape) - len(spec))):
+            parts.append(part if _divides(dim, ctx.mesh, part) else None)
+        return P(*parts)
+
+    structs = jax.tree_util.tree_map_with_path(
+        lambda p, l: jax.ShapeDtypeStruct(l.shape, l.dtype), state_specs
+    )
+    shards = jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(ctx.mesh, spec_of(p, l)), state_specs
+    )
+    return structs, shards
+
+
+def _iter_axes(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _iter_axes(v, prefix + (k,))
+    else:
+        yield prefix, tree
+
+
+def default_grad_accum(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> int:
+    """Microbatching policy for train cells: cap the per-chip microbatch so
+    the rematerialised residual stack (≈ L × tokens × d_model × 2 B, plus the
+    CPU-backend bf16→f32 shadow copies) stays ~2 GB — the activation share of
+    the 16 GB/chip budget."""
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    per_chip_seqs = max(1, shape.global_batch // dp)
+    target_tokens = cfg.train_micro_tokens or min(
+        16384, (1 << 30) // max(1, cfg.num_layers * cfg.d_model)
+    )
+    micro_seqs = max(1, min(per_chip_seqs, target_tokens // shape.seq_len))
+    # accum must divide the per-chip sequence count
+    accum = per_chip_seqs // micro_seqs
+    while per_chip_seqs % accum:
+        accum += 1
+    return accum
+
+
+# ---------------------------------------------------------------------------
+# cells
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Cell:
+    arch: ArchConfig
+    shape: ShapeConfig
+    kind: str
+    step: Callable
+    args_structs: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    rule_overrides: Optional[Dict[str, Any]] = None
+
+    def lower(self, mesh: Mesh):
+        ctx = ShardingContext.for_arch(self.arch, mesh, self.rule_overrides)
+        with activate(ctx):
+            jitted = jax.jit(
+                self.step,
+                in_shardings=self.in_shardings,
+                out_shardings=self.out_shardings,
+                donate_argnums=self.donate_argnums,
+            )
+            return jitted.lower(*self.args_structs)
+
+    def resident_bytes_per_chip(self) -> int:
+        """Exact per-chip bytes of all sharded inputs (params, optimizer
+        state, batch, KV cache).  This is the number the 16 GB/chip budget
+        governs on the TPU target — ``memory_analysis().temp_size`` from the
+        CPU backend overstates TPU temp (no memory-bound scheduling, and
+        bf16 ops get f32 shadow copies there)."""
+        total = 0
+        structs = jax.tree.leaves(self.args_structs)
+        shards = jax.tree.leaves(self.in_shardings,
+                                 is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+        for s, sh in zip(structs, shards):
+            shape = sh.shard_shape(s.shape)
+            n = 1
+            for d in shape:
+                n *= d
+            total += n * s.dtype.itemsize
+        return total
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               train_cfg: Optional[TrainConfig] = None,
+               rule_overrides: Optional[Dict[str, Any]] = None) -> Cell:
+    model = get_model(cfg)
+    overrides = dict(rule_overrides or {})
+    if (
+        shape.kind == "train"
+        and cfg.seq_parallel_train
+        and cfg.family != "ssm"
+        and "seq" not in overrides
+        and shape.seq_len % mesh.shape.get("model", 1) == 0
+    ):
+        # Megatron sequence parallelism: residual stream (and the remat'd
+        # activation stacks) shard their seq dim over the model axis.
+        overrides["seq"] = "model"
+    ctx = ShardingContext.for_arch(cfg, mesh, overrides)
+
+    with activate(ctx):
+        p_structs, p_shards = param_structs(model, ctx)
+
+        inputs = model.input_specs(shape)
+        in_structs = {}
+        in_shards = {}
+        for name, (shp, dt, ax) in inputs.items():
+            s, sh = struct_and_sharding(ctx, shp, dt, ax)
+            in_structs[name] = s
+            in_shards[name] = sh
+
+        if shape.kind == "train":
+            tc = train_cfg or TrainConfig(
+                optimizer="adafactor" if cfg.opt_state_policy == "lite" else "adamw",
+                grad_accum=default_grad_accum(cfg, shape, mesh),
+            )
+            o_structs, o_shards = opt_structs(model, ctx, tc)
+            raw_step = make_train_step(model, tc)
+
+            def step(params, opt_state, batch, step_idx):
+                return raw_step(params, opt_state, batch, step_idx)
+
+            args = (p_structs, o_structs, in_structs,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+            in_sh = (p_shards, o_shards, in_shards, NamedSharding(mesh, P()))
+            out_sh = (p_shards, o_shards, None)
+            return Cell(cfg, shape, "train", step, args, in_sh, out_sh,
+                        donate_argnums=(0, 1), rule_overrides=overrides)
+
+        if shape.kind == "prefill":
+            def step(params, inputs):
+                tokens = inputs["tokens"]
+                extras = {k: v for k, v in inputs.items() if k != "tokens"}
+                return model.prefill(params, tokens, **extras)
+
+            args = (p_structs, in_structs)
+            in_sh = (p_shards, in_shards)
+            return Cell(cfg, shape, "prefill", step, args, in_sh, None, (),
+                        rule_overrides=overrides)
+
+        # decode: one new token over a seq_len-deep cache
+        capacity = cache_capacity(model, shape)
+        window = decode_window(model, shape)
+        cache_specs = model.cache_shape(shape.global_batch, capacity)
+        c_structs, c_shards = {}, {}
+        for name, (shp, dt, ax) in cache_specs.items():
+            s, sh = struct_and_sharding(ctx, shp, dt, ax)
+            c_structs[name] = s
+            c_shards[name] = sh
+
+        def step(params, tokens, cache):
+            return model.decode(params, tokens, cache, window=window)
+
+        args = (p_structs, in_structs["tokens"], c_structs)
+        in_sh = (p_shards, in_shards["tokens"], c_shards)
+        out_sh = (None, c_shards)
+        return Cell(cfg, shape, "decode", step, args, in_sh, out_sh,
+                    donate_argnums=(2,), rule_overrides=overrides)

@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# The two lines above MUST run before any other import (jax locks the device
+# count on first initialisation).  Everything below is normal module code.
+
+"""Multi-pod dry-run (deliverable (e)).
+
+For every (architecture × input shape) cell, build the production mesh
+(16×16 single-pod; 2×16×16 multi-pod), lower + compile the step function
+with fully-sharded ShapeDtypeStruct inputs, and record:
+
+  * ``compiled.memory_analysis()``  — proves the cell fits 16 GB/chip;
+  * ``compiled.cost_analysis()``    — per-chip FLOPs / bytes for §Roofline;
+  * collective op bytes parsed from the partitioned HLO — the third
+    roofline term.
+
+Artifacts go to ``experiments/dryrun/<arch>__<shape>__<mesh>.json`` and are
+aggregated into EXPERIMENTS.md by ``benchmarks/roofline_table.py``.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --all                  # single-pod, 40 cells
+  python -m repro.launch.dryrun --all --multi-pod      # 512-chip pass
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.config import SHAPES_BY_NAME, shapes_for_arch
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch.cells import build_cell, default_grad_accum
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import build_report
+from repro.roofline.hlo import parse_module
+from repro.roofline.structural import structural_bytes
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+
+def _memory_summary(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception:  # pragma: no cover - backend without analysis
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        if hasattr(m, k):
+            out[k] = int(getattr(m, k))
+    out["total_bytes"] = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0)
+    )
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             out_dir: str = DEFAULT_OUT, verbose: bool = True,
+             kv_int8: bool = False) -> dict:
+    cfg = get_config(arch)
+    if kv_int8:  # §Perf "int8-kv" optimized variant
+        cfg = cfg.replace(kv_cache_dtype="int8", name=cfg.name + "-int8kv")
+        arch = cfg.name
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.devices.size
+    t0 = time.perf_counter()
+
+    cell = build_cell(cfg, shape, mesh)
+    lowered = cell.lower(mesh)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+    resident = cell.resident_bytes_per_chip()
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # some backends return [dict]
+        cost = cost[0]
+    mem = _memory_summary(compiled)
+    hlo = compiled.as_text()
+    module = parse_module(hlo)
+    coll = module.collective_stats()
+    accum = default_grad_accum(cfg, shape, mesh) if shape.kind == "train" else 1
+    sbytes = structural_bytes(cfg, shape, mesh, grad_accum=accum)
+    report = build_report(
+        cfg, shape, mesh_name, chips,
+        flops_per_chip=module.total_flops(),
+        bytes_per_chip=sbytes["total"],
+        collectives=coll,
+        memory_per_chip=resident,
+    )
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "kind": cell.kind,
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "resident_bytes_per_chip": resident,
+        "memory_analysis": mem,
+        # raw single-visit numbers kept as cross-checks (see roofline/hlo.py)
+        "cost_analysis_raw": {
+            k: cost.get(k, 0.0) for k in ("flops", "bytes accessed", "transcendentals")
+        },
+        "hlo_flops_per_chip": module.total_flops(),
+        "hlo_traffic_upper_bound": module.total_traffic_bytes(),
+        "structural_bytes": {k: round(v) for k, v in sbytes.items()},
+        "grad_accum": accum,
+        "collectives": coll.summary(),
+        "roofline": report.to_dict(),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: OK "
+              f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s, "
+              f"resident/chip {resident / 1e9:.2f} GB, "
+              f"temp/chip(cpu-sched) {mem.get('temp_size_in_bytes', 0) / 1e9:.2f} GB, "
+              f"bottleneck {report.bottleneck})")
+        print("  memory_analysis:", json.dumps(mem))
+        print("  roofline:", json.dumps({k: result["roofline"][k] for k in
+              ("t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
+               "useful_flops_ratio", "roofline_fraction")}))
+        print("  collectives:", json.dumps(result["collectives"]))
+    return result
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=sorted(SHAPES_BY_NAME))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every assigned cell")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV cache variant (§Perf 'int8-kv')")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+
+    failures = []
+    if args.all:
+        for arch in ARCH_NAMES:
+            cfg = get_config(arch)
+            for shape in shapes_for_arch(cfg):
+                try:
+                    run_cell(arch, shape.name, multi_pod=args.multi_pod,
+                             out_dir=args.out)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape.name, repr(e)))
+                    traceback.print_exc()
+        if failures:
+            print(f"\n{len(failures)} FAILURES:")
+            for f in failures:
+                print("  ", f)
+            return 1
+        print("\nall cells passed")
+        return 0
+
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    run_cell(args.arch, args.shape, multi_pod=args.multi_pod, out_dir=args.out,
+             kv_int8=args.kv_int8)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,114 @@
+"""Serving launcher.
+
+Runs the real NeoEngine on this host (smoke/mini configs execute end-to-end;
+full configs are exercised via the dry-run).  The default drives a synthetic
+trace through the engine and prints throughput/latency metrics plus the NEO
+scheduler's decisions.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --trace osc --n 24 --rate 8 --policy neo
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.config import EngineConfig
+from repro.configs import ARCH_NAMES, get_config, get_smoke_config
+from repro.core.engine import NeoEngine
+from repro.serving.metrics import RequestRecord, ServeMetrics
+from repro.serving.traces import get_trace
+
+
+def run_trace(engine: NeoEngine, trace, *, vocab: int, seed: int = 0,
+              extras_fn=None, max_iters: int = 100_000) -> ServeMetrics:
+    """Feed a trace into a real engine, respecting arrival times (virtual
+    clock advanced by wall-time of each iteration)."""
+    rng = np.random.default_rng(seed)
+    pending = sorted(trace, key=lambda t: t.arrival_time)
+    for t in pending:
+        t.materialise(rng, vocab)
+    metrics = ServeMetrics()
+    records = {}
+    i = 0
+    iters = 0
+    t0 = time.perf_counter()
+    while iters < max_iters:
+        now = time.perf_counter() - t0
+        while i < len(pending) and pending[i].arrival_time <= now:
+            tr = pending[i]
+            extras = extras_fn(tr) if extras_fn else None
+            rid = engine.submit(tr.prompt, tr.output_len,
+                                arrival_time=tr.arrival_time, extras=extras)
+            records[rid] = RequestRecord(rid, tr.arrival_time, tr.prompt_len, tr.output_len)
+            metrics.records.append(records[rid])
+            i += 1
+        emitted = engine.step(now=now)
+        iters += 1
+        done_now = time.perf_counter() - t0
+        for rid, req in engine.requests.items():
+            rec = records.get(rid)
+            if rec is None:
+                continue
+            if req.first_token_time is not None and rec.first_token_time is None:
+                rec.first_token_time = done_now
+            if req.finish_time is not None and rec.finish_time is None:
+                rec.finish_time = done_now
+        if not emitted and i >= len(pending) and engine.scheduler.num_queued == 0:
+            break
+        if not emitted and i < len(pending):
+            time.sleep(max(0.0, pending[i].arrival_time - (time.perf_counter() - t0)))
+    metrics.makespan = time.perf_counter() - t0
+    metrics.iterations = engine.stats.iterations
+    metrics.mode_counts = dict(engine.stats.mode_counts)
+    metrics.offloaded_decodes = engine.stats.offloaded_decodes
+    metrics.device_decodes = engine.stats.device_decodes
+    if engine.pool is not None:
+        metrics.swap_bytes = engine.pool.swap_bytes
+    return metrics
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCH_NAMES)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--policy", default="neo",
+                    choices=["neo", "gpu_only", "fastdecode", "simple"])
+    ap.add_argument("--trace", default="osc")
+    ap.add_argument("--n", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=4.0)
+    ap.add_argument("--device-pages", type=int, default=64)
+    ap.add_argument("--host-pages", type=int, default=256)
+    ap.add_argument("--max-batch-tokens", type=int, default=2048)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    ecfg = EngineConfig(
+        device_pool_pages=args.device_pages,
+        host_pool_pages=args.host_pages,
+        max_batch_tokens=args.max_batch_tokens,
+        policy=args.policy,
+        seed=args.seed,
+    )
+    print(f"[serve] arch={cfg.name} policy={args.policy} "
+          f"pools=({args.device_pages},{args.host_pages})")
+    engine = NeoEngine(cfg, ecfg)
+    trace = get_trace(args.trace, args.n, args.rate, args.seed)
+    # clamp lengths to smoke scale
+    for t in trace:
+        t.prompt_len = min(t.prompt_len, args.max_batch_tokens // 4)
+        t.output_len = min(t.output_len, 32)
+    m = run_trace(engine, trace, vocab=cfg.vocab_size, seed=args.seed)
+    print(json.dumps(m.summary(), indent=1))
+    print("scheduler modes:", m.mode_counts)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,76 @@
+"""Training launcher.
+
+Real-execution path (smoke/mini configs on this host's devices, optionally
+on a local data×model mesh) with checkpoint/restart — kill it mid-run and
+relaunch to watch it resume from the last atomic checkpoint.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+      --steps 200 --batch 8 --seq 64 --ckpt /tmp/neo_ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.config import TrainConfig
+from repro.configs import ARCH_NAMES, get_config, get_smoke_config
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticTokens, make_batches
+from repro.distributed.sharding import ShardingContext, activate
+from repro.launch.mesh import make_local_mesh
+from repro.models.api import get_model
+from repro.train import Trainer
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCH_NAMES)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "adafactor"])
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--grad-compression", default="none", choices=["none", "int8"])
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", action="store_true",
+                    help="activate a local data×model mesh over host devices")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = get_model(cfg)
+    tc = TrainConfig(
+        learning_rate=args.lr,
+        warmup_steps=max(args.steps // 10, 1),
+        total_steps=args.steps,
+        optimizer=args.optimizer,
+        grad_accum=args.grad_accum,
+        grad_compression=args.grad_compression,
+        checkpoint_every=args.ckpt_every,
+    )
+    ckpt = CheckpointManager(args.ckpt, keep=2, fingerprint=cfg.name) if args.ckpt else None
+
+    ctx = None
+    if args.mesh and len(jax.devices()) > 1:
+        ctx = ShardingContext.for_arch(cfg, make_local_mesh())
+
+    with activate(ctx):
+        trainer = Trainer(model, tc, rng=jax.random.key(args.seed), ckpt_manager=ckpt)
+        if trainer.maybe_resume():
+            print(f"[train] resumed from step {trainer.step}")
+        src = SyntheticTokens(cfg, batch=args.batch, seq_len=args.seq, seed=args.seed)
+        batches = make_batches(src, start_step=trainer.step)
+        hist = trainer.train(batches, args.steps - trainer.step, log_every=10)
+    for h in hist:
+        print(json.dumps(h))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,68 @@
+"""Model factory + uniform serve/train entry points.
+
+Every model class exposes:
+  init(rng) / param_specs() / param_logical_axes() / param_count() /
+  active_param_count() / loss(params, batch) /
+  prefill(params, tokens, *, capacity=None, **extras) /
+  decode(params, tokens, cache, *, window=0) /
+  cache_shape(batch, capacity) / init_cache(batch, capacity) /
+  input_specs(shape_cfg)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.config import ArchConfig, ShapeConfig
+
+_MODEL_CACHE: Dict[str, Any] = {}
+
+
+def get_model(cfg: ArchConfig):
+    key = cfg.name
+    m = _MODEL_CACHE.get(key)
+    if m is not None and m.cfg == cfg:
+        return m
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.transformer import DenseLM
+
+        m = DenseLM(cfg)
+    elif cfg.family == "ssm":
+        from repro.models.rwkv6 import RWKV6LM
+
+        m = RWKV6LM(cfg)
+    elif cfg.family == "hybrid":
+        from repro.models.zamba2 import Zamba2LM
+
+        m = Zamba2LM(cfg)
+    elif cfg.family == "audio":
+        from repro.models.encdec import EncDecLM
+
+        m = EncDecLM(cfg)
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    _MODEL_CACHE[key] = m
+    return m
+
+
+def cache_capacity(model, shape: ShapeConfig) -> int:
+    """KV capacity for a decode shape (sliding window caps it for hybrids)."""
+    if hasattr(model, "cache_capacity"):
+        return model.cache_capacity(shape.seq_len)
+    return shape.seq_len
+
+
+def decode_window(model, shape: ShapeConfig) -> int:
+    cfg = model.cfg
+    if cfg.long_context_window and shape.is_long_context:
+        return cfg.long_context_window
+    return 0
+
+
+def serve_prefill(model, params, inputs: Dict[str, Any], capacity=None):
+    extras = {k: v for k, v in inputs.items() if k != "tokens"}
+    return model.prefill(params, inputs["tokens"], capacity=capacity, **extras)
+
+
+def serve_decode(model, params, inputs: Dict[str, Any], cache, window: int = 0):
+    return model.decode(params, inputs["tokens"], cache, window=window)

@@ -1,0 +1,265 @@
+"""Attention paths.
+
+Three implementations, all numerically equivalent (tested against each other):
+
+* :func:`chunked_attention` — train/prefill full attention, flash-style
+  chunking over the query dimension so the [S, S] score matrix is never fully
+  materialised.  Used inside ``lax.scan`` over layers; sharding-annotated.
+* :func:`decode_attention` — one-token decode over a contiguous per-sequence
+  KV cache (the jitted at-scale serve path; "heads"/"replicated" KV layouts).
+* :func:`decode_attention_blocksharded` — split-K decode via ``shard_map``
+  over the "model" mesh axis for archs whose KV-head count does not divide
+  the axis (KV *pages* shard instead; partial-softmax psum combine).  This is
+  the cross-chip analogue of the paper's Flash-Decoding-style CPU kernel.
+
+The paged-pool variants used by the NEO engine live in
+``repro.kernels.paged_decode`` (Pallas kernel + jnp oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import shard
+from repro.distributed.sharding import current_context
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, q_per_kv: int) -> jnp.ndarray:
+    """[..., KV, hd] -> [..., KV*q_per_kv, hd] (each kv head repeated)."""
+    if q_per_kv == 1:
+        return k
+    return jnp.repeat(k, q_per_kv, axis=-2)
+
+
+def _heads_sharded() -> bool:
+    ctx = current_context()
+    return ctx is not None and ctx.rules.get("heads") is not None
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill attention (chunked over queries)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jnp.ndarray,  # [B, Sq, H, hd]
+    k: jnp.ndarray,  # [B, Skv, KV, hd]
+    v: jnp.ndarray,  # [B, Skv, KV, hd]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Full (optionally causal / sliding-window) attention, chunked over Sq.
+
+    ``q_offset`` is the absolute position of q[:, 0] relative to k[:, 0]
+    (used by chunked prefill continuation).
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    q_per_kv = H // k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+
+    k = _repeat_kv(k, q_per_kv)  # [B, Skv, H, hd]
+    v = _repeat_kv(v, q_per_kv)
+    if _heads_sharded():
+        k = shard(k, "batch", None, "heads", None)
+        v = shard(v, "batch", None, "heads", None)
+    else:
+        k = shard(k, "batch", "kv_seq", None, None)
+        v = shard(v, "batch", "kv_seq", None, None)
+
+    q_chunk = min(q_chunk, Sq)
+    while Sq % q_chunk != 0:  # Sq is a power-of-two in every assigned shape
+        q_chunk //= 2
+    n_chunks = Sq // q_chunk
+    qc = q.reshape(B, n_chunks, q_chunk, H, hd).swapaxes(0, 1)  # [n, B, c, H, hd]
+    kv_pos = jnp.arange(Skv)
+
+    def one_chunk(args):
+        qi, ci = args  # [B, c, H, hd], scalar chunk index
+        q_pos = q_offset + ci * q_chunk + jnp.arange(q_chunk)
+        s = jnp.einsum("bchd,bshd->bchs", qi, k).astype(jnp.float32) * scale
+        if _heads_sharded():
+            s = shard(s, "batch", None, "heads", None)
+        else:
+            s = shard(s, "batch", None, None, "kv_seq")
+        mask = jnp.ones((q_chunk, Skv), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window:
+            mask &= q_pos[:, None] - kv_pos[None, :] < window
+        s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bchs,bshd->bchd", p.astype(v.dtype), v)
+        return o
+
+    if n_chunks == 1:
+        out = one_chunk((qc[0], jnp.int32(0)))[None]
+    else:
+        out = jax.lax.map(one_chunk, (qc, jnp.arange(n_chunks, dtype=jnp.int32)))
+    out = out.swapaxes(0, 1).reshape(B, Sq, H, hd)
+    if _heads_sharded():
+        out = shard(out, "batch", None, "heads", None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode attention over a contiguous per-sequence cache
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jnp.ndarray,  # [B, H, hd]
+    k_cache: jnp.ndarray,  # [B, S, KV, hd] (already includes the new token)
+    v_cache: jnp.ndarray,
+    lens: jnp.ndarray,  # [B] int32 — number of valid tokens (incl. new one)
+    *,
+    window: int = 0,
+) -> jnp.ndarray:
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[1]
+    q_per_kv = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    kr = _repeat_kv(k_cache, q_per_kv)  # [B, S, H, hd]
+    vr = _repeat_kv(v_cache, q_per_kv)
+    s = jnp.einsum("bhd,bshd->bhs", q, kr).astype(jnp.float32) * scale
+    pos = jnp.arange(S)
+    mask = pos[None, :] < lens[:, None]
+    if window:
+        mask &= pos[None, :] >= (lens[:, None] - window)
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p.astype(vr.dtype), vr)
+
+
+# ---------------------------------------------------------------------------
+# Split-K decode attention, KV pages sharded over the "model" axis
+# ---------------------------------------------------------------------------
+
+
+def _partial_flash(q, k_local, v_local, valid_mask, scale):
+    """Unnormalised local attention: returns (acc [B,H,hd], l [B,H], m [B,H])."""
+    s = jnp.einsum("bhd,bshd->bhs", q, k_local).astype(jnp.float32) * scale
+    s = jnp.where(valid_mask[:, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)  # [B, H]
+    # Shards with no valid key: keep m finite so exp() stays well-defined.
+    m_safe = jnp.maximum(m, NEG_INF / 2)
+    e = jnp.exp(s - m_safe[..., None])
+    e = jnp.where(valid_mask[:, None, :], e, 0.0)
+    l = jnp.sum(e, axis=-1)
+    acc = jnp.einsum("bhs,bshd->bhd", e.astype(v_local.dtype), v_local).astype(jnp.float32)
+    return acc, l, m_safe
+
+
+def decode_attention_blocksharded(
+    q: jnp.ndarray,  # [B, H, hd]
+    k_cache: jnp.ndarray,  # [B, S, KV, hd]; S sharded over "model"
+    v_cache: jnp.ndarray,
+    k_new: jnp.ndarray,  # [B, KV, hd] — token to insert at position lens
+    v_new: jnp.ndarray,
+    lens: jnp.ndarray,  # [B] int32 — tokens valid BEFORE the insert
+    *,
+    window: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Insert (k_new, v_new) at position ``lens`` and attend over lens+1 keys.
+
+    KV sequence is sharded over the "model" mesh axis; each shard computes a
+    partial flash-attention over its local chunk and the result is combined
+    with a log-sum-exp psum — the cross-chip analogue of split-K Flash
+    Decoding (and of NEO's CPU kernel parallelisation).
+
+    Returns (attn_out [B,H,hd] replicated over model, new k_cache, new v_cache).
+    """
+    ctx = current_context()
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[1]
+    q_per_kv = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    if ctx is None or "model" not in ctx.mesh.axis_names:
+        # Single-device fallback: plain update + contiguous decode.
+        kc = _write_at(k_cache, k_new, lens)
+        vc = _write_at(v_cache, v_new, lens)
+        out = decode_attention(q, kc, vc, lens + 1, window=window)
+        return out, kc, vc
+
+    mesh = ctx.mesh
+    n_shards = mesh.shape["model"]
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = batch_axes[0] if len(batch_axes) == 1 else batch_axes
+    local_S = S // n_shards
+
+    def kernel(q, kc, vc, kn, vn, lens):
+        # shapes inside: q [Bl,H,hd], kc [Bl,local_S,KV,hd], lens [Bl]
+        shard_idx = jax.lax.axis_index("model")
+        offset = shard_idx * local_S
+        # --- write the new token into the owning shard's chunk ---
+        local_pos = lens - offset  # [Bl]
+        owned = (local_pos >= 0) & (local_pos < local_S)
+        safe_pos = jnp.clip(local_pos, 0, local_S - 1)
+        bidx = jnp.arange(kc.shape[0])
+        kc = kc.at[bidx, safe_pos].set(
+            jnp.where(owned[:, None, None], kn, kc[bidx, safe_pos])
+        )
+        vc = vc.at[bidx, safe_pos].set(
+            jnp.where(owned[:, None, None], vn, vc[bidx, safe_pos])
+        )
+        # --- partial attention over the local chunk ---
+        new_lens = lens + 1
+        pos = offset + jnp.arange(local_S)
+        valid = pos[None, :] < new_lens[:, None]
+        if window:
+            valid &= pos[None, :] >= (new_lens[:, None] - window)
+        kr = _repeat_kv(kc, q_per_kv)
+        vr = _repeat_kv(vc, q_per_kv)
+        acc, l, m = _partial_flash(q, kr, vr, valid, scale)
+        # --- combine across shards (log-sum-exp weighted) ---
+        m_glob = jax.lax.pmax(m, "model")  # [Bl, H]
+        corr = jnp.exp(m - m_glob)
+        num = jax.lax.psum(acc * corr[..., None], "model")
+        den = jax.lax.psum(l * corr, "model")
+        out = (num / jnp.maximum(den, 1e-30)[..., None]).astype(q.dtype)
+        return out, kc, vc
+
+    mapped = jax.shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(
+            P(bspec, None, None),  # q replicated over model
+            P(bspec, "model", None, None),
+            P(bspec, "model", None, None),
+            P(bspec, None, None),
+            P(bspec, None, None),
+            P(bspec),
+        ),
+        out_specs=(
+            P(bspec, None, None),
+            P(bspec, "model", None, None),
+            P(bspec, "model", None, None),
+        ),
+        check_vma=False,
+    )
+    return mapped(q, k_cache, v_cache, k_new, v_new, lens)
+
+
+def _write_at(cache: jnp.ndarray, new: jnp.ndarray, lens: jnp.ndarray) -> jnp.ndarray:
+    """cache [B,S,KV,hd]; new [B,KV,hd]; write new at position lens[b]."""
+    B, S = cache.shape[:2]
+    bidx = jnp.arange(B)
+    pos = jnp.clip(lens, 0, S - 1)
+    return cache.at[bidx, pos].set(new.astype(cache.dtype))
+
+
+def write_kv(cache_k, cache_v, k_new, v_new, lens):
+    return _write_at(cache_k, k_new, lens), _write_at(cache_v, v_new, lens)

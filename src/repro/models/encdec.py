@@ -1,0 +1,280 @@
+"""Encoder–decoder backbone (SeamlessM4T-medium, arXiv:2308.11596).
+
+The speech frontend is stubbed: inputs provide precomputed frame embeddings
+[B, F, d] for the encoder.  The decoder is a standard causal LM with
+cross-attention over the encoder memory; decode shapes exercise the decoder
+with a self-attn KV cache plus per-layer cross K/V computed once at prefill.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.distributed import shard
+from repro.models import attention as attn_lib
+from repro.models.layers import (
+    dense_init,
+    embed_init,
+    embed_lookup,
+    logits_last,
+    rms_norm,
+    softmax_xent_sharded,
+    swiglu_apply,
+    swiglu_logical_axes,
+    swiglu_params,
+)
+from repro.models.transformer import attn_full, attn_logical_axes, attn_params, project_qkv
+
+Params = Dict[str, Any]
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.encdec is not None
+        self.cfg = cfg
+
+    # -- params ---------------------------------------------------------------
+    def _enc_layer(self, key) -> Params:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": attn_params(k1, cfg, jnp.dtype(cfg.param_dtype)),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "mlp": swiglu_params(k2, cfg.d_model, cfg.d_ff, jnp.dtype(cfg.param_dtype)),
+        }
+
+    def _dec_layer(self, key) -> Params:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = self._enc_layer(jax.random.fold_in(key, 7))
+        p["ln_c"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["cross"] = attn_params(k3, cfg, jnp.dtype(cfg.param_dtype))
+        return p
+
+    def _enc_axes(self) -> Params:
+        cfg = self.cfg
+        return {
+            "ln1": (None,), "attn": attn_logical_axes(cfg),
+            "ln2": (None,), "mlp": swiglu_logical_axes(),
+        }
+
+    def _dec_axes(self) -> Params:
+        ax = self._enc_axes()
+        ax["ln_c"] = (None,)
+        ax["cross"] = attn_logical_axes(self.cfg)
+        return ax
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(rng, 5)
+        params: Params = {
+            "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype),
+            "frame_in": dense_init(ks[1], (cfg.d_model, cfg.d_model), dtype=dtype),
+            "enc_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "unembed": embed_init(ks[2], (cfg.d_model, cfg.vocab_size), dtype),
+        }
+        ekeys = jax.random.split(ks[3], cfg.encdec.encoder_layers)
+        dkeys = jax.random.split(ks[4], cfg.num_layers)
+        params["enc_blocks"] = jax.vmap(self._enc_layer)(ekeys)
+        params["dec_blocks"] = jax.vmap(self._dec_layer)(dkeys)
+        return params
+
+    def param_specs(self) -> Params:
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    def param_logical_axes(self) -> Params:
+        as_tuple = lambda t: isinstance(t, tuple)
+        return {
+            "embed": ("vocab", None),
+            "frame_in": (None, None),
+            "enc_norm": (None,),
+            "final_norm": (None,),
+            "unembed": (None, "vocab"),
+            "enc_blocks": jax.tree.map(lambda t: (None,) + t, self._enc_axes(), is_leaf=as_tuple),
+            "dec_blocks": jax.tree.map(lambda t: (None,) + t, self._dec_axes(), is_leaf=as_tuple),
+        }
+
+    def param_count(self) -> int:
+        return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(self.param_specs()))
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+    # -- encoder ------------------------------------------------------------------
+    def encode(self, params: Params, frames: jnp.ndarray) -> jnp.ndarray:
+        """frames: [B, F, embed_dim] (stubbed frontend) -> memory [B, F, d]."""
+        cfg = self.cfg
+        x = jnp.einsum("bfe,ed->bfd", frames.astype(cfg.activation_dtype), params["frame_in"])
+        x = shard(x, "batch", None, None)
+
+        def body(x, p):
+            h = rms_norm(x, p["ln1"], cfg.rms_eps)
+            o, _, _ = attn_full(p["attn"], cfg, h, causal=False)
+            x = x + o
+            h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+            x = x + swiglu_apply(p["mlp"], h2)
+            return shard(x, "batch", "seq", None), None
+
+        from repro.models.layers import maybe_remat
+
+        x, _ = jax.lax.scan(maybe_remat(body, cfg.remat_policy), x, params["enc_blocks"])
+        return rms_norm(x, params["enc_norm"], cfg.rms_eps)
+
+    # -- cross attention helpers ----------------------------------------------------
+    def _cross_kv(self, p: Params, memory: jnp.ndarray):
+        """memory: [B, F, d] -> (k, v) [B, F, KV, hd] (no RoPE on cross)."""
+        k = jnp.einsum("bfd,dhk->bfhk", memory, p["wk"])
+        v = jnp.einsum("bfd,dhk->bfhk", memory, p["wv"])
+        return k, v
+
+    def _cross_full(self, p: Params, x: jnp.ndarray, ck, cv):
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        o = attn_lib.chunked_attention(q, ck, cv, causal=False)
+        return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+    def _cross_step(self, p: Params, x: jnp.ndarray, ck, cv, enc_lens=None):
+        q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
+        F = ck.shape[1]
+        if enc_lens is None:
+            enc_lens = jnp.full((x.shape[0],), F, jnp.int32)
+        o = attn_lib.decode_attention(q, ck, cv, enc_lens)
+        return jnp.einsum("bhk,hkd->bd", o, p["wo"])
+
+    # -- caches -----------------------------------------------------------------
+    def cache_shape(self, batch: int, capacity: int):
+        cfg = self.cfg
+        L = cfg.num_layers
+        F = cfg.encdec.encoder_memory_len
+        kv = cfg.num_kv_heads, cfg.head_dim
+        return {
+            "k": ((L, batch, capacity, *kv), cfg.activation_dtype,
+                  ("layers", "batch", "kv_seq", "kv_heads", None)),
+            "v": ((L, batch, capacity, *kv), cfg.activation_dtype,
+                  ("layers", "batch", "kv_seq", "kv_heads", None)),
+            "ck": ((L, batch, F, *kv), cfg.activation_dtype,
+                   ("layers", "batch", None, "kv_heads", None)),
+            "cv": ((L, batch, F, *kv), cfg.activation_dtype,
+                   ("layers", "batch", None, "kv_heads", None)),
+            "lens": ((batch,), "int32", ("batch",)),
+            "enc_lens": ((batch,), "int32", ("batch",)),
+        }
+
+    def init_cache(self, batch: int, capacity: int):
+        return {
+            name: jnp.zeros(shp, dtype=dt)
+            for name, (shp, dt, _) in self.cache_shape(batch, capacity).items()
+        }
+
+    # -- train ----------------------------------------------------------------------
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"])
+        x = embed_lookup(params["embed"], batch["tokens"]).astype(cfg.activation_dtype)
+        x = shard(x, "batch", None, None)
+
+        def body(x, p):
+            h = rms_norm(x, p["ln1"], cfg.rms_eps)
+            o, _, _ = attn_full(p["attn"], cfg, h, causal=True)
+            x = x + o
+            hc = rms_norm(x, p["ln_c"], cfg.rms_eps)
+            ck, cv = self._cross_kv(p["cross"], memory)
+            x = x + self._cross_full(p["cross"], hc, ck, cv)
+            h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+            x = x + swiglu_apply(p["mlp"], h2)
+            return shard(x, "batch", "seq", None), None
+
+        from repro.models.layers import maybe_remat
+
+        x, _ = jax.lax.scan(maybe_remat(body, cfg.remat_policy), x, params["dec_blocks"])
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        xent, _ = softmax_xent_sharded(
+            x, params["unembed"], batch["targets"], batch["loss_mask"]
+        )
+        return xent, {"xent": xent, "aux": jnp.float32(0.0)}
+
+    # -- serve -----------------------------------------------------------------------
+    def prefill(self, params: Params, tokens, *, capacity: Optional[int] = None, frames=None):
+        cfg = self.cfg
+        B, S = tokens.shape
+        capacity = capacity or S
+        memory = self.encode(params, frames)
+        x = embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
+        x = shard(x, "batch", None, None)
+
+        def body(x, p):
+            h = rms_norm(x, p["ln1"], cfg.rms_eps)
+            o, k, v = attn_full(p["attn"], cfg, h, causal=True)
+            x = x + o
+            hc = rms_norm(x, p["ln_c"], cfg.rms_eps)
+            ck, cv = self._cross_kv(p["cross"], memory)
+            x = x + self._cross_full(p["cross"], hc, ck, cv)
+            h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+            x = x + swiglu_apply(p["mlp"], h2)
+            return shard(x, "batch", None, None), (k, v, ck, cv)
+
+        x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["dec_blocks"])
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = logits_last(x[:, -1], params["unembed"])
+        if capacity > S:
+            pad = [(0, 0), (0, 0), (0, capacity - S), (0, 0), (0, 0)]
+            ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+        cache = {
+            "k": ks, "v": vs, "ck": cks, "cv": cvs,
+            "lens": jnp.full((B,), S, jnp.int32),
+            "enc_lens": jnp.full((B,), memory.shape[1], jnp.int32),
+        }
+        return logits, cache
+
+    def decode(self, params: Params, tokens, cache, *, window: int = 0):
+        cfg = self.cfg
+        lens = cache["lens"]
+        x = embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
+        x = shard(x, "batch", None)
+
+        def body(x, scanned):
+            p, kc, vc, ck, cv = scanned
+            h = rms_norm(x, p["ln1"], cfg.rms_eps)
+            q, k, v = project_qkv(p["attn"], cfg, h[:, None, :], lens[:, None])
+            q, k, v = q[:, 0], k[:, 0], v[:, 0]
+            kc, vc = attn_lib.write_kv(kc, vc, k, v, lens)
+            o = attn_lib.decode_attention(q, kc, vc, lens + 1, window=window)
+            x = x + jnp.einsum("bhk,hkd->bd", o, p["attn"]["wo"])
+            hc = rms_norm(x, p["ln_c"], cfg.rms_eps)
+            x = x + self._cross_step(p["cross"], hc, ck, cv, cache["enc_lens"])
+            h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+            x = x + swiglu_apply(p["mlp"], h2)
+            return x, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["k"], cache["v"], cache["ck"], cache["cv"])
+        )
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = logits_last(x, params["unembed"])
+        new_cache = {"k": ks, "v": vs, "ck": cache["ck"], "cv": cache["cv"],
+                     "lens": lens + 1, "enc_lens": cache["enc_lens"]}
+        return logits, new_cache
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Tuple]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        F = cfg.encdec.encoder_memory_len
+        frames = ((B, F, cfg.d_model), cfg.activation_dtype, ("batch", None, None))
+        if shape.kind == "train":
+            F_train = min(F, S)
+            return {
+                "frames": ((B, F_train, cfg.d_model), cfg.activation_dtype, ("batch", None, None)),
+                "tokens": ((B, S), "int32", ("batch", None)),
+                "targets": ((B, S), "int32", ("batch", None)),
+                "loss_mask": ((B, S), "float32", ("batch", None)),
+            }
+        if shape.kind == "prefill":
+            return {"tokens": ((B, S), "int32", ("batch", None)), "frames": frames}
+        return {"tokens": ((B,), "int32", ("batch",))}

@@ -1,0 +1,187 @@
+"""Shared building blocks: norms, rotary embeddings, MLPs, initialisers.
+
+Everything is a pure function over explicit parameter pytrees (stacked along a
+leading layer axis for ``lax.scan``), annotated with logical sharding axes via
+:func:`repro.distributed.shard`.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shard
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis_size: Optional[int] = None, dtype=jnp.float32):
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def maybe_remat(fn, policy: str):
+    """Wrap a scan body with activation checkpointing per the arch policy.
+
+    "sp_save" (perf iteration, EXPERIMENTS §Perf): like "full" but saves the
+    tensors tagged ``sp_gathered`` — the post-all-gather q/k/v projections of
+    sequence-parallel layers — so the backward pass does not re-run the
+    sequence all-gathers that dominate the collective roofline term.
+    """
+    if policy == "none":
+        return fn
+    if policy == "minimal":
+        p = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    elif policy == "sp_save":
+        p = jax.checkpoint_policies.save_only_these_names("sp_gathered")
+    else:  # "full": save nothing, recompute everything
+        p = None
+    return jax.checkpoint(fn, policy=p)
+
+
+def tag_sp_gathered(*xs):
+    """Tag tensors as remat-saveable under the "sp_save" policy."""
+    from jax.ad_checkpoint import checkpoint_name
+
+    return tuple(checkpoint_name(x, "sp_gathered") for x in xs)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def group_norm_heads(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 64e-5) -> jnp.ndarray:
+    """GroupNorm over the trailing head_dim, per head (RWKV ln_x)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)  # [head_dim/2]
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., seq, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def swiglu_params(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), in_axis_size=d_ff, dtype=dtype),
+    }
+
+
+def swiglu_logical_axes() -> Dict[str, Tuple[Optional[str], ...]]:
+    return {
+        "w_gate": ("d_model", "d_ff"),
+        "w_up": ("d_model", "d_ff"),
+        "w_down": ("d_ff", "d_model"),
+    }
+
+
+def swiglu_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., d_model] -> [..., d_model]; d_ff sharded over model axis."""
+    gate = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    h = shard(h, *((None,) * (h.ndim - 1)), "d_ff")
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding with vocab sharding
+# ---------------------------------------------------------------------------
+
+
+def embed_lookup(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """table: [vocab, d_model] (vocab sharded); tokens int32 [...]."""
+    out = jnp.take(table, tokens, axis=0)
+    return shard(out, "batch", *((None,) * (out.ndim - 2)))
+
+
+def softmax_xent_sharded(
+    hidden: jnp.ndarray,  # [B, S, d]
+    unembed: jnp.ndarray,  # [d, vocab] (vocab sharded over model)
+    targets: jnp.ndarray,  # [B, S] int32
+    mask: jnp.ndarray,  # [B, S] float
+    chunk: int = 512,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-mean cross entropy without materialising full [B,S,V] logits.
+
+    Processes the sequence in chunks via lax.map; the vocab reduction is
+    GSPMD-partitioned (logits chunk is vocab-sharded over the model axis).
+    Returns (loss, total_weight).
+    """
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    n_chunks = max(S // chunk, 1)
+    usable = n_chunks * chunk
+    h = hidden[:, :usable].reshape(B, n_chunks, chunk, d).swapaxes(0, 1)
+    t = targets[:, :usable].reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    m = mask[:, :usable].reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint  # recompute chunk logits in backward: never stash [c, V]
+    def chunk_loss(args):
+        hc, tc, mc = args  # [B, c, d], [B, c], [B, c]
+        logits = jnp.einsum("bcd,dv->bcv", hc, unembed).astype(jnp.float32)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mc), jnp.sum(mc)
+
+    losses, weights = jax.lax.map(chunk_loss, (h, t, m))
+    total_w = jnp.maximum(jnp.sum(weights), 1.0)
+    return jnp.sum(losses) / total_w, total_w
+
+
+def logits_last(hidden_last: jnp.ndarray, unembed: jnp.ndarray) -> jnp.ndarray:
+    """hidden_last: [B, d] -> logits [B, vocab] (vocab-sharded)."""
+    out = jnp.einsum("bd,dv->bv", hidden_last, unembed).astype(jnp.float32)
+    return shard(out, "batch", "vocab")

@@ -1,0 +1,145 @@
+"""Mamba2 block (arXiv:2405.21060) — used by the Zamba2 hybrid.
+
+State per block: SSM state [B, H, N, P] + causal-conv tail [B, conv_dim, K-1].
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.distributed import shard
+from repro.kernels.mamba2_ssd.ops import mamba2_decode_step, mamba2_ssd
+from repro.models.layers import dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+
+class Mamba2Block:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.ssm is not None and cfg.ssm.kind == "mamba2"
+        self.cfg = cfg
+        self.d_inner = cfg.ssm.expand * cfg.d_model
+        self.P = cfg.ssm.head_dim
+        self.H = self.d_inner // self.P
+        self.N = cfg.ssm.state_dim
+        self.K = cfg.ssm.conv_kernel
+        self.conv_dim = self.d_inner + 2 * self.N  # x ++ B ++ C
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        d = cfg.d_model
+        dtype = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 8)
+        return {
+            "ln": jnp.ones((d,), jnp.float32),
+            "wz": dense_init(ks[0], (d, self.H, self.P), in_axis_size=d, dtype=dtype),
+            "wx": dense_init(ks[1], (d, self.H, self.P), in_axis_size=d, dtype=dtype),
+            "wB": dense_init(ks[2], (d, self.N), in_axis_size=d, dtype=dtype),
+            "wC": dense_init(ks[3], (d, self.N), in_axis_size=d, dtype=dtype),
+            "wdt": dense_init(ks[4], (d, self.H), in_axis_size=d, dtype=jnp.float32),
+            "dt_bias": jnp.zeros((self.H,), jnp.float32),
+            "A_log": jnp.zeros((self.H,), jnp.float32),  # A = -exp(A_log)
+            "D": jnp.ones((self.H,), jnp.float32),
+            "conv_w": dense_init(ks[5], (self.conv_dim, self.K), in_axis_size=self.K, dtype=jnp.float32),
+            "conv_b": jnp.zeros((self.conv_dim,), jnp.float32),
+            "norm": jnp.ones((self.H, self.P), jnp.float32),
+            "wo": dense_init(ks[6], (self.H, self.P, d), in_axis_size=self.d_inner, dtype=dtype),
+        }
+
+    def logical_axes(self) -> Params:
+        return {
+            "ln": (None,),
+            "wz": (None, "heads", None), "wx": (None, "heads", None),
+            "wB": (None, None), "wC": (None, None),
+            "wdt": (None, "heads"), "dt_bias": ("heads",),
+            "A_log": ("heads",), "D": ("heads",),
+            "conv_w": (None, None), "conv_b": (None,),
+            "norm": ("heads", None),
+            "wo": ("heads", None, None),
+        }
+
+    def state_shape(self, batch: int):
+        return {
+            "ssm": ((batch, self.H, self.N, self.P), "float32",
+                    ("batch", "heads", None, None)),
+            "conv": ((batch, self.conv_dim, self.K - 1), "float32",
+                     ("batch", None, None)),
+        }
+
+    # -- conv helpers --------------------------------------------------------
+    def _causal_conv_seq(self, p: Params, xbc: jnp.ndarray, conv_tail: jnp.ndarray):
+        """xbc: [B, T, conv_dim]; conv_tail: [B, conv_dim, K-1] (prior context).
+        Returns (conv_out [B, T, conv_dim], new_tail)."""
+        B, T, C = xbc.shape
+        x32 = xbc.astype(jnp.float32).swapaxes(1, 2)  # [B, C, T]
+        full = jnp.concatenate([conv_tail, x32], axis=-1)  # [B, C, K-1+T]
+        idx = jnp.arange(T)[:, None] + jnp.arange(self.K)[None, :]  # [T, K]
+        windows = full[:, :, idx]  # [B, C, T, K]
+        out = jnp.einsum("bctk,ck->bct", windows, p["conv_w"]) + p["conv_b"][None, :, None]
+        out = jax.nn.silu(out)
+        new_tail = full[:, :, -(self.K - 1):] if self.K > 1 else conv_tail
+        return out.swapaxes(1, 2).astype(xbc.dtype), new_tail
+
+    def _causal_conv_step(self, p: Params, xbc: jnp.ndarray, conv_tail: jnp.ndarray):
+        """xbc: [B, conv_dim]; returns (out [B, conv_dim], new_tail)."""
+        x32 = xbc.astype(jnp.float32)
+        full = jnp.concatenate([conv_tail, x32[:, :, None]], axis=-1)  # [B, C, K]
+        out = jnp.einsum("bck,ck->bc", full, p["conv_w"]) + p["conv_b"]
+        out = jax.nn.silu(out)
+        new_tail = full[:, :, 1:]
+        return out.astype(xbc.dtype), new_tail
+
+    def _project(self, p: Params, x: jnp.ndarray):
+        """x: [..., d] -> (z, xin, B, C, dt) pre-conv projections."""
+        z = jnp.einsum("...d,dhp->...hp", x, p["wz"])
+        xin = jnp.einsum("...d,dhp->...hp", x, p["wx"])
+        Bm = jnp.einsum("...d,dn->...n", x, p["wB"])
+        Cm = jnp.einsum("...d,dn->...n", x, p["wC"])
+        dt = jax.nn.softplus(
+            jnp.einsum("...d,dh->...h", x.astype(jnp.float32), p["wdt"]) + p["dt_bias"]
+        )
+        return z, xin, Bm, Cm, dt
+
+    # -- forward -----------------------------------------------------------------
+    def apply_seq(self, p: Params, x: jnp.ndarray, state: Params, impl: str = "scan"):
+        """x: [B, T, d] (residual stream). Returns (x_out, new_state)."""
+        cfg = self.cfg
+        B, T, d = x.shape
+        h = rms_norm(x, p["ln"], cfg.rms_eps)
+        z, xin, Bm, Cm, dt = self._project(p, h)
+        xin = shard(xin, "batch", None, "heads", None)
+        xbc = jnp.concatenate(
+            [xin.reshape(B, T, self.d_inner), Bm, Cm], axis=-1
+        )
+        conv_out, new_tail = self._causal_conv_seq(p, xbc, state["conv"])
+        xin = conv_out[..., : self.d_inner].reshape(B, T, self.H, self.P)
+        Bm = conv_out[..., self.d_inner : self.d_inner + self.N]
+        Cm = conv_out[..., self.d_inner + self.N :]
+        A = -jnp.exp(p["A_log"])
+        y, ssmT = mamba2_ssd(xin, dt, A, Bm, Cm, p["D"], state["ssm"], impl=impl)
+        y = rms_norm(y, jnp.ones((self.P,), jnp.float32), cfg.rms_eps) * p["norm"][None, None]
+        y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+        out = jnp.einsum("bthp,hpd->btd", y, p["wo"])
+        return x + out, {"ssm": ssmT, "conv": new_tail}
+
+    def apply_step(self, p: Params, x: jnp.ndarray, state: Params):
+        """x: [B, d] single token."""
+        cfg = self.cfg
+        B, d = x.shape
+        h = rms_norm(x, p["ln"], cfg.rms_eps)
+        z, xin, Bm, Cm, dt = self._project(p, h)
+        xbc = jnp.concatenate([xin.reshape(B, self.d_inner), Bm, Cm], axis=-1)
+        conv_out, new_tail = self._causal_conv_step(p, xbc, state["conv"])
+        xin = conv_out[:, : self.d_inner].reshape(B, self.H, self.P)
+        Bm = conv_out[:, self.d_inner : self.d_inner + self.N]
+        Cm = conv_out[:, self.d_inner + self.N :]
+        A = -jnp.exp(p["A_log"])
+        y, ssmT = mamba2_decode_step(xin, dt, A, Bm, Cm, p["D"], state["ssm"])
+        y = rms_norm(y, jnp.ones((self.P,), jnp.float32), cfg.rms_eps) * p["norm"][None]
+        y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+        out = jnp.einsum("bhp,hpd->bd", y, p["wo"])
+        return x + out, {"ssm": ssmT, "conv": new_tail}

@@ -1,0 +1,178 @@
+"""Mixture-of-experts FFN (DeepSeek-MoE fine-grained / Llama-4 top-1 styles).
+
+Two dispatch paths, numerically cross-checked in tests:
+
+* ``scatter`` (default, used at scale): sort-free capacity dispatch — per
+  batch-row one-hot cumsum assigns each (token, slot) a position inside its
+  expert's capacity buffer ``[B, E, C, d]``; expert matmuls run as batched
+  GEMMs with experts sharded over the "model" axis (EP).  GSPMD turns the
+  buffer resharding into the MoE all-to-all pair.
+* ``dense`` (GShard-style one-hot einsum): simple oracle for small shapes.
+
+Token-dropping beyond the capacity factor matches the paper-standard GShard
+behaviour (dropped slots contribute the residual stream unchanged).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MoEConfig
+from repro.distributed import shard
+from repro.models.layers import dense_init, swiglu_params
+
+Params = Dict[str, jnp.ndarray]
+
+
+def moe_params(key, d_model: int, moe: MoEConfig, dtype) -> Params:
+    k_r, k_g, k_u, k_d, k_s = jax.random.split(key, 5)
+    E, ff = moe.num_experts, moe.expert_d_ff
+    p: Params = {
+        "router": dense_init(k_r, (d_model, E), dtype=jnp.float32),
+        "w_gate": dense_init(k_g, (E, d_model, ff), in_axis_size=d_model, dtype=dtype),
+        "w_up": dense_init(k_u, (E, d_model, ff), in_axis_size=d_model, dtype=dtype),
+        "w_down": dense_init(k_d, (E, ff, d_model), in_axis_size=ff, dtype=dtype),
+    }
+    if moe.num_shared_experts:
+        sh_ff = moe.shared_d_ff * moe.num_shared_experts
+        p["shared"] = swiglu_params(k_s, d_model, sh_ff, dtype)
+    return p
+
+
+def moe_logical_axes(moe: MoEConfig) -> Dict[str, Tuple]:
+    ax: Dict[str, Tuple] = {
+        "router": (None, None),
+        "w_gate": ("experts", None, "expert_ff"),
+        "w_up": ("experts", None, "expert_ff"),
+        "w_down": ("experts", "expert_ff", None),
+    }
+    if moe.num_shared_experts:
+        ax["shared"] = {
+            "w_gate": ("d_model", "d_ff"),
+            "w_up": ("d_model", "d_ff"),
+            "w_down": ("d_ff", "d_model"),
+        }
+    return ax
+
+
+def _capacity(T: int, moe: MoEConfig) -> int:
+    c = math.ceil(T * moe.top_k * moe.capacity_factor / moe.num_experts)
+    return max(int(c), 1)
+
+
+def _route(p: Params, x: jnp.ndarray, moe: MoEConfig):
+    """x: [B, T, d] -> (weights [B,T,k], idx [B,T,k], aux_loss scalar)."""
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(logits, moe.top_k)
+    weights = jax.nn.softmax(gates, axis=-1).astype(x.dtype)
+    # GShard load-balance aux loss: E * mean_e(frac_tokens_e * mean_prob_e).
+    E = moe.num_experts
+    onehot_top1 = jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32)
+    frac = jnp.mean(onehot_top1, axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_prob)
+    return weights, idx, aux
+
+
+def _expert_ffn(p: Params, buf: jnp.ndarray) -> jnp.ndarray:
+    """buf: [B, E, C, d] -> [B, E, C, d] through per-expert SwiGLU.
+
+    When ``expert_ff`` is mesh-sharded (2-D expert sharding for the 400B
+    config) the batch axis must be RELEASED inside the expert compute —
+    otherwise batch and expert_ff contend for the same mesh axis and GSPMD
+    resolves it by all-gathering the (hundreds of GB) expert weights.  With
+    batch replicated here, the all-gather lands on the small token buffer
+    instead and weights stay resident-sharded.
+    """
+    from repro.distributed.sharding import current_context
+
+    ctx = current_context()
+    fsdp = ctx is not None and ctx.rules.get("expert_ff") is not None
+    bspec = None if fsdp else "batch"
+    buf = shard(buf, bspec, "experts", None, None)
+    gate = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+    up = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(buf.dtype) * up
+    h = shard(h, bspec, "experts", None, "expert_ff")
+    out = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    return shard(out, "batch", "experts", None, None)
+
+
+def moe_apply_scatter(p: Params, x: jnp.ndarray, moe: MoEConfig):
+    """x: [B, T, d] -> (y [B, T, d], aux loss).  Group = batch row."""
+    B, T, d = x.shape
+    E, k = moe.num_experts, moe.top_k
+    C = _capacity(T, moe)
+    weights, idx, aux = _route(p, x, moe)
+
+    flat_idx = idx.reshape(B, T * k)  # expert id per slot
+    onehot = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)  # [B, T*k, E]
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.sum(onehot * pos_in_e, axis=-1)  # [B, T*k]
+    keep = pos < C
+    safe_pos = jnp.where(keep, pos, 0)
+
+    tok_of_slot = jnp.arange(T * k) // k
+    x_rep = jnp.take(x, tok_of_slot, axis=1)  # [B, T*k, d]
+
+    def scatter_row(eid, p_, keep_, xr):
+        buf = jnp.zeros((E, C, d), dtype=x.dtype)
+        vals = xr * keep_[:, None].astype(x.dtype)
+        return buf.at[eid, p_].add(vals)
+
+    buf = jax.vmap(scatter_row)(flat_idx, safe_pos, keep, x_rep)  # [B, E, C, d]
+    out_buf = _expert_ffn(p, buf)
+
+    def gather_row(ob, eid, p_):
+        return ob[eid, p_]  # [T*k, d]
+
+    y_slots = jax.vmap(gather_row)(out_buf, flat_idx, safe_pos)
+    y_slots = y_slots * keep[..., None].astype(x.dtype)
+    y = jnp.sum(
+        y_slots.reshape(B, T, k, d) * weights[..., None],
+        axis=2,
+    )
+    return y, aux
+
+
+def moe_apply_dense(p: Params, x: jnp.ndarray, moe: MoEConfig):
+    """GShard one-hot-einsum dispatch oracle (small shapes only)."""
+    B, T, d = x.shape
+    E, k = moe.num_experts, moe.top_k
+    C = _capacity(T, moe)
+    weights, idx, aux = _route(p, x, moe)
+
+    flat_idx = idx.reshape(B, T * k)
+    onehot = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.sum(onehot * pos_in_e, axis=-1)
+    keep = pos < C
+    # dispatch tensor [B, T*k, E, C]
+    disp = (
+        jax.nn.one_hot(flat_idx, E, dtype=x.dtype)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, C), C + 1, dtype=x.dtype)[..., None, : C]
+    )
+    tok_of_slot = jnp.arange(T * k) // k
+    x_rep = jnp.take(x, tok_of_slot, axis=1)
+    buf = jnp.einsum("bsec,bsd->becd", disp, x_rep)
+    out_buf = _expert_ffn(p, buf)
+    y_slots = jnp.einsum("bsec,becd->bsd", disp, out_buf)
+    y = jnp.sum(y_slots.reshape(B, T, k, d) * weights[..., None], axis=2)
+    return y, aux
+
+
+def moe_apply(p: Params, x: jnp.ndarray, moe: MoEConfig):
+    if moe.dispatch == "dense":
+        y, aux = moe_apply_dense(p, x, moe)
+    else:
+        y, aux = moe_apply_scatter(p, x, moe)
+    if moe.num_shared_experts:
+        from repro.models.layers import swiglu_apply
+
+        y = y + swiglu_apply(p["shared"], x)
+    return y, aux

@@ -1,0 +1,321 @@
+"""RWKV6 "Finch" (arXiv:2404.05892) — attention-free LM with data-dependent
+per-channel decay.  Decode state is O(1) in sequence length, so NEO's KV
+offloading is inapplicable (DESIGN.md §Arch-applicability): requests run
+device-only in the engine.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.distributed import shard
+from repro.kernels.rwkv6_scan.ops import rwkv6_decode_step, rwkv6_scan
+from repro.models.layers import (
+    dense_init,
+    embed_init,
+    embed_lookup,
+    group_norm_heads,
+    logits_last,
+    rms_norm,
+    softmax_xent_sharded,
+)
+
+Params = Dict[str, Any]
+
+MAA_RANK = 32
+DECAY_RANK = 64
+
+
+class RWKV6LM:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.ssm is not None and cfg.ssm.kind == "rwkv6"
+        self.cfg = cfg
+        self.H = cfg.num_heads
+        self.N = cfg.ssm.head_dim
+        assert self.H * self.N == cfg.d_model, (self.H, self.N, cfg.d_model)
+        self.maa_rank = min(MAA_RANK, cfg.d_model // 4)
+        self.decay_rank = min(DECAY_RANK, cfg.d_model // 4)
+
+    # -- params -------------------------------------------------------------
+    def _layer_params(self, key) -> Params:
+        cfg = self.cfg
+        d, H, N, ff = cfg.d_model, self.H, self.N, cfg.d_ff
+        dtype = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 12)
+        p: Params = {
+            "ln1": jnp.ones((d,), jnp.float32),
+            "ln2": jnp.ones((d,), jnp.float32),
+            # time-mix lerp coefficients + low-rank data-dependent deltas
+            "mu_x": jnp.zeros((d,), jnp.float32),
+            "mu_5": jnp.zeros((5, d), jnp.float32),  # w, k, v, r, g
+            "maa_w1": dense_init(ks[0], (d, 5 * self.maa_rank), dtype=jnp.float32),
+            "maa_w2": dense_init(
+                ks[1], (5, self.maa_rank, d), in_axis_size=self.maa_rank, dtype=jnp.float32
+            ),
+            # decay
+            "w0": jnp.full((d,), -0.6, jnp.float32),
+            "decay_w1": dense_init(ks[2], (d, self.decay_rank), dtype=jnp.float32),
+            "decay_w2": dense_init(
+                ks[3], (self.decay_rank, d), in_axis_size=self.decay_rank, dtype=jnp.float32
+            ),
+            "u": jnp.zeros((H, N), jnp.float32),  # time_faaaa bonus
+            # projections (head-major layout so the head axis shards)
+            "wr": dense_init(ks[4], (d, H, N), in_axis_size=d, dtype=dtype),
+            "wk": dense_init(ks[5], (d, H, N), in_axis_size=d, dtype=dtype),
+            "wv": dense_init(ks[6], (d, H, N), in_axis_size=d, dtype=dtype),
+            "wg": dense_init(ks[7], (d, H, N), in_axis_size=d, dtype=dtype),
+            "wo": dense_init(ks[8], (H, N, d), in_axis_size=d, dtype=dtype),
+            "ln_x_scale": jnp.ones((H, N), jnp.float32),
+            "ln_x_bias": jnp.zeros((H, N), jnp.float32),
+            # channel-mix
+            "mu_ck": jnp.zeros((d,), jnp.float32),
+            "mu_cr": jnp.zeros((d,), jnp.float32),
+            "wck": dense_init(ks[9], (d, ff), in_axis_size=d, dtype=dtype),
+            "wcv": dense_init(ks[10], (ff, d), in_axis_size=ff, dtype=dtype),
+            "wcr": dense_init(ks[11], (d, d), in_axis_size=d, dtype=dtype),
+        }
+        return p
+
+    def _layer_axes(self) -> Params:
+        return {
+            "ln1": (None,), "ln2": (None,),
+            "mu_x": (None,), "mu_5": (None, None),
+            "maa_w1": (None, None), "maa_w2": (None, None, None),
+            "w0": (None,), "decay_w1": (None, None), "decay_w2": (None, None),
+            "u": ("heads", None),
+            "wr": (None, "heads", None), "wk": (None, "heads", None),
+            "wv": (None, "heads", None), "wg": (None, "heads", None),
+            "wo": ("heads", None, None),
+            "ln_x_scale": ("heads", None), "ln_x_bias": ("heads", None),
+            "mu_ck": (None,), "mu_cr": (None,),
+            "wck": (None, "d_ff"), "wcv": ("d_ff", None), "wcr": (None, None),
+        }
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        k0, k1, k2 = jax.random.split(rng, 3)
+        params: Params = {
+            "embed": embed_init(k0, (cfg.vocab_size, cfg.d_model), dtype),
+            "ln0": jnp.ones((cfg.d_model,), jnp.float32),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "unembed": embed_init(k1, (cfg.d_model, cfg.vocab_size), dtype),
+        }
+        lkeys = jax.random.split(k2, cfg.num_layers)
+        params["blocks"] = jax.vmap(self._layer_params)(lkeys)
+        return params
+
+    def param_specs(self) -> Params:
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    def param_logical_axes(self) -> Params:
+        ax: Params = {
+            "embed": ("vocab", None),
+            "ln0": (None,),
+            "final_norm": (None,),
+            "unembed": (None, "vocab"),
+        }
+        ax["blocks"] = jax.tree.map(
+            lambda t: (None,) + t, self._layer_axes(), is_leaf=lambda t: isinstance(t, tuple)
+        )
+        return ax
+
+    def param_count(self) -> int:
+        return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(self.param_specs()))
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+    # -- block pieces ----------------------------------------------------------
+    def _ddlerp(self, p: Params, x, sx):
+        """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+        xxx = x + sx * p["mu_x"].astype(x.dtype)
+        r1 = jnp.tanh(jnp.einsum("...d,dr->...r", xxx.astype(jnp.float32), p["maa_w1"]))
+        r1 = r1.reshape(r1.shape[:-1] + (5, self.maa_rank))
+        deltas = jnp.einsum("...fr,frd->...fd", r1, p["maa_w2"])  # [..., 5, d]
+        mixed = []
+        for i in range(5):
+            mu = p["mu_5"][i] + deltas[..., i, :]
+            mixed.append(x + sx * mu.astype(x.dtype))
+        return mixed  # xw, xk, xv, xr, xg
+
+    def _decay(self, p: Params, xw):
+        ww = p["w0"] + jnp.einsum(
+            "...d,dr,re->...e", xw.astype(jnp.float32), p["decay_w1"], p["decay_w2"]
+        )
+        return jnp.exp(-jnp.exp(ww))  # (0, 1), per channel
+
+    def _time_mix_seq(self, p: Params, x, state0, x_prev0, impl: str):
+        """x: [B,T,d]; returns (out [B,T,d], stateT, last_x)."""
+        B, T, d = x.shape
+        H, N = self.H, self.N
+        prev = jnp.concatenate([x_prev0[:, None, :], x[:, :-1]], axis=1)
+        sx = prev - x
+        xw, xk, xv, xr, xg = self._ddlerp(p, x, sx)
+        r = jnp.einsum("btd,dhn->bthn", xr, p["wr"])
+        k = jnp.einsum("btd,dhn->bthn", xk, p["wk"])
+        v = jnp.einsum("btd,dhn->bthn", xv, p["wv"])
+        g = jax.nn.silu(jnp.einsum("btd,dhn->bthn", xg, p["wg"]).astype(jnp.float32)).astype(x.dtype)
+        w = self._decay(p, xw).reshape(B, T, H, N).astype(jnp.float32)
+        r = shard(r, "batch", None, "heads", None)
+        k = shard(k, "batch", None, "heads", None)
+        v = shard(v, "batch", None, "heads", None)
+        y, stateT = rwkv6_scan(r, k, v, w, p["u"], state0, impl=impl)
+        y = group_norm_heads(y, p["ln_x_scale"], p["ln_x_bias"])
+        out = jnp.einsum("bthn,hnd->btd", y * g, p["wo"])
+        return out, stateT, x[:, -1]
+
+    def _time_mix_step(self, p: Params, x, state, x_prev):
+        """x: [B,d] single token."""
+        B, d = x.shape
+        H, N = self.H, self.N
+        sx = x_prev - x
+        xw, xk, xv, xr, xg = self._ddlerp(p, x, sx)
+        r = jnp.einsum("bd,dhn->bhn", xr, p["wr"])
+        k = jnp.einsum("bd,dhn->bhn", xk, p["wk"])
+        v = jnp.einsum("bd,dhn->bhn", xv, p["wv"])
+        g = jax.nn.silu(jnp.einsum("bd,dhn->bhn", xg, p["wg"]).astype(jnp.float32)).astype(x.dtype)
+        w = self._decay(p, xw).reshape(B, H, N).astype(jnp.float32)
+        y, state = rwkv6_decode_step(r, k, v, w, p["u"], state)
+        y = group_norm_heads(y, p["ln_x_scale"], p["ln_x_bias"])
+        out = jnp.einsum("bhn,hnd->bd", y * g, p["wo"])
+        return out, state, x
+
+    def _channel_mix_seq(self, p: Params, x, x_prev0):
+        prev = jnp.concatenate([x_prev0[:, None, :], x[:, :-1]], axis=1)
+        sx = prev - x
+        xk = x + sx * p["mu_ck"].astype(x.dtype)
+        xr = x + sx * p["mu_cr"].astype(x.dtype)
+        k = jnp.einsum("...d,df->...f", xk, p["wck"])
+        k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+        k = shard(k, "batch", None, "d_ff")
+        kv = jnp.einsum("...f,fd->...d", k, p["wcv"])
+        rgate = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xr, p["wcr"]).astype(jnp.float32))
+        return (rgate * kv.astype(jnp.float32)).astype(x.dtype), x[:, -1]
+
+    def _channel_mix_step(self, p: Params, x, x_prev):
+        sx = x_prev - x
+        xk = x + sx * p["mu_ck"].astype(x.dtype)
+        xr = x + sx * p["mu_cr"].astype(x.dtype)
+        k = jnp.einsum("bd,df->bf", xk, p["wck"])
+        k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+        kv = jnp.einsum("bf,fd->bd", k, p["wcv"])
+        rgate = jax.nn.sigmoid(jnp.einsum("bd,de->be", xr, p["wcr"]).astype(jnp.float32))
+        return (rgate * kv.astype(jnp.float32)).astype(x.dtype), x
+
+    # -- full-sequence forward ---------------------------------------------------
+    def _forward_seq(self, params: Params, tokens, state=None, impl: str = "scan"):
+        """Returns (hidden [B,T,d], new_state)."""
+        cfg = self.cfg
+        B, T = tokens.shape
+        H, N = self.H, self.N
+        x = embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
+        x = rms_norm(x, params["ln0"], cfg.rms_eps)
+        x = shard(x, "batch", None, None)
+        if state is None:
+            state = self.init_cache(B, 0)
+
+        def body(carry, scanned):
+            x, = carry
+            p, s0, tm_prev, cm_prev = scanned
+            h = rms_norm(x, p["ln1"], cfg.rms_eps)
+            o, sT, tm_last = self._time_mix_seq(p, h, s0, tm_prev, impl)
+            x = x + o
+            h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+            m, cm_last = self._channel_mix_seq(p, h2, cm_prev)
+            x = x + m
+            x = shard(x, "batch", None, None)
+            return (x,), (sT, tm_last, cm_last)
+
+        from repro.models.layers import maybe_remat
+
+        (x,), (stateT, tm_last, cm_last) = jax.lax.scan(
+            maybe_remat(body, cfg.remat_policy),
+            (x,), (params["blocks"], state["state"], state["tm_prev"], state["cm_prev"])
+        )
+        new_state = {
+            "state": stateT,
+            "tm_prev": tm_last,
+            "cm_prev": cm_last,
+            "lens": state["lens"] + T,
+        }
+        return x, new_state
+
+    # -- public API ---------------------------------------------------------------
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        cfg = self.cfg
+        x, _ = self._forward_seq(params, batch["tokens"])
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        xent, _ = softmax_xent_sharded(
+            x, params["unembed"], batch["targets"], batch["loss_mask"]
+        )
+        return xent, {"xent": xent, "aux": jnp.float32(0.0)}
+
+    def cache_shape(self, batch: int, capacity: int):
+        cfg = self.cfg
+        L, H, N, d = cfg.num_layers, self.H, self.N, cfg.d_model
+        return {
+            "state": ((L, batch, H, N, N), "float32", ("layers", "batch", "heads", None, None)),
+            "tm_prev": ((L, batch, d), cfg.activation_dtype, ("layers", "batch", None)),
+            "cm_prev": ((L, batch, d), cfg.activation_dtype, ("layers", "batch", None)),
+            "lens": ((batch,), "int32", ("batch",)),
+        }
+
+    def init_cache(self, batch: int, capacity: int):
+        return {
+            name: jnp.zeros(shp, dtype=dt)
+            for name, (shp, dt, _) in self.cache_shape(batch, capacity).items()
+        }
+
+    def prefill(self, params: Params, tokens, *, capacity: Optional[int] = None, patch_embeds=None):
+        cfg = self.cfg
+        x, state = self._forward_seq(params, tokens)
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = logits_last(x[:, -1], params["unembed"])
+        return logits, state
+
+    def decode(self, params: Params, tokens, cache, *, window: int = 0):
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
+        x = rms_norm(x, params["ln0"], cfg.rms_eps)
+        x = shard(x, "batch", None)
+
+        def body(x, scanned):
+            p, s0, tm_prev, cm_prev = scanned
+            h = rms_norm(x, p["ln1"], cfg.rms_eps)
+            o, sT, tm_last = self._time_mix_step(p, h, s0, tm_prev)
+            x = x + o
+            h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+            m, cm_last = self._channel_mix_step(p, h2, cm_prev)
+            x = x + m
+            return x, (sT, tm_last, cm_last)
+
+        x, (stateT, tm_last, cm_last) = jax.lax.scan(
+            body, x, (params["blocks"], cache["state"], cache["tm_prev"], cache["cm_prev"])
+        )
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = logits_last(x, params["unembed"])
+        new_cache = {
+            "state": stateT,
+            "tm_prev": tm_last,
+            "cm_prev": cm_last,
+            "lens": cache["lens"] + 1,
+        }
+        return logits, new_cache
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Tuple]:
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {
+                "tokens": ((B, S), "int32", ("batch", None)),
+                "targets": ((B, S), "int32", ("batch", None)),
+                "loss_mask": ((B, S), "float32", ("batch", None)),
+            }
+        if shape.kind == "prefill":
+            return {"tokens": ((B, S), "int32", ("batch", None))}
+        return {"tokens": ((B,), "int32", ("batch",))}

@@ -1,0 +1,633 @@
+"""Generic decoder-only LM covering the dense / MoE / VLM families
+(qwen3-*, yi-9b, deepseek-moe-16b, llama4-maverick, internvl2-1b).
+
+Layers are grouped into a repeating *pattern* (e.g. deepseek = 1 dense prefix
+layer + 27 MoE layers; llama4 = 24 × [moe, dense]) and scanned with stacked
+parameters so the HLO stays small for the 512-device dry-run.
+
+Three entry points per model: ``loss`` (train), ``prefill`` and ``decode``
+(serve).  The decode KV layout is per-arch (see ``ArchConfig.kv_shard_mode``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.distributed import shard
+from repro.distributed.sharding import current_context
+from repro.models import attention as attn_lib
+from repro.models.layers import (
+    dense_init,
+    embed_init,
+    embed_lookup,
+    logits_last,
+    rms_norm,
+    softmax_xent_sharded,
+    swiglu_apply,
+    swiglu_logical_axes,
+    swiglu_params,
+)
+from repro.models.moe import moe_apply, moe_logical_axes, moe_params
+from repro.models.layers import apply_rope
+
+Params = Dict[str, Any]
+AUX_LOSS_WEIGHT = 1e-2
+
+
+# ---------------------------------------------------------------------------
+# Attention block parameter helpers (shared with encdec / zamba2)
+# ---------------------------------------------------------------------------
+
+
+def attn_params(key, cfg: ArchConfig, dtype) -> Params:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], (d, H, hd), in_axis_size=d, dtype=dtype),
+        "wk": dense_init(ks[1], (d, KV, hd), in_axis_size=d, dtype=dtype),
+        "wv": dense_init(ks[2], (d, KV, hd), in_axis_size=d, dtype=dtype),
+        "wo": dense_init(ks[3], (H, hd, d), in_axis_size=H * hd, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype=jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), dtype=jnp.float32)
+    return p
+
+
+def attn_logical_axes(cfg: ArchConfig) -> Dict[str, Tuple]:
+    ax = {
+        "wq": (None, "heads", None),
+        "wk": (None, "kv_heads", None),
+        "wv": (None, "kv_heads", None),
+        "wo": ("heads", None, None),
+    }
+    if cfg.qk_norm:
+        ax["q_norm"] = (None,)
+        ax["k_norm"] = (None,)
+    return ax
+
+
+def project_qkv(p: Params, cfg: ArchConfig, h: jnp.ndarray, positions: jnp.ndarray):
+    """h: [B, S, d]; positions: [B, S] or [S].  Returns roped q, k and v."""
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    from repro.models.layers import tag_sp_gathered
+
+    q, k, v = tag_sp_gathered(q, k, v)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_full(p: Params, cfg: ArchConfig, x: jnp.ndarray, *, causal: bool = True,
+              window: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence attention (train/prefill). x: [B, S, d] normalised input.
+
+    Returns (out [B,S,d], k [B,S,KV,hd], v [B,S,KV,hd]) — roped K for caching.
+    """
+    B, S, _ = x.shape
+    q, k, v = project_qkv(p, cfg, x, jnp.arange(S))
+    if current_context() is not None and cfg.num_heads % max(1, _model_axis()) == 0:
+        q = shard(q, "batch", None, "heads", None)
+    o = attn_lib.chunked_attention(q, k, v, causal=causal, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, k, v
+
+
+def _model_axis() -> int:
+    ctx = current_context()
+    return ctx.mesh.shape.get("model", 1) if ctx else 1
+
+
+def attn_decode(
+    p: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # [B, d] normalised input
+    k_cache: jnp.ndarray,  # [B, S, KV, hd]
+    v_cache: jnp.ndarray,
+    lens: jnp.ndarray,  # [B]
+    *,
+    window: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step. Returns (out [B,d], k_cache, v_cache)."""
+    q, k, v = project_qkv(p, cfg, x[:, None, :], lens[:, None])
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]  # [B,H,hd], [B,KV,hd]
+    use_blocksharded = (
+        cfg.kv_shard_mode == "blocks"
+        and current_context() is not None
+        and "model" in current_context().mesh.axis_names
+    )
+    if use_blocksharded:
+        o, k_cache, v_cache = attn_lib.decode_attention_blocksharded(
+            q, k_cache, v_cache, k, v, lens, window=window
+        )
+    else:
+        k_cache, v_cache = attn_lib.write_kv(k_cache, v_cache, k, v, lens)
+        o = attn_lib.decode_attention(q, k_cache, v_cache, lens + 1, window=window)
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"])
+    return out, k_cache, v_cache
+
+
+def quantize_kv(k: jnp.ndarray, v: jnp.ndarray):
+    """[..., KV, hd] -> int8 values + per-(position, head) f32 scales."""
+    ks = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    vs = jnp.max(jnp.abs(v.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    kq = jnp.clip(jnp.round(k.astype(jnp.float32) / ks[..., None]), -127, 127).astype(jnp.int8)
+    vq = jnp.clip(jnp.round(v.astype(jnp.float32) / vs[..., None]), -127, 127).astype(jnp.int8)
+    return kq, vq, ks, vs
+
+
+def attn_decode_int8(p: Params, cfg: ArchConfig, x: jnp.ndarray, cache_slice,
+                     lens, *, window: int = 0):
+    """Decode step over an int8-quantised KV cache (§Perf "int8-kv").
+
+    Dequantisation is elementwise on the cache slice, so XLA fuses it into
+    the attention contractions — HBM reads stay 1 byte/element (+4/hd scale).
+    """
+    kc, vc, ks, vs = cache_slice  # int8 [B,S,KV,hd], f32 [B,S,KV]
+    q, k, v = project_qkv(p, cfg, x[:, None, :], lens[:, None])
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]
+    kq, vq, ks_new, vs_new = quantize_kv(k, v)
+    B, S = kc.shape[:2]
+    bidx = jnp.arange(B)
+    pos = jnp.clip(lens, 0, S - 1)
+    kc = kc.at[bidx, pos].set(kq)
+    vc = vc.at[bidx, pos].set(vq)
+    ks = ks.at[bidx, pos].set(ks_new)
+    vs = vs.at[bidx, pos].set(vs_new)
+    adt = cfg.activation_dtype
+    k_deq = kc.astype(adt) * ks[..., None].astype(adt)
+    v_deq = vc.astype(adt) * vs[..., None].astype(adt)
+    o = attn_lib.decode_attention(q, k_deq, v_deq, lens + 1, window=window)
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"])
+    return out, (kc, vc, ks, vs)
+
+
+# ---------------------------------------------------------------------------
+# DenseLM
+# ---------------------------------------------------------------------------
+
+
+class DenseLM:
+    """Decoder-only LM; covers families dense / moe / vlm."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.prefix_kinds, self.repeat_kinds, self.n_groups = self._pattern()
+        assert (
+            len(self.prefix_kinds) + len(self.repeat_kinds) * self.n_groups
+            == cfg.num_layers
+        )
+
+    # -- layer pattern -----------------------------------------------------
+    def _pattern(self) -> Tuple[List[str], List[str], int]:
+        cfg = self.cfg
+        if cfg.moe is None:
+            return [], ["dense"], cfg.num_layers
+        moe = cfg.moe
+        prefix = ["dense0"] * moe.first_dense_layers
+        rem = cfg.num_layers - moe.first_dense_layers
+        if moe.interleave == 1:
+            return prefix, ["moe"], rem
+        if rem % moe.interleave != 0:
+            raise ValueError("num_layers incompatible with moe.interleave")
+        pat = ["moe"] + ["dense"] * (moe.interleave - 1)
+        return prefix, pat, rem // moe.interleave
+
+    @property
+    def num_attn_layers(self) -> int:
+        return self.cfg.num_layers
+
+    # -- params ------------------------------------------------------------
+    def _mlp_width(self, kind: str) -> int:
+        cfg = self.cfg
+        if kind == "dense0":
+            return cfg.moe.first_dense_d_ff if cfg.moe else cfg.d_ff
+        return cfg.d_ff
+
+    def _layer_params(self, key, kind: str) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        k_attn, k_mlp = jax.random.split(key)
+        p: Params = {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": attn_params(k_attn, cfg, dtype),
+        }
+        if kind == "moe":
+            p["moe"] = moe_params(k_mlp, cfg.d_model, cfg.moe, dtype)
+        else:
+            p["mlp"] = swiglu_params(k_mlp, cfg.d_model, self._mlp_width(kind), dtype)
+        return p
+
+    def _layer_axes(self, kind: str) -> Params:
+        cfg = self.cfg
+        ax: Params = {
+            "ln1": (None,),
+            "ln2": (None,),
+            "attn": attn_logical_axes(cfg),
+        }
+        if kind == "moe":
+            ax["moe"] = moe_logical_axes(cfg.moe)
+        else:
+            ax["mlp"] = swiglu_logical_axes()
+        return ax
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        keys = jax.random.split(rng, 3 + len(self.prefix_kinds))
+        params: Params = {
+            "embed": embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = embed_init(keys[1], (cfg.d_model, cfg.vocab_size), dtype)
+        for i, kind in enumerate(self.prefix_kinds):
+            params[f"prefix{i}"] = self._layer_params(keys[3 + i], kind)
+
+        def group_init(key):
+            gkeys = jax.random.split(key, len(self.repeat_kinds))
+            return {
+                f"sub{j}": self._layer_params(gkeys[j], kind)
+                for j, kind in enumerate(self.repeat_kinds)
+            }
+
+        gkeys = jax.random.split(keys[2], self.n_groups)
+        params["blocks"] = jax.vmap(group_init)(gkeys)
+        return params
+
+    def param_specs(self) -> Params:
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    def param_logical_axes(self) -> Params:
+        cfg = self.cfg
+        ax: Params = {"embed": ("vocab", None), "final_norm": (None,)}
+        if not cfg.tie_embeddings:
+            ax["unembed"] = (None, "vocab")
+        for i, kind in enumerate(self.prefix_kinds):
+            ax[f"prefix{i}"] = self._layer_axes(kind)
+        group_ax = {
+            f"sub{j}": self._layer_axes(kind)
+            for j, kind in enumerate(self.repeat_kinds)
+        }
+        # Stacked along a leading (unsharded) layer axis.
+        ax["blocks"] = jax.tree.map(
+            lambda t: (None,) + t, group_ax, is_leaf=lambda t: isinstance(t, tuple)
+        )
+        return ax
+
+    def param_count(self) -> int:
+        return sum(
+            int(math.prod(x.shape)) for x in jax.tree.leaves(self.param_specs())
+        )
+
+    def active_param_count(self) -> int:
+        cfg = self.cfg
+        if cfg.moe is None:
+            return self.param_count()
+        total = 0
+        specs = self.param_specs()
+        moe = cfg.moe
+        for path, leaf in jax.tree_util.tree_flatten_with_path(specs)[0]:
+            names = [getattr(k, "key", str(k)) for k in path]
+            n = int(math.prod(leaf.shape))
+            if any(x in ("w_gate", "w_up", "w_down") for x in names) and "moe" in names and "shared" not in names:
+                n = n * moe.top_k // moe.num_experts
+            total += n
+        return total
+
+    # -- core blocks ---------------------------------------------------------
+    def _mlp_apply(self, p: Params, kind: str, x: jnp.ndarray):
+        if kind == "moe":
+            return moe_apply(p["moe"], x, self.cfg.moe)
+        return swiglu_apply(p["mlp"], x), jnp.float32(0.0)
+
+    def _layer_full(self, p: Params, kind: str, x: jnp.ndarray, *, collect_kv: bool):
+        cfg = self.cfg
+        h = rms_norm(x, p["ln1"], cfg.rms_eps)
+        o, k, v = attn_full(p["attn"], cfg, h)
+        x = x + o
+        x = shard(x, "batch", "seq", None)
+        h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+        m, aux = self._mlp_apply(p, kind, h2)
+        x = x + m
+        x = shard(x, "batch", "seq", None)
+        if collect_kv:
+            return x, aux, (k, v)
+        return x, aux, None
+
+    def _layer_decode(self, p: Params, kind: str, x, kc, vc, lens, window: int):
+        cfg = self.cfg
+        h = rms_norm(x, p["ln1"], cfg.rms_eps)
+        o, kc, vc = attn_decode(p["attn"], cfg, h, kc, vc, lens, window=window)
+        x = x + o
+        h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+        m, _ = self._mlp_apply(p, kind, h2[:, None, :])
+        x = x + m[:, 0]
+        return x, kc, vc
+
+    def _remat(self, fn):
+        from repro.models.layers import maybe_remat
+
+        return maybe_remat(fn, self.cfg.remat_policy)
+
+    # -- embedding helpers ---------------------------------------------------
+    def _embed_tokens(self, params, tokens, patch_embeds=None):
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
+        if (
+            cfg.modality is not None
+            and cfg.modality.num_embeds
+            and patch_embeds is not None
+        ):
+            P_ = cfg.modality.num_embeds
+            pe = patch_embeds.astype(cfg.activation_dtype)
+            if tokens.ndim == 2 and tokens.shape[1] >= P_:
+                x = jnp.concatenate([pe, x[:, P_:]], axis=1)
+        return shard(x, "batch", "seq", None)
+
+    def _unembed(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["unembed"]
+
+    # -- train ---------------------------------------------------------------
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        cfg = self.cfg
+        x = self._embed_tokens(params, batch["tokens"], batch.get("patch_embeds"))
+        aux_total = jnp.float32(0.0)
+        for i, kind in enumerate(self.prefix_kinds):
+            x, aux, _ = self._layer_full(params[f"prefix{i}"], kind, x, collect_kv=False)
+            aux_total += aux
+
+        def group_body(carry, gp):
+            x, aux_acc = carry
+            for j, kind in enumerate(self.repeat_kinds):
+                x, aux, _ = self._layer_full(gp[f"sub{j}"], kind, x, collect_kv=False)
+                aux_acc += aux
+            return (x, aux_acc), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            self._remat(group_body), (x, aux_total), params["blocks"]
+        )
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        xent, _ = softmax_xent_sharded(
+            x, self._unembed(params), batch["targets"], batch["loss_mask"]
+        )
+        loss = xent + AUX_LOSS_WEIGHT * aux_total / max(cfg.num_layers, 1)
+        return loss, {"xent": xent, "aux": aux_total}
+
+    # -- serve: cache --------------------------------------------------------
+    def cache_shape(self, batch: int, capacity: int):
+        cfg = self.cfg
+        L = self.num_attn_layers
+        kv = (L, batch, capacity, cfg.num_kv_heads, cfg.head_dim)
+        if cfg.kv_cache_dtype == "int8":
+            sc = (L, batch, capacity, cfg.num_kv_heads)
+            return {
+                "k": (kv, "int8", ("layers", "batch", "kv_seq", "kv_heads", None)),
+                "v": (kv, "int8", ("layers", "batch", "kv_seq", "kv_heads", None)),
+                "k_scale": (sc, "float32", ("layers", "batch", "kv_seq", "kv_heads")),
+                "v_scale": (sc, "float32", ("layers", "batch", "kv_seq", "kv_heads")),
+                "lens": ((batch,), "int32", ("batch",)),
+            }
+        return {
+            "k": (kv, cfg.activation_dtype, ("layers", "batch", "kv_seq", "kv_heads", None)),
+            "v": (kv, cfg.activation_dtype, ("layers", "batch", "kv_seq", "kv_heads", None)),
+            "lens": ((batch,), "int32", ("batch",)),
+        }
+
+    def init_cache(self, batch: int, capacity: int):
+        shapes = self.cache_shape(batch, capacity)
+        return {
+            name: jnp.zeros(shp, dtype=dt)
+            for name, (shp, dt, _) in shapes.items()
+        }
+
+    def _split_cache(self, cache):
+        """prefix slices + grouped slices [n_groups, per_group, ...]."""
+        P_ = len(self.prefix_kinds)
+        r = len(self.repeat_kinds)
+        pre_k, pre_v = cache["k"][:P_], cache["v"][:P_]
+        g_k = cache["k"][P_:].reshape((self.n_groups, r) + cache["k"].shape[1:])
+        g_v = cache["v"][P_:].reshape((self.n_groups, r) + cache["v"].shape[1:])
+        return pre_k, pre_v, g_k, g_v
+
+    def _join_cache(self, pre_k, pre_v, g_k, g_v, lens):
+        flat_k = g_k.reshape((-1,) + g_k.shape[2:])
+        flat_v = g_v.reshape((-1,) + g_v.shape[2:])
+        return {
+            "k": jnp.concatenate([pre_k, flat_k], axis=0),
+            "v": jnp.concatenate([pre_v, flat_v], axis=0),
+            "lens": lens,
+        }
+
+    # -- serve: prefill --------------------------------------------------------
+    def prefill(self, params: Params, tokens: jnp.ndarray, *, capacity: Optional[int] = None,
+                patch_embeds=None, true_lens: Optional[jnp.ndarray] = None):
+        """tokens: [B, S] -> (next-token logits [B, V], cache).
+
+        ``true_lens`` ([B] int32) marks the unpadded prompt length per row when
+        the engine packs prompts into a padded length bucket: logits are taken
+        at position ``true_lens - 1`` and the cache lens reflect it.  Padding
+        must be a suffix (causal attention keeps valid positions exact).
+        """
+        cfg = self.cfg
+        B, S = tokens.shape
+        capacity = capacity or S
+        x = self._embed_tokens(params, tokens, patch_embeds)
+
+        kvs: List[Tuple[jnp.ndarray, jnp.ndarray]] = []
+        for i, kind in enumerate(self.prefix_kinds):
+            x, _, kv = self._layer_full(params[f"prefix{i}"], kind, x, collect_kv=True)
+            kvs.append(kv)
+
+        def group_body(x, gp):
+            ks, vs = [], []
+            for j, kind in enumerate(self.repeat_kinds):
+                x, _, (k, v) = self._layer_full(gp[f"sub{j}"], kind, x, collect_kv=True)
+                ks.append(k)
+                vs.append(v)
+            return x, (jnp.stack(ks), jnp.stack(vs))
+
+        x, (g_k, g_v) = jax.lax.scan(group_body, x, params["blocks"])
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        if true_lens is None:
+            last_h = x[:, -1]
+        else:
+            last_h = x[jnp.arange(B), jnp.clip(true_lens - 1, 0, S - 1)]
+        logits = logits_last(last_h, self._unembed(params))
+
+        pre_k = (
+            jnp.stack([kv[0] for kv in kvs])
+            if kvs
+            else jnp.zeros((0, B, S, cfg.num_kv_heads, cfg.head_dim), cfg.activation_dtype)
+        )
+        pre_v = (
+            jnp.stack([kv[1] for kv in kvs])
+            if kvs
+            else pre_k
+        )
+        k_all = jnp.concatenate([pre_k, g_k.reshape((-1,) + g_k.shape[2:])], axis=0)
+        v_all = jnp.concatenate([pre_v, g_v.reshape((-1,) + g_v.shape[2:])], axis=0)
+        if capacity > S:
+            pad = [(0, 0), (0, 0), (0, capacity - S), (0, 0), (0, 0)]
+            k_all = jnp.pad(k_all, pad)
+            v_all = jnp.pad(v_all, pad)
+        lens_out = (
+            jnp.full((B,), S, jnp.int32)
+            if true_lens is None
+            else true_lens.astype(jnp.int32)
+        )
+        if cfg.kv_cache_dtype == "int8":
+            kq, vq, ks, vs = quantize_kv(k_all, v_all)
+            cache = {
+                "k": shard(kq, "layers", "batch", "kv_seq", "kv_heads", None),
+                "v": shard(vq, "layers", "batch", "kv_seq", "kv_heads", None),
+                "k_scale": shard(ks, "layers", "batch", "kv_seq", "kv_heads"),
+                "v_scale": shard(vs, "layers", "batch", "kv_seq", "kv_heads"),
+                "lens": lens_out,
+            }
+            return logits, cache
+        cache = {
+            "k": shard(k_all, "layers", "batch", "kv_seq", "kv_heads", None),
+            "v": shard(v_all, "layers", "batch", "kv_seq", "kv_heads", None),
+            "lens": lens_out,
+        }
+        return logits, cache
+
+    # -- serve: decode (int8 KV variant; §Perf "int8-kv") -----------------------
+    def _decode_int8(self, params: Params, tokens: jnp.ndarray, cache, *, window: int = 0):
+        cfg = self.cfg
+        lens = cache["lens"]
+        x = embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
+        P_ = len(self.prefix_kinds)
+        r = len(self.repeat_kinds)
+
+        def split(a):
+            return a[:P_], a[P_:].reshape((self.n_groups, r) + a.shape[1:])
+
+        pre, grp = zip(*(split(cache[n]) for n in ("k", "v", "k_scale", "v_scale")))
+        new_pre = []
+        for i, kind in enumerate(self.prefix_kinds):
+            p = params[f"prefix{i}"]
+            h = rms_norm(x, p["ln1"], cfg.rms_eps)
+            o, cs = attn_decode_int8(p["attn"], cfg, h,
+                                     tuple(a[i] for a in pre), lens, window=window)
+            new_pre.append(cs)
+            x = x + o
+            h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+            m, _ = self._mlp_apply(p, kind, h2[:, None, :])
+            x = x + m[:, 0]
+
+        def group_body(x, scanned):
+            gp, gk, gv, gks, gvs = scanned
+            outs = []
+            for j, kind in enumerate(self.repeat_kinds):
+                p = gp[f"sub{j}"]
+                h = rms_norm(x, p["ln1"], cfg.rms_eps)
+                o, cs = attn_decode_int8(p["attn"], cfg, h,
+                                         (gk[j], gv[j], gks[j], gvs[j]), lens,
+                                         window=window)
+                outs.append(cs)
+                x = x + o
+                h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+                m, _ = self._mlp_apply(p, kind, h2[:, None, :])
+                x = x + m[:, 0]
+            stk = tuple(jnp.stack([o[t] for o in outs]) for t in range(4))
+            return x, stk
+
+        x, (g_k, g_v, g_ks, g_vs) = jax.lax.scan(
+            group_body, x, (params["blocks"],) + grp)
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = logits_last(x, self._unembed(params))
+
+        def join(pre_arrs, g):
+            flat = g.reshape((-1,) + g.shape[2:])
+            if P_:
+                return jnp.concatenate([jnp.stack(pre_arrs), flat], axis=0)
+            return flat
+
+        cache = {
+            "k": join([c[0] for c in new_pre], g_k),
+            "v": join([c[1] for c in new_pre], g_v),
+            "k_scale": join([c[2] for c in new_pre], g_ks),
+            "v_scale": join([c[3] for c in new_pre], g_vs),
+            "lens": lens + 1,
+        }
+        return logits, cache
+
+    # -- serve: decode ----------------------------------------------------------
+    def decode(self, params: Params, tokens: jnp.ndarray, cache, *, window: int = 0):
+        """tokens: [B] -> (logits [B, V], cache). One token per sequence."""
+        cfg = self.cfg
+        if cfg.kv_cache_dtype == "int8":
+            return self._decode_int8(params, tokens, cache, window=window)
+        lens = cache["lens"]
+        x = embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
+        x = shard(x, "batch", None)
+
+        pre_k, pre_v, g_k, g_v = self._split_cache(cache)
+        new_pre_k, new_pre_v = [], []
+        for i, kind in enumerate(self.prefix_kinds):
+            x, kc, vc = self._layer_decode(
+                params[f"prefix{i}"], kind, x, pre_k[i], pre_v[i], lens, window
+            )
+            new_pre_k.append(kc)
+            new_pre_v.append(vc)
+
+        def group_body(x, scanned):
+            gp, gk, gv = scanned
+            nk, nv = [], []
+            for j, kind in enumerate(self.repeat_kinds):
+                x, kc, vc = self._layer_decode(gp[f"sub{j}"], kind, x, gk[j], gv[j], lens, window)
+                nk.append(kc)
+                nv.append(vc)
+            return x, (jnp.stack(nk), jnp.stack(nv))
+
+        x, (g_k, g_v) = jax.lax.scan(group_body, x, (params["blocks"], g_k, g_v))
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = logits_last(x, self._unembed(params))
+
+        pre_k = jnp.stack(new_pre_k) if new_pre_k else pre_k
+        pre_v = jnp.stack(new_pre_v) if new_pre_v else pre_v
+        cache = self._join_cache(pre_k, pre_v, g_k, g_v, lens + 1)
+        return logits, cache
+
+    # -- specs for the dry-run ---------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Tuple]:
+        """name -> (shape, dtype, logical axes)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        specs: Dict[str, Tuple] = {}
+        if shape.kind == "train":
+            specs["tokens"] = ((B, S), "int32", ("batch", None))
+            specs["targets"] = ((B, S), "int32", ("batch", None))
+            specs["loss_mask"] = ((B, S), "float32", ("batch", None))
+        elif shape.kind == "prefill":
+            specs["tokens"] = ((B, S), "int32", ("batch", None))
+        else:  # decode
+            specs["tokens"] = ((B,), "int32", ("batch",))
+        if (
+            cfg.modality is not None
+            and cfg.modality.num_embeds
+            and shape.kind in ("train", "prefill")
+        ):
+            specs["patch_embeds"] = (
+                (B, cfg.modality.num_embeds, cfg.d_model),
+                cfg.activation_dtype,
+                ("batch", None, None),
+            )
+        return specs

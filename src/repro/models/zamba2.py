@@ -1,0 +1,335 @@
+"""Zamba2 hybrid (arXiv:2411.15242): Mamba2 trunk + a *shared* full-attention
+transformer block applied every ``shared_attn_every`` Mamba blocks, fed with
+concat(hidden, original-embedding) as in the paper.
+
+81 blocks = 13 full groups of (shared-attn + 6 mamba) + tail (shared-attn +
+3 mamba) → 14 shared-attention applications, each with its own KV cache.
+
+Long-context (``long_500k``): shared-attention KV uses a sliding-window ring
+buffer of ``cfg.long_context_window`` tokens (RoPE applied at write time with
+absolute positions, so the rotated slot order is harmless — softmax is
+permutation-invariant).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.distributed import shard
+from repro.models import attention as attn_lib
+from repro.models.layers import (
+    dense_init,
+    embed_init,
+    embed_lookup,
+    logits_last,
+    rms_norm,
+    softmax_xent_sharded,
+    swiglu_apply,
+    swiglu_logical_axes,
+    swiglu_params,
+)
+from repro.models.mamba2 import Mamba2Block
+from repro.models.transformer import attn_full, attn_logical_axes, attn_params, project_qkv
+
+Params = Dict[str, Any]
+
+
+class Zamba2LM:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.ssm is not None and cfg.ssm.kind == "mamba2"
+        assert cfg.shared_attn_every > 0
+        self.cfg = cfg
+        self.mamba = Mamba2Block(cfg)
+        every = cfg.shared_attn_every
+        self.n_groups = cfg.num_layers // every
+        self.tail = cfg.num_layers - self.n_groups * every
+        self.per_group = every
+        # one shared-attn application per group (+ one before the tail if any)
+        self.n_attn_apps = self.n_groups + (1 if self.tail else 0)
+
+    # -- params -------------------------------------------------------------
+    def _shared_params(self, key) -> Params:
+        cfg = self.cfg
+        d = cfg.d_model
+        dtype = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 4)
+        return {
+            "ln_in": jnp.ones((2 * d,), jnp.float32),
+            "w_in": dense_init(ks[0], (2 * d, d), in_axis_size=2 * d, dtype=dtype),
+            "ln1": jnp.ones((d,), jnp.float32),
+            "attn": attn_params(ks[1], cfg, dtype),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "mlp": swiglu_params(ks[2], d, cfg.d_ff, dtype),
+            "w_out": dense_init(ks[3], (d, d), in_axis_size=d, dtype=dtype),
+        }
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(rng, 5)
+        params: Params = {
+            "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "unembed": embed_init(ks[1], (cfg.d_model, cfg.vocab_size), dtype),
+            "shared": self._shared_params(ks[2]),
+        }
+        if self.n_groups:
+            gkeys = jax.random.split(ks[3], (self.n_groups, self.per_group))
+            params["mamba_groups"] = jax.vmap(jax.vmap(lambda k: self.mamba.init(k)))(gkeys)
+        if self.tail:
+            tkeys = jax.random.split(ks[4], self.tail)
+            params["mamba_tail"] = jax.vmap(lambda k: self.mamba.init(k))(tkeys)
+        return params
+
+    def param_specs(self) -> Params:
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    def param_logical_axes(self) -> Params:
+        cfg = self.cfg
+        shared_ax = {
+            "ln_in": (None,), "w_in": (None, None),
+            "ln1": (None,), "attn": attn_logical_axes(cfg),
+            "ln2": (None,), "mlp": swiglu_logical_axes(),
+            "w_out": (None, None),
+        }
+        ax: Params = {
+            "embed": ("vocab", None),
+            "final_norm": (None,),
+            "unembed": (None, "vocab"),
+            "shared": shared_ax,
+        }
+        m_ax = self.mamba.logical_axes()
+        as_tuple = lambda t: isinstance(t, tuple)
+        if self.n_groups:
+            ax["mamba_groups"] = jax.tree.map(lambda t: (None, None) + t, m_ax, is_leaf=as_tuple)
+        if self.tail:
+            ax["mamba_tail"] = jax.tree.map(lambda t: (None,) + t, m_ax, is_leaf=as_tuple)
+        return ax
+
+    def param_count(self) -> int:
+        return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(self.param_specs()))
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+    # -- shared attention block ------------------------------------------------
+    def _shared_attn_seq(self, sp: Params, x, x0, *, window: int):
+        cfg = self.cfg
+        cat = jnp.concatenate([x, x0], axis=-1)
+        h = rms_norm(cat, sp["ln_in"], cfg.rms_eps)
+        xin = jnp.einsum("btc,cd->btd", h, sp["w_in"])
+        h1 = rms_norm(xin, sp["ln1"], cfg.rms_eps)
+        o, k, v = attn_full(sp["attn"], cfg, h1, causal=True, window=window)
+        xin = xin + o
+        h2 = rms_norm(xin, sp["ln2"], cfg.rms_eps)
+        xin = xin + swiglu_apply(sp["mlp"], h2)
+        out = jnp.einsum("btd,de->bte", xin, sp["w_out"])
+        return x + out, k, v
+
+    def _shared_attn_step(self, sp: Params, x, x0, kc, vc, lens, capacity: int):
+        """Single decode token; ring-buffer KV write at ``lens % capacity``."""
+        cfg = self.cfg
+        cat = jnp.concatenate([x, x0], axis=-1)
+        h = rms_norm(cat, sp["ln_in"], cfg.rms_eps)
+        xin = jnp.einsum("bc,cd->bd", h, sp["w_in"])
+        h1 = rms_norm(xin, sp["ln1"], cfg.rms_eps)
+        q, k, v = project_qkv(sp["attn"], cfg, h1[:, None, :], lens[:, None])
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]
+        write_pos = lens % capacity
+        kc, vc = attn_lib.write_kv(kc, vc, k, v, write_pos)
+        valid = jnp.minimum(lens + 1, capacity)
+        o = attn_lib.decode_attention(q, kc, vc, valid)
+        xin = xin + jnp.einsum("bhk,hkd->bd", o, sp["attn"]["wo"])
+        h2 = rms_norm(xin, sp["ln2"], cfg.rms_eps)
+        xin = xin + swiglu_apply(sp["mlp"], h2)
+        out = jnp.einsum("bd,de->be", xin, sp["w_out"])
+        return x + out, kc, vc
+
+    # -- caches -------------------------------------------------------------------
+    def cache_capacity(self, seq_len: int) -> int:
+        w = self.cfg.long_context_window
+        return min(seq_len, w) if w else seq_len
+
+    def cache_shape(self, batch: int, capacity: int):
+        cfg = self.cfg
+        m = self.mamba
+        L = cfg.num_layers
+        A = self.n_attn_apps
+        return {
+            "ssm": ((L, batch, m.H, m.N, m.P), "float32",
+                    ("layers", "batch", "heads", None, None)),
+            "conv": ((L, batch, m.conv_dim, m.K - 1), "float32",
+                     ("layers", "batch", None, None)),
+            "k": ((A, batch, capacity, cfg.num_kv_heads, cfg.head_dim),
+                  cfg.activation_dtype, ("layers", "batch", "kv_seq", "kv_heads", None)),
+            "v": ((A, batch, capacity, cfg.num_kv_heads, cfg.head_dim),
+                  cfg.activation_dtype, ("layers", "batch", "kv_seq", "kv_heads", None)),
+            "lens": ((batch,), "int32", ("batch",)),
+        }
+
+    def init_cache(self, batch: int, capacity: int):
+        return {
+            name: jnp.zeros(shp, dtype=dt)
+            for name, (shp, dt, _) in self.cache_shape(batch, capacity).items()
+        }
+
+    def _split_states(self, cache):
+        G, P_ = self.n_groups, self.per_group
+        n_gl = G * P_
+        g = {
+            "ssm": cache["ssm"][:n_gl].reshape((G, P_) + cache["ssm"].shape[1:]),
+            "conv": cache["conv"][:n_gl].reshape((G, P_) + cache["conv"].shape[1:]),
+            "k": cache["k"][:G],
+            "v": cache["v"][:G],
+        }
+        t = {
+            "ssm": cache["ssm"][n_gl:],
+            "conv": cache["conv"][n_gl:],
+            "k": cache["k"][G:],
+            "v": cache["v"][G:],
+        }
+        return g, t
+
+    def _join_states(self, g, t, lens):
+        return {
+            "ssm": jnp.concatenate([g["ssm"].reshape((-1,) + g["ssm"].shape[2:]), t["ssm"]], 0),
+            "conv": jnp.concatenate([g["conv"].reshape((-1,) + g["conv"].shape[2:]), t["conv"]], 0),
+            "k": jnp.concatenate([g["k"], t["k"]], 0),
+            "v": jnp.concatenate([g["v"], t["v"]], 0),
+            "lens": lens,
+        }
+
+    # -- full-sequence forward -------------------------------------------------
+    def _forward_seq(self, params, tokens, cache, *, window: int = 0, impl: str = "scan"):
+        cfg = self.cfg
+        B, T = tokens.shape
+        x = embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
+        x = shard(x, "batch", None, None)
+        x0 = x
+        g, t = self._split_states(cache)
+
+        def mamba_chain(x, mparams, mstates):
+            def body(x, sc):
+                p, s_ssm, s_conv = sc
+                x, ns = self.mamba.apply_seq(p, x, {"ssm": s_ssm, "conv": s_conv}, impl=impl)
+                return x, (ns["ssm"], ns["conv"])
+
+            from repro.models.layers import maybe_remat
+
+            x, (ssmT, convT) = jax.lax.scan(
+                maybe_remat(body, cfg.remat_policy), x,
+                (mparams, mstates["ssm"], mstates["conv"]))
+            return x, ssmT, convT
+
+        new_g = None
+        if self.n_groups:
+            def group_body(x, scanned):
+                mp, s_ssm, s_conv, kc, vc = scanned
+                x, k, v = self._shared_attn_seq(params["shared"], x, x0, window=window)
+                x, ssmT, convT = mamba_chain(x, mp, {"ssm": s_ssm, "conv": s_conv})
+                return x, (ssmT, convT, k, v)
+
+            x, (g_ssm, g_conv, g_k, g_v) = jax.lax.scan(
+                group_body, x,
+                (params["mamba_groups"], g["ssm"], g["conv"], g["k"], g["v"]),
+            )
+            new_g = {"ssm": g_ssm, "conv": g_conv, "k": g_k, "v": g_v}
+        new_t = {"ssm": t["ssm"], "conv": t["conv"], "k": t["k"], "v": t["v"]}
+        if self.tail:
+            x, k, v = self._shared_attn_seq(params["shared"], x, x0, window=window)
+            x, ssmT, convT = mamba_chain(x, params["mamba_tail"], {"ssm": t["ssm"], "conv": t["conv"]})
+            new_t = {"ssm": ssmT, "conv": convT, "k": k[None], "v": v[None]}
+        cache = self._join_states(new_g if new_g else g, new_t, cache["lens"] + T)
+        return x, cache
+
+    # -- public API ---------------------------------------------------------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        B, T = batch["tokens"].shape
+        cache = self.init_cache(B, T)
+        x, _ = self._forward_seq(params, batch["tokens"], cache)
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        xent, _ = softmax_xent_sharded(
+            x, params["unembed"], batch["targets"], batch["loss_mask"]
+        )
+        return xent, {"xent": xent, "aux": jnp.float32(0.0)}
+
+    def prefill(self, params, tokens, *, capacity: Optional[int] = None, patch_embeds=None):
+        cfg = self.cfg
+        B, S = tokens.shape
+        capacity = capacity or self.cache_capacity(S)
+        cache = self.init_cache(B, capacity)
+        # prefill assumes S <= capacity (engine enforces); KV is written [0, S)
+        x, new_cache = self._forward_seq(params, tokens, cache)
+        if capacity > S:
+            pad = [(0, 0), (0, 0), (0, capacity - S), (0, 0), (0, 0)]
+            new_cache["k"] = jnp.pad(new_cache["k"][:, :, :S], pad)
+            new_cache["v"] = jnp.pad(new_cache["v"][:, :, :S], pad)
+        else:
+            new_cache["k"] = new_cache["k"][:, :, :capacity]
+            new_cache["v"] = new_cache["v"][:, :, :capacity]
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = logits_last(x[:, -1], params["unembed"])
+        return logits, new_cache
+
+    def decode(self, params, tokens, cache, *, window: int = 0):
+        cfg = self.cfg
+        lens = cache["lens"]
+        capacity = cache["k"].shape[2]
+        x = embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
+        x = shard(x, "batch", None)
+        x0 = x
+        g, t = self._split_states(cache)
+
+        def mamba_chain_step(x, mparams, s_ssm, s_conv):
+            def body(x, sc):
+                p, ssm_s, conv_s = sc
+                x, ns = self.mamba.apply_step(p, x, {"ssm": ssm_s, "conv": conv_s})
+                return x, (ns["ssm"], ns["conv"])
+
+            x, (ssmT, convT) = jax.lax.scan(body, x, (mparams, s_ssm, s_conv))
+            return x, ssmT, convT
+
+        new_g = None
+        if self.n_groups:
+            def group_body(x, scanned):
+                mp, s_ssm, s_conv, kc, vc = scanned
+                x, kc, vc = self._shared_attn_step(
+                    params["shared"], x, x0, kc, vc, lens, capacity
+                )
+                x, ssmT, convT = mamba_chain_step(x, mp, s_ssm, s_conv)
+                return x, (ssmT, convT, kc, vc)
+
+            x, (g_ssm, g_conv, g_k, g_v) = jax.lax.scan(
+                group_body, x,
+                (params["mamba_groups"], g["ssm"], g["conv"], g["k"], g["v"]),
+            )
+            new_g = {"ssm": g_ssm, "conv": g_conv, "k": g_k, "v": g_v}
+        new_t = dict(t)
+        if self.tail:
+            x, kc, vc = self._shared_attn_step(
+                params["shared"], x, x0, t["k"][0], t["v"][0], lens, capacity
+            )
+            x, ssmT, convT = mamba_chain_step(x, params["mamba_tail"], t["ssm"], t["conv"])
+            new_t = {"ssm": ssmT, "conv": convT, "k": kc[None], "v": vc[None]}
+        new_cache = self._join_states(new_g if new_g else g, new_t, lens + 1)
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = logits_last(x, params["unembed"])
+        return logits, new_cache
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Tuple]:
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {
+                "tokens": ((B, S), "int32", ("batch", None)),
+                "targets": ((B, S), "int32", ("batch", None)),
+                "loss_mask": ((B, S), "float32", ("batch", None)),
+            }
+        if shape.kind == "prefill":
+            return {"tokens": ((B, S), "int32", ("batch", None))}
+        return {"tokens": ((B,), "int32", ("batch",))}

@@ -1,0 +1,1 @@
+from repro.roofline.hw import HARDWARE, HardwareProfile  # noqa: F401

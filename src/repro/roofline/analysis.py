@@ -1,0 +1,142 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = weighted_collective_bytes_per_chip / (links × link_bw)
+
+``cost_analysis()`` of the partitioned module reports per-partition numbers;
+the assignment's "/ chips" is therefore already applied.  MODEL_FLOPS uses
+6·N·D (dense) or 6·N_active·D (MoE) per the assignment; the
+``useful_flops_ratio`` (MODEL_FLOPS / global HLO FLOPs) flags remat or
+redundant compute.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.roofline.hlo import CollectiveStats
+from repro.roofline.hw import get_profile
+
+V5E = get_profile("tpu_v5e")
+PEAK_FLOPS = V5E.device_flops  # 197e12 bf16
+HBM_BW = V5E.device_hbm_bw  # 819e9
+ICI_BW = V5E.ici_bw  # 50e9 per link
+ICI_LINKS = V5E.num_ici_links  # 4
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """6·N·D (training) / 2·N·D (inference fwd) per the assignment.
+
+    decode shapes process ONE token per sequence (D = global_batch)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-chip quantities
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes_weighted: float
+    collectives: Dict[str, Any] = field(default_factory=dict)
+    memory_per_chip_bytes: float = 0.0
+    model_flops_global: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_weighted / (ICI_LINKS * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total_hlo = self.hlo_flops * self.chips
+        if total_hlo <= 0:
+            return 0.0
+        return self.model_flops_global / total_hlo
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chip's peak that the dominant-term-limited step
+        achieves on USEFUL model flops: (model_flops/chips/peak) / t_bound."""
+        if self.t_bound <= 0:
+            return 0.0
+        t_ideal = self.model_flops_global / self.chips / PEAK_FLOPS
+        return t_ideal / self.t_bound
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops_per_chip": self.hlo_flops,
+            "hlo_bytes_per_chip": self.hlo_bytes,
+            "collective_bytes_weighted_per_chip": self.collective_bytes_weighted,
+            "collectives": self.collectives,
+            "memory_per_chip_GB": round(self.memory_per_chip_bytes / 1e9, 3),
+            "model_flops_global": self.model_flops_global,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": round(self.useful_flops_ratio, 4),
+            "roofline_fraction": round(self.roofline_fraction, 4),
+        }
+
+
+def build_report(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    mesh_name: str,
+    chips: int,
+    *,
+    flops_per_chip: float,
+    bytes_per_chip: float,
+    collectives: CollectiveStats,
+    memory_per_chip: float = 0.0,
+) -> RooflineReport:
+    return RooflineReport(
+        arch=cfg.name,
+        shape=shape.name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=flops_per_chip,
+        hlo_bytes=bytes_per_chip,
+        collective_bytes_weighted=float(collectives.weighted_bytes()),
+        collectives=collectives.summary(),
+        memory_per_chip_bytes=memory_per_chip,
+        model_flops_global=model_flops(cfg, shape),
+    )

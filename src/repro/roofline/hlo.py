@@ -1,0 +1,337 @@
+"""HLO module analysis with while-loop trip-count correction.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — a
+``lax.scan`` over 64 layers reports 1/64th of the real FLOPs, and the same
+undercount hits collective bytes.  This module re-derives per-chip costs from
+the post-SPMD-partitioning HLO text (shapes there are PER-PARTITION):
+
+1. split the module into computations;
+2. build the call graph (``calls=``/``condition=``/``body=``/``to_apply=``)
+   and propagate execution multipliers: a while body runs ``trip`` times,
+   where ``trip`` is read off the loop condition's s32 constant;
+3. per computation, count
+   * dot FLOPs exactly (2 × result elements × contraction size),
+   * memory traffic ≈ Σ (result + operand bytes) of materialising top-level
+     ops (post-fusion, each instruction ≈ one buffer write + its reads),
+   * collective wire bytes per op semantics (ring accounting).
+
+The raw (uncorrected) ``cost_analysis()`` numbers are kept in the dry-run
+artifacts as a cross-check: raw ≈ Σ single-visit computation costs.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "u1": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_SHAPE = re.compile(
+    r"\b(pred|s8|u8|s4|u4|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|c128)"
+    r"\[([0-9,]*)\]"
+)
+_CALLS = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)")
+_WHILE = re.compile(r"\bwhile\(.*condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_S32_CONST = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPNAME = re.compile(r"^\(?[\w\[\],{}\s\-]*?\)?\s*([a-z][\w\-]*)\(")
+_DOT_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+
+
+def _shape_info(rhs: str) -> Tuple[int, int]:
+    """(total bytes, element count) of the result type(s) at line start."""
+    # result types appear before the op name token
+    m = _OPNAME.search(rhs)
+    head = rhs[: m.start(1)] if m else rhs
+    total_b = 0
+    total_e = 0
+    for dt, dims in _SHAPE.findall(head):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_b += n * _DTYPE_BYTES[dt]
+        total_e += n
+    return total_b, total_e
+
+
+def _dims_of(rhs: str) -> Optional[Tuple[str, Tuple[int, ...]]]:
+    m = _SHAPE.search(rhs)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+    return dt, shape
+
+
+@dataclass
+class Instruction:
+    name: str
+    op: str
+    rhs: str
+    result_bytes: int
+    shape: Tuple[int, ...]
+    operands: Tuple[str, ...] = ()
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instruction] = field(default_factory=list)
+    callees: List[Tuple[str, str]] = field(default_factory=list)  # (kind, name)
+    s32_consts: List[int] = field(default_factory=list)
+    # (op, wire_bytes, result_bytes) per collective
+    collectives: List[Tuple[str, float, int]] = field(default_factory=list)
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    bytes_by_name: Dict[str, int] = field(default_factory=dict)
+    root: Optional[Instruction] = None
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_LIST.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def _wire_bytes(op: str, result_bytes: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * result_bytes * (n - 1) / n
+    if op == "all-gather":
+        return result_bytes * (n - 1) / n
+    if op == "reduce-scatter":
+        return float(result_bytes) * (n - 1)
+    if op == "all-to-all":
+        return result_bytes * (n - 1) / n
+    return float(result_bytes)  # collective-permute
+
+
+# ops that produce NO memory traffic of their own ("?" = unparsed tuple lines)
+_FREE_OPS = (
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "while", "conditional", "call",
+    "?",
+)
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: Dict[str, Computation] = {}
+        self.entry: Optional[str] = None
+        self.whiles: List[Tuple[str, str, str]] = []  # (comp, cond, body)
+        self._parse(text)
+        self.multipliers = self._propagate()
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[Computation] = None
+        for raw in text.splitlines():
+            hdr = _COMP_HDR.match(raw)
+            if hdr and ("=" not in raw.split("(")[0]):
+                cur = Computation(hdr.group(1))
+                self.comps[cur.name] = cur
+                if raw.lstrip().startswith("ENTRY"):
+                    self.entry = cur.name
+                continue
+            if cur is None:
+                continue
+            line = raw.strip()
+            if line == "}":
+                cur = None
+                continue
+            m = _INSTR.match(line)
+            if not m:
+                continue
+            name, rhs = m.groups()
+            opm = _OPNAME.search(rhs)
+            op = opm.group(1) if opm else "?"
+            rbytes, _ = _shape_info(rhs)
+            dshape = _dims_of(rhs)
+            shape = dshape[1] if dshape else ()
+            cur.bytes_by_name[name] = rbytes
+            operands: Tuple[str, ...] = ()
+            call = _OPERANDS.search(rhs[rhs.find(op):] if op in rhs else rhs)
+            if call:
+                operands = tuple(
+                    o.strip().split(" ")[-1].lstrip("%")
+                    for o in call.group(1).split(",") if o.strip()
+                )
+            inst = Instruction(name, op, rhs, rbytes, shape, operands)
+            cur.instrs.append(inst)
+            if line.startswith("ROOT"):
+                cur.root = inst
+            for cm in _CALLS.finditer(rhs):
+                cur.callees.append(("call", cm.group(1)))
+            wm = _WHILE.search(rhs)
+            if wm:
+                self.whiles.append((cur.name, wm.group(1), wm.group(2)))
+            for cc in _S32_CONST.finditer(rhs):
+                cur.s32_consts.append(int(cc.group(1)))
+            # collectives
+            for cop in COLLECTIVE_OPS:
+                if op.startswith(cop):
+                    if op.endswith("-done"):
+                        break
+                    n = _group_size(rhs)
+                    cur.collectives.append((cop, _wire_bytes(cop, rbytes, n), rbytes))
+                    break
+            # dot flops: 2 * result elements * contraction size
+            if op == "dot":
+                cd = _DOT_CDIMS.search(rhs)
+                _, relems = _shape_info(rhs)
+                csize = 1
+                if cd and operands:
+                    lhs_shape_m = None
+                    for prev in cur.instrs:
+                        if prev.name == operands[0]:
+                            lhs_shape_m = prev.shape
+                            break
+                    for d in cd.group(1).split(","):
+                        if d and lhs_shape_m and int(d) < len(lhs_shape_m):
+                            csize *= lhs_shape_m[int(d)]
+                cur.flops += 2.0 * relems * csize
+        self._traffic_pass()
+
+    def _traffic_pass(self) -> None:
+        """HBM-traffic estimate per computation (post-fusion accounting).
+
+        Each materialising instruction ≈ one buffer write + reads of its
+        operands.  In-place ops (dynamic-update-slice, including DUS-rooted
+        fusions — XLA aliases them inside while loops) charge only the
+        update slice, NOT the whole buffer they thread through.
+        """
+        for comp in self.comps.values():
+            total = 0.0
+            for inst in comp.instrs:
+                if inst.op in _FREE_OPS:
+                    continue
+                root = inst
+                root_comp = comp
+                if inst.op == "fusion":
+                    cm = _CALLS.search(inst.rhs)
+                    callee = self.comps.get(cm.group(1)) if cm else None
+                    if callee is not None and callee.root is not None:
+                        root, root_comp = callee.root, callee
+                if root.op == "dynamic-update-slice":
+                    # operands: (buffer, update, idx...)
+                    upd = root.operands[1] if len(root.operands) > 1 else None
+                    ub = root_comp.bytes_by_name.get(upd, 0) if upd else 0
+                    total += 2 * ub
+                    continue
+                if root.op == "dynamic-slice":
+                    total += 2 * root.result_bytes
+                    continue
+                reads = sum(
+                    comp.bytes_by_name.get(o, 0) for o in inst.operands
+                )
+                total += inst.result_bytes + reads
+            comp.traffic_bytes = total
+
+    # ------------------------------------------------------------------
+    def trip_count(self, cond: str) -> int:
+        comp = self.comps.get(cond)
+        if comp is None or not comp.s32_consts:
+            return 1
+        return max(1, max(comp.s32_consts))
+
+    def _propagate(self) -> Dict[str, float]:
+        """Execution multiplier per computation from ENTRY."""
+        body_trip = {body: self.trip_count(cond) for _, cond, body in self.whiles}
+        mult: Dict[str, float] = {}
+
+        def visit(name: str, m: float) -> None:
+            if name not in self.comps:
+                return
+            mult[name] = mult.get(name, 0.0) + m
+            comp = self.comps[name]
+            seen = set()
+            for _, callee in comp.callees:
+                if callee in seen:
+                    continue
+                seen.add(callee)
+                child_m = m * body_trip.get(callee, 1)
+                visit(callee, child_m)
+
+        if self.entry:
+            visit(self.entry, 1.0)
+        return mult
+
+    # ------------------------------------------------------------------
+    def total_flops(self) -> float:
+        return sum(c.flops * self.multipliers.get(c.name, 0.0)
+                   for c in self.comps.values())
+
+    def total_traffic_bytes(self) -> float:
+        return sum(c.traffic_bytes * self.multipliers.get(c.name, 0.0)
+                   for c in self.comps.values())
+
+    def collective_stats(self) -> "CollectiveStats":
+        stats = CollectiveStats()
+        for c in self.comps.values():
+            m = self.multipliers.get(c.name, 0.0)
+            if m <= 0:
+                continue
+            for op, wire, rbytes in c.collectives:
+                stats.wire_bytes_by_op[op] = stats.wire_bytes_by_op.get(op, 0.0) + wire * m
+                stats.result_bytes_by_op[op] = stats.result_bytes_by_op.get(op, 0) + int(rbytes * m)
+                stats.count_by_op[op] = stats.count_by_op.get(op, 0) + int(m)
+        return stats
+
+
+@dataclass
+class CollectiveStats:
+    result_bytes_by_op: Dict[str, int] = field(default_factory=dict)
+    wire_bytes_by_op: Dict[str, float] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.result_bytes_by_op.values())
+
+    def weighted_bytes(self) -> float:
+        """Per-chip wire bytes (ring-algorithm accounting, trip-corrected)."""
+        return sum(self.wire_bytes_by_op.values())
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "result_GB": round(self.total_bytes / 1e9, 4),
+            "wire_GB": round(self.weighted_bytes() / 1e9, 4),
+            **{f"{op}_wire_MB": round(b / 1e6, 3)
+               for op, b in sorted(self.wire_bytes_by_op.items())},
+            **{f"{op}_count": c for op, c in sorted(self.count_by_op.items())},
+        }
+
+
+def parse_module(hlo_text: str) -> HloModule:
+    return HloModule(hlo_text)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Trip-corrected collective stats for the whole module."""
+    return HloModule(hlo_text).collective_stats()
+
+
+def count_op(hlo_text: str, name: str) -> int:
+    pat = re.compile(rf"=\s*\S+\s*{re.escape(name)}\(")
+    return sum(1 for line in hlo_text.splitlines() if pat.search(line))

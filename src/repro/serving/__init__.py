@@ -1,0 +1,13 @@
+"""Serving substrate: workload traces, latency/throughput metrics, and the
+discrete-event cluster simulator that reproduces the paper's figures by
+driving the REAL NeoScheduler + PerfModel in virtual time."""
+
+from repro.serving.traces import (  # noqa: F401
+    TraceRequest,
+    azure_code_trace,
+    osc_trace,
+    poisson_arrivals,
+    synthetic_trace,
+)
+from repro.serving.metrics import RequestRecord, ServeMetrics  # noqa: F401
+from repro.serving.simulator import SimEngine, simulate  # noqa: F401

@@ -1,0 +1,115 @@
+"""Serving metrics.
+
+The paper's headline metric (Fig. 6): **average per-token latency** — each
+request's full latency divided by its output token count, averaged over
+requests.  Throughput = completed tokens / makespan.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class RequestRecord:
+    rid: int
+    arrival_time: float
+    prompt_len: int
+    output_len: int
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+    @property
+    def per_token_latency(self) -> Optional[float]:
+        lat = self.latency
+        if lat is None or self.output_len == 0:
+            return None
+        return lat / self.output_len
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+
+@dataclass
+class ServeMetrics:
+    records: List[RequestRecord] = field(default_factory=list)
+    makespan: float = 0.0
+    iterations: int = 0
+    mode_counts: Dict[str, int] = field(default_factory=dict)
+    swap_bytes: int = 0
+    offloaded_decodes: int = 0
+    device_decodes: int = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def finished(self) -> List[RequestRecord]:
+        return [r for r in self.records if r.finish_time is not None]
+
+    @property
+    def total_output_tokens(self) -> int:
+        return sum(r.output_len for r in self.finished)
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(r.output_len + r.prompt_len for r in self.finished)
+
+    @property
+    def throughput(self) -> float:
+        """Output tokens per second over the makespan."""
+        if self.makespan <= 0:
+            return 0.0
+        return self.total_output_tokens / self.makespan
+
+    @property
+    def token_throughput(self) -> float:
+        """(input+output) tokens per second — the paper's Fig. 10b metric."""
+        if self.makespan <= 0:
+            return 0.0
+        return self.total_tokens / self.makespan
+
+    def per_token_latency(self, pct: Optional[float] = None) -> float:
+        vals = [r.per_token_latency for r in self.finished if r.per_token_latency is not None]
+        if not vals:
+            return float("nan")
+        if pct is None:
+            return float(np.mean(vals))
+        return float(np.percentile(vals, pct))
+
+    def latency_distribution(self) -> np.ndarray:
+        return np.array(sorted(
+            r.per_token_latency for r in self.finished if r.per_token_latency is not None
+        ))
+
+    def ttft(self, pct: Optional[float] = None) -> float:
+        vals = [r.ttft for r in self.finished if r.ttft is not None]
+        if not vals:
+            return float("nan")
+        return float(np.mean(vals) if pct is None else np.percentile(vals, pct))
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "requests": len(self.finished),
+            "throughput_tok_s": round(self.throughput, 2),
+            "token_throughput_tok_s": round(self.token_throughput, 2),
+            "per_token_latency_ms": round(self.per_token_latency() * 1e3, 2),
+            "p99_per_token_latency_ms": round(self.per_token_latency(99) * 1e3, 2),
+            "ttft_s": round(self.ttft(), 3),
+            "makespan_s": round(self.makespan, 2),
+            "offload_frac": round(
+                self.offloaded_decodes
+                / max(1, self.offloaded_decodes + self.device_decodes),
+                3,
+            ),
+        }

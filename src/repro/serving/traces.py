@@ -1,0 +1,99 @@
+"""Workload traces (§5.1).
+
+Two real-world-shaped generators and the paper's synthetic sweep:
+
+* :func:`azure_code_trace` — AC-like: the Azure LLM coding trace has long
+  prompts (median ≈ 2k tokens, heavy tail) and short-to-medium outputs.
+  Distribution parameters follow the published trace statistics
+  (Patel et al., Splitwise, ISCA'24: coding input mean ≈ 2000, output ≈ 30).
+* :func:`osc_trace` — OSC-like: OpenAI summarize-comparisons; shorter prompts
+  (few hundred tokens) and short summaries.
+* :func:`synthetic_trace` — (l_i, l_o) pairs with lengths sampled uniformly
+  from [0.9 l, 1.1 l] exactly as §5.1.
+
+Arrival timestamps follow a Poisson process (§5.2).  All generators are
+deterministic given a seed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class TraceRequest:
+    arrival_time: float
+    prompt_len: int
+    output_len: int
+    prompt: Optional[List[int]] = None  # token ids (real-engine runs)
+
+    def materialise(self, rng: np.random.Generator, vocab: int) -> "TraceRequest":
+        if self.prompt is None:
+            self.prompt = list(map(int, rng.integers(1, vocab, size=self.prompt_len)))
+        return self
+
+
+def poisson_arrivals(n: int, rate: float, rng: np.random.Generator) -> np.ndarray:
+    """n arrival timestamps of a Poisson process with `rate` req/s."""
+    if rate <= 0:
+        return np.zeros(n)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    return np.cumsum(gaps)
+
+
+def _lognormal_lengths(rng, n, median, sigma, lo, hi):
+    vals = rng.lognormal(mean=np.log(median), sigma=sigma, size=n)
+    return np.clip(vals, lo, hi).astype(int)
+
+
+def azure_code_trace(
+    n: int, rate: float, *, seed: int = 0,
+    prompt_median: int = 1800, output_median: int = 28,
+    max_prompt: int = 7500, max_output: int = 1000,
+) -> List[TraceRequest]:
+    rng = np.random.default_rng(seed)
+    arr = poisson_arrivals(n, rate, rng)
+    p = _lognormal_lengths(rng, n, prompt_median, 0.9, 32, max_prompt)
+    o = _lognormal_lengths(rng, n, output_median, 1.1, 4, max_output)
+    return [TraceRequest(float(a), int(pi), int(oi)) for a, pi, oi in zip(arr, p, o)]
+
+
+def osc_trace(
+    n: int, rate: float, *, seed: int = 0,
+    prompt_median: int = 380, output_median: int = 32,
+    max_prompt: int = 2000, max_output: int = 250,
+) -> List[TraceRequest]:
+    rng = np.random.default_rng(seed)
+    arr = poisson_arrivals(n, rate, rng)
+    p = _lognormal_lengths(rng, n, prompt_median, 0.6, 16, max_prompt)
+    o = _lognormal_lengths(rng, n, output_median, 0.7, 4, max_output)
+    return [TraceRequest(float(a), int(pi), int(oi)) for a, pi, oi in zip(arr, p, o)]
+
+
+def synthetic_trace(
+    n: int, rate: float, input_len: int, output_len: int, *, seed: int = 0
+) -> List[TraceRequest]:
+    """§5.1: lengths uniform in [0.9l, 1.1l], independent."""
+    rng = np.random.default_rng(seed)
+    arr = poisson_arrivals(n, rate, rng)
+    p = rng.integers(int(0.9 * input_len), int(1.1 * input_len) + 1, size=n)
+    o = rng.integers(max(1, int(0.9 * output_len)), int(1.1 * output_len) + 1, size=n)
+    return [TraceRequest(float(a), int(pi), int(oi)) for a, pi, oi in zip(arr, p, o)]
+
+
+TRACES = {
+    "ac": azure_code_trace,
+    "osc": osc_trace,
+}
+
+
+def get_trace(name: str, n: int, rate: float, seed: int = 0) -> List[TraceRequest]:
+    if name in TRACES:
+        return TRACES[name](n, rate, seed=seed)
+    if name.startswith("syn:"):  # "syn:1000x100"
+        li, lo = name[4:].split("x")
+        return synthetic_trace(n, rate, int(li), int(lo), seed=seed)
+    raise KeyError(f"unknown trace {name!r} (have ac, osc, syn:<in>x<out>)")

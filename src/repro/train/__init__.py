@@ -1,0 +1,13 @@
+"""Training substrate: optimizers (AdamW / Adafactor), the trainer step
+factory (remat, grad accumulation, ZeRO-style optimizer-state sharding,
+int8 gradient-compression collectives), and LR schedules."""
+
+from repro.train.optimizer import (  # noqa: F401
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    lr_schedule,
+)
+from repro.train.trainer import Trainer, make_train_step  # noqa: F401

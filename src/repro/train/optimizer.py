@@ -1,0 +1,153 @@
+"""Optimizers as pure pytree functions (no optax dependency).
+
+* AdamW — fp32 moments ("zero" policy: both moments sharded over the mesh,
+  see :func:`repro.distributed.zero.zero_shard_opt_state`).
+* Adafactor-style "lite" — bf16 first moment + factored second moment, for
+  the biggest configs (llama4-maverick train_4k must fit 16 GB/chip).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+Pytree = Any
+
+
+def lr_schedule(cfg: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then cosine decay to 10%."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = 0.55 + 0.45 * jnp.cos(jnp.pi * prog)
+    return cfg.learning_rate * warm * cos
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Pytree, max_norm: float) -> Tuple[Pytree, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    # keep the gradient dtype: a full fp32 copy of a 32B+ model's grads would
+    # dominate per-chip memory (optimizers upcast per-leaf, fused by XLA)
+    return jax.tree.map(lambda g: (g * scale.astype(g.dtype)), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params: Pytree) -> Dict[str, Pytree]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+
+def adamw_update(
+    grads: Pytree, state: Dict[str, Pytree], params: Pytree,
+    step: jnp.ndarray, cfg: TrainConfig,
+) -> Tuple[Pytree, Dict[str, Pytree]]:
+    b1, b2 = cfg.beta1, cfg.beta2
+    lr = lr_schedule(cfg, step)
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + 1e-8) + cfg.weight_decay * p.astype(jnp.float32)
+        return (-lr * delta).astype(p.dtype), m, v
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    updates = tdef.unflatten([o[0] for o in out])
+    new_state = {
+        "m": tdef.unflatten([o[1] for o in out]),
+        "v": tdef.unflatten([o[2] for o in out]),
+    }
+    return updates, new_state
+
+
+# ---------------------------------------------------------------------------
+# Adafactor-style "lite" (bf16 m + factored v) for the 400B-class configs
+# ---------------------------------------------------------------------------
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 128 and p.shape[-2] >= 128
+
+
+def adafactor_init(params: Pytree) -> Dict[str, Pytree]:
+    def v_init(p):
+        if _factored(p):
+            return {
+                "row": jnp.zeros(p.shape[:-1], jnp.float32),
+                "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
+        "v": jax.tree.map(v_init, params),
+    }
+
+
+def adafactor_update(
+    grads: Pytree, state: Dict[str, Pytree], params: Pytree,
+    step: jnp.ndarray, cfg: TrainConfig,
+) -> Tuple[Pytree, Dict[str, Pytree]]:
+    b1, b2 = cfg.beta1, 1.0 - (jnp.asarray(step, jnp.float32) + 1.0) ** -0.8
+    lr = lr_schedule(cfg, step)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + 1e-30
+        if _factored(p):
+            row = b2 * v["row"] + (1 - b2) * jnp.mean(g2, axis=-1)
+            col = b2 * v["col"] + (1 - b2) * jnp.mean(g2, axis=-2)
+            row_mean = jnp.mean(row, axis=-1, keepdims=True)
+            vhat = (row / jnp.maximum(row_mean, 1e-30))[..., None] * col[..., None, :]
+            new_v = {"row": row, "col": col}
+        else:
+            vhat = b2 * v + (1 - b2) * g2
+            new_v = vhat
+        u = g32 / jnp.sqrt(vhat + 1e-30)
+        # update clipping (Adafactor's RMS-1 rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        new_m = (b1 * m.astype(jnp.float32) + (1 - b1) * u)
+        delta = new_m + cfg.weight_decay * p.astype(jnp.float32)
+        return (-lr * delta).astype(p.dtype), new_m.astype(jnp.bfloat16), new_v
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    return tdef.unflatten([o[0] for o in out]), {
+        "m": tdef.unflatten([o[1] for o in out]),
+        "v": tdef.unflatten([o[2] for o in out]),
+    }
+
+
+OPTIMIZERS = {
+    "adamw": (adamw_init, adamw_update),
+    "adafactor": (adafactor_init, adafactor_update),
+}

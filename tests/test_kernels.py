@@ -1,0 +1,172 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs the pure-jnp
+oracle in each kernel's ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+TOL = dict(rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,H,KV,hd,page,npages", [
+    (1, 4, 4, 32, 8, 4),      # MHA
+    (3, 8, 2, 32, 16, 4),     # GQA 4:1
+    (2, 16, 8, 64, 16, 8),    # GQA 2:1, bigger head
+    (2, 4, 1, 128, 8, 4),     # MQA, aligned head_dim
+    (1, 14, 2, 112, 16, 4),   # odd heads + head_dim (zamba/internvl-like)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_sweep(B, H, KV, hd, page, npages, dtype, rng):
+    from repro.kernels.paged_decode.ops import paged_decode_attention
+
+    P = npages * 4
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), dtype)
+    kp = jnp.asarray(rng.normal(size=(P, page, KV, hd)), dtype)
+    vp = jnp.asarray(rng.normal(size=(P, page, KV, hd)), dtype)
+    bt = jnp.asarray(rng.integers(0, P, size=(B, npages)), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, npages * page + 1, size=(B,)), jnp.int32)
+    o_ref = paged_decode_attention(q, kp, vp, bt, lens, impl="ref")
+    o_pal = paged_decode_attention(q, kp, vp, bt, lens, impl="pallas", interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(o_pal, np.float32), np.asarray(o_ref, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 2e-3,
+        atol=2e-2 if dtype == jnp.bfloat16 else 2e-3,
+    )
+
+
+def test_paged_decode_len_edge(rng):
+    """len exactly at page boundaries and len=1."""
+    from repro.kernels.paged_decode.ops import paged_decode_attention
+
+    B, H, KV, hd, page = 3, 4, 2, 32, 8
+    P = 8
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, page, KV, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, page, KV, hd)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, P, size=(B, 3)), jnp.int32)
+    lens = jnp.asarray([1, page, 3 * page], jnp.int32)
+    o_ref = paged_decode_attention(q, kp, vp, bt, lens, impl="ref")
+    o_pal = paged_decode_attention(q, kp, vp, bt, lens, impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# flash prefill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 128, 4, 4, 32),
+    (2, 256, 8, 2, 64),
+    (1, 192, 4, 1, 48),  # non-pow2 seq + MQA + odd head_dim
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_prefill_sweep(B, S, H, KV, hd, causal, rng):
+    from repro.kernels.flash_prefill.ops import flash_prefill
+
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    o_ref = flash_prefill(q, k, v, causal=causal, impl="ref")
+    o_pal = flash_prefill(q, k, v, causal=causal, impl="pallas", interpret=True,
+                          blk_q=64, blk_k=64)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref), **TOL)
+
+
+def test_flash_prefill_window(rng):
+    from repro.kernels.flash_prefill.ops import flash_prefill
+
+    B, S, H, hd = 1, 128, 4, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    o_ref = flash_prefill(q, k, v, causal=True, window=32, impl="ref")
+    o_pal = flash_prefill(q, k, v, causal=True, window=32, impl="pallas",
+                          interpret=True, blk_q=32, blk_k=32)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,T,H,N", [(1, 32, 2, 16), (2, 64, 4, 32)])
+def test_rwkv6_scan_sweep(B, T, H, N, rng):
+    from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+
+    r, k, v = (jnp.asarray(rng.normal(size=(B, T, H, N)), jnp.float32) for _ in range(3))
+    w = jnp.exp(-jnp.exp(jnp.asarray(rng.normal(size=(B, T, H, N)), jnp.float32)))  # decay in (0,1)
+    u = jnp.asarray(rng.normal(size=(H, N)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(B, H, N, N)), jnp.float32) * 0.1
+    y_ref, sT_ref = rwkv6_scan(r, k, v, w, u, s0, impl="scan")
+    y_pal, sT_pal = rwkv6_scan(r, k, v, w, u, s0, impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref), **TOL)
+    np.testing.assert_allclose(np.asarray(sT_pal), np.asarray(sT_ref), **TOL)
+
+
+def test_rwkv6_scan_matches_stepwise(rng):
+    """Chunked scan == token-by-token decode recurrence."""
+    from repro.kernels.rwkv6_scan.ops import rwkv6_decode_step, rwkv6_scan
+
+    B, T, H, N = 1, 16, 2, 8
+    r, k, v = (jnp.asarray(rng.normal(size=(B, T, H, N)), jnp.float32) for _ in range(3))
+    w = jnp.exp(-jnp.exp(jnp.asarray(rng.normal(size=(B, T, H, N)), jnp.float32)))  # decay in (0,1)
+    u = jnp.asarray(rng.normal(size=(H, N)), jnp.float32)
+    s = jnp.zeros((B, H, N, N), jnp.float32)
+    y_scan, sT = rwkv6_scan(r, k, v, w, u, s, impl="scan")
+    ys = []
+    for t in range(T):
+        y, s = rwkv6_decode_step(r[:, t], k[:, t], v[:, t], w[:, t], u, s)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)), np.asarray(y_scan), **TOL)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sT), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 ssd
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,T,H,P,N", [(1, 32, 2, 16, 16), (2, 64, 2, 32, 32)])
+def test_mamba2_ssd_sweep(B, T, H, P, N, rng):
+    from repro.kernels.mamba2_ssd.ops import mamba2_ssd
+
+    x = jnp.asarray(rng.normal(size=(B, T, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(B, T, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, T, N)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(B, T, N)), jnp.float32)
+    D = jnp.asarray(rng.normal(size=(H,)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(B, H, P, N)), jnp.float32) * 0.1
+    y_ref, sT_ref = mamba2_ssd(x, dt, A, Bm, C, D, s0, impl="scan")
+    y_pal, sT_pal = mamba2_ssd(x, dt, A, Bm, C, D, s0, impl="pallas", interpret=True, chunk=16)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref), **TOL)
+    np.testing.assert_allclose(np.asarray(sT_pal), np.asarray(sT_ref), **TOL)
+
+
+def test_mamba2_ssd_matches_stepwise(rng):
+    from repro.kernels.mamba2_ssd.ops import mamba2_decode_step, mamba2_ssd
+
+    B, T, H, P, N = 1, 8, 2, 8, 8
+    x = jnp.asarray(rng.normal(size=(B, T, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(B, T, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, T, N)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(B, T, N)), jnp.float32)
+    D = jnp.asarray(rng.normal(size=(H,)), jnp.float32)
+    s = jnp.zeros((B, H, P, N), jnp.float32)
+    y_scan, sT = mamba2_ssd(x, dt, A, Bm, C, D, s, impl="scan")
+    ys = []
+    for t in range(T):
+        y, s = mamba2_decode_step(x[:, t], dt[:, t], A, Bm[:, t], C[:, t], D, s)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)), np.asarray(y_scan),
+                               rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sT), rtol=5e-3, atol=5e-3)

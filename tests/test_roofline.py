@@ -1,0 +1,112 @@
+"""HLO analysis: trip-count correction, dot flop exactness, collective wire
+bytes, and the structural memory model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo import parse_collectives, parse_module
+from repro.roofline.structural import structural_bytes
+
+
+def test_scan_trip_correction_exact():
+    N, T = 128, 12
+
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ c), None
+        y, _ = jax.lax.scan(body, x, None, length=T)
+        return y
+
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((N, N), jnp.float32)).compile()
+    mod = parse_module(c.as_text())
+    got = mod.total_flops()
+    want = 2 * N * N * N * T
+    assert abs(got - want) / want < 0.01, (got, want)
+
+
+def test_grad_of_scan_counts_fwd_and_bwd():
+    N, T = 64, 8
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=T)
+        return jnp.sum(y)
+
+    c = jax.jit(jax.grad(f, argnums=1)).lower(
+        jax.ShapeDtypeStruct((N, N), jnp.float32),
+        jax.ShapeDtypeStruct((N, N), jnp.float32)).compile()
+    mod = parse_module(c.as_text())
+    got = mod.total_flops()
+    # fwd matmul + 2 bwd matmuls per step = 3 * 2N^3 * T (within fusion slack)
+    want = 3 * 2 * N ** 3 * T
+    assert 0.6 * want <= got <= 1.5 * want, (got, want)
+
+
+def test_structural_bytes_decode_dominated_by_kv():
+    from repro.config import SHAPES_BY_NAME
+    from repro.configs import get_config
+    from repro.launch.mesh import make_mesh
+    from repro.config import MeshConfig
+
+    # tiny mesh object just for shard math (no devices needed for sizes)
+    import numpy as _np
+    from jax.sharding import Mesh
+
+    devs = _np.asarray(jax.devices() * 1)[:1].reshape(1, 1)
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    cfg = get_config("qwen3-32b")
+    out = structural_bytes(cfg, SHAPES_BY_NAME["decode_32k"], FakeMesh())
+    assert out["kv_read"] > 0.5 * out["total"]
+    # structural kv read matches first-principles arithmetic
+    want = cfg.kv_bytes_per_token() * 32768 * 128 / 256
+    assert out["kv_read"] == pytest.approx(want)
+
+
+def test_collective_wire_accounting(run_sub=None):
+    hlo = """
+HloModule test
+
+ENTRY %main (p: f32[1024]) -> f32[1024] {
+  %p = f32[1024]{0} parameter(0)
+  ROOT %ar = f32[1024]{0} all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+    stats = parse_collectives(hlo)
+    # ring all-reduce: 2 * bytes * (n-1)/n
+    want = 2 * 4096 * 3 / 4
+    assert stats.weighted_bytes() == pytest.approx(want)
+    assert stats.count_by_op["all-reduce"] == 1
+
+
+def test_dryrun_artifacts_complete():
+    """The checked-in dry-run artifacts cover every assigned cell on both
+    meshes (deliverable (e))."""
+    import glob
+    import json
+    import os
+
+    from repro.config import shapes_for_arch
+    from repro.configs import ARCH_NAMES, get_config
+
+    d = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+    if not os.path.isdir(d):
+        pytest.skip("dry-run artifacts not generated yet")
+    for mesh in ("16x16", "2x16x16"):
+        for arch in ARCH_NAMES:
+            for shape in shapes_for_arch(get_config(arch)):
+                path = os.path.join(d, f"{arch}__{shape.name}__{mesh}.json")
+                assert os.path.exists(path), f"missing {path}"
+                with open(path) as f:
+                    art = json.load(f)
+                assert art["ok"]
+                assert art["chips"] == (512 if mesh == "2x16x16" else 256)
+                r = art["roofline"]
+                assert r["bottleneck"] in ("compute", "memory", "collective")
+                assert art["resident_bytes_per_chip"] < 16e9, \
+                    f"{arch}/{shape.name}/{mesh} resident over 16GB/chip"

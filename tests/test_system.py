@@ -1,0 +1,66 @@
+"""End-to-end system behaviour: the launchers run, the benchmark entry
+points produce their tables, and multi-arch serving works in-process."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.abspath(os.path.join(HERE, ".."))
+
+
+def run_cli(args, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + ROOT
+    out = subprocess.run([sys.executable] + args, capture_output=True, text=True,
+                         timeout=timeout, env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+def test_serve_launcher_end_to_end():
+    out = run_cli(["-m", "repro.launch.serve", "--arch", "qwen3-0.6b", "--smoke",
+                   "--n", "6", "--rate", "8", "--device-pages", "24",
+                   "--host-pages", "64", "--policy", "neo"])
+    assert '"requests": 6' in out
+    assert "scheduler modes" in out
+
+
+def test_train_launcher_checkpoint_restart(tmp_path):
+    ck = str(tmp_path / "ck")
+    out1 = run_cli(["-m", "repro.launch.train", "--arch", "qwen3-0.6b", "--smoke",
+                    "--steps", "30", "--batch", "4", "--seq", "32",
+                    "--ckpt", ck, "--ckpt-every", "10"])
+    lines = [json.loads(l) for l in out1.splitlines() if l.startswith("{")]
+    assert lines[-1]["loss"] < lines[0]["loss"]
+    # relaunch: resumes from step 30 checkpoint and continues
+    out2 = run_cli(["-m", "repro.launch.train", "--arch", "qwen3-0.6b", "--smoke",
+                    "--steps", "40", "--batch", "4", "--seq", "32",
+                    "--ckpt", ck, "--ckpt-every", "10"])
+    assert "resumed from step 30" in out2
+
+
+def test_fig9_quick_benchmark():
+    out = run_cli(["-m", "benchmarks.fig9_lengths", "--quick", "--n", "40"])
+    assert "peak gain" in out
+
+
+def test_mini_multiarch_serving(rng):
+    """Several archs through the real engine in one process."""
+    import jax
+    from repro.config import EngineConfig
+    from repro.configs import get_smoke_config
+    from repro.core.engine import NeoEngine
+
+    for arch in ("yi-9b", "deepseek-moe-16b"):
+        cfg = get_smoke_config(arch)
+        eng = NeoEngine(cfg, EngineConfig(device_pool_pages=12, host_pool_pages=48,
+                                          max_batch_tokens=128, policy="neo"),
+                        rng=jax.random.key(0))
+        rids = [eng.submit(list(map(int, rng.integers(1, 400, size=9 + 3 * i))), 5)
+                for i in range(3)]
+        out = eng.run_until_done(200)
+        assert all(len(out[r]) == 5 for r in rids), arch
