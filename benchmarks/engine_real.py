@@ -17,12 +17,13 @@ import numpy as np
 from benchmarks.common import print_table, save_json
 from repro.config import EngineConfig
 from repro.configs import get_smoke_config
-from repro.core.engine import NeoEngine
+from repro.core.engine import EngineStats, NeoEngine
+from repro.core.transfer import TransferStats
 from repro.models.api import get_model
 from repro.serving.traces import get_trace
 
 
-def run(policy: str, n: int, seed: int = 0):
+def run(policy: str, n: int, seed: int = 0, pipeline: bool = True):
     cfg = get_smoke_config("qwen3-0.6b")
     model = get_model(cfg)
     import jax
@@ -30,24 +31,45 @@ def run(policy: str, n: int, seed: int = 0):
     params = model.init(jax.random.key(seed))
     ecfg = EngineConfig(
         device_pool_pages=24, host_pool_pages=128, max_batch_tokens=1024,
-        policy=policy, seed=seed,
+        policy=policy, pipeline=pipeline, seed=seed,
     )
     eng = NeoEngine(cfg, ecfg, params=params)
     rng = np.random.default_rng(seed)
-    trace = get_trace("osc", n, 1e9, seed)  # all at once
-    total_tokens = 0
-    for t in trace:
-        t.prompt_len = min(t.prompt_len, 256)
-        t.output_len = min(t.output_len, 16)
+    # Warmup: a burst big enough to trigger offload (device pool pressure),
+    # exercising the prefill/decode/swap graph buckets so the timed section
+    # measures steady-state serving throughput rather than XLA compile time
+    # (the paper's figures report sustained serving).
+    warm = get_trace("osc", 6, 1e9, seed + 1)
+    for t in warm:
+        t.prompt_len = 256
+        t.output_len = 16
         t.materialise(rng, cfg.vocab_size)
         eng.submit(t.prompt, t.output_len)
+    eng.run_until_done(max_iters=2000)
+    eng.stats = EngineStats()
+    if eng.pool is not None:
+        eng.pool.swap_bytes = 0
+    if eng.transfer is not None:
+        eng.transfer.stats = TransferStats()
+
+    trace = get_trace("osc", n, 1e9, seed)  # all at once
+    total_tokens = 0
+    rids = []
+    for t in trace:
+        t.prompt_len = min(t.prompt_len, 256)
+        # decode-heavy outputs (the paper's code/conv traces decode hundreds
+        # of tokens per request — decode is where the asymmetric overlap acts)
+        t.output_len = min(t.output_len, 64)
+        t.materialise(rng, cfg.vocab_size)
+        rids.append(eng.submit(t.prompt, t.output_len))
         total_tokens += t.prompt_len + t.output_len
     t0 = time.perf_counter()
     eng.run_until_done(max_iters=5000)
     wall = time.perf_counter() - t0
-    done = sum(1 for r in eng.requests.values() if r.state.name == "FINISHED")
-    return {
+    done = sum(1 for rid in rids if eng.requests[rid].state.name == "FINISHED")
+    out = {
         "policy": policy,
+        "pipeline": pipeline,
         "requests_done": done,
         "token_throughput": round(total_tokens / wall, 1),
         "wall_s": round(wall, 2),
@@ -57,22 +79,35 @@ def run(policy: str, n: int, seed: int = 0):
         "swap_MB": round(eng.pool.swap_bytes / 1e6, 1) if eng.pool else 0,
         "modes": dict(eng.stats.mode_counts),
         "host_busy_s": round(eng.stats.host_busy_time, 2),
+        "device_busy_s": round(eng.stats.device_busy_time, 2),
+        "overlap_s": round(eng.stats.pipeline_overlap_time, 3),
+        "bubble_fraction": round(eng.stats.bubble_fraction, 3),
+        "swap_hidden_MB": round(eng.stats.swap_hidden_bytes / 1e6, 3),
     }
+    eng.close()
+    return out
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=12)
+    ap.add_argument("--n", type=int, default=24)
     args = ap.parse_args(argv)
     rows = []
     results = {}
-    for pol in ("gpu_only", "neo", "fastdecode"):
-        r = run(pol, args.n)
-        results[pol] = r
-        rows.append([r["policy"], r["requests_done"], r["token_throughput"],
-                     r["iterations"], r["offloaded"], r["device"], r["swap_MB"]])
+    # neo runs twice: serial reference first, then pipelined (the default) —
+    # the delta is the realized (not modelled) overlap win.  Serial runs
+    # first so the process-global op caches it warms don't bias against it.
+    for pol, pipe in (("gpu_only", True), ("neo", False), ("neo", True),
+                      ("fastdecode", True)):
+        r = run(pol, args.n, pipeline=pipe)
+        key = pol if pipe else pol + "_serial"
+        results[key] = r
+        rows.append([key, r["requests_done"], r["token_throughput"],
+                     r["iterations"], r["offloaded"], r["device"],
+                     r["swap_MB"], r["overlap_s"], r["bubble_fraction"]])
     print("=== Real engine (smoke qwen3-0.6b, OSC burst, this host) ===")
-    print_table(["policy", "done", "tok/s", "iters", "offl dec", "dev dec", "swap MB"], rows)
+    print_table(["policy", "done", "tok/s", "iters", "offl dec", "dev dec",
+                 "swap MB", "overlap s", "bubble"], rows)
     save_json("engine_real.json", results)
     return 0
 

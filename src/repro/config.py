@@ -260,6 +260,11 @@ class EngineConfig:
     # "fastdecode" (offload ALL decode attention — the FastDecode+ baseline),
     # "simple" (strawman #1: offload w/o overlap).
     policy: str = "neo"
+    # Pipelined plan→launch→join execution (async TransferEngine swaps +
+    # batch-1 host attention overlapped with batch-0's device dispatch).
+    # Default for paged families; False forces the serial reference path.
+    # "serial"-mode plans (policy="simple") always execute serially.
+    pipeline: bool = True
     # Perf-model refresh rate (EWMA) — also the straggler-mitigation knob.
     ewma_alpha: float = 0.2
     # Force a host request into batch-1 after this many consecutive skips

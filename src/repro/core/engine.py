@@ -1,8 +1,23 @@
 """NeoEngine — the online serving engine (continuous batching + NEO offload).
 
-One :meth:`step` = one inference iteration (Fig. 5): the load-aware scheduler
-builds a plan; KV swaps execute; the prefill sub-batch and the decode
-sub-batches run; new tokens are sampled; finished requests release pages.
+One :meth:`step` = one inference iteration (Fig. 5), executed in explicit
+**plan → launch → join** phases:
+
+* **plan** — the load-aware scheduler builds the two-batch asymmetric plan.
+* **launch** — KV swaps start on the :class:`TransferEngine`'s background
+  worker (page-granular, layer-wise); queue moves commit; the prefill
+  sub-batch dispatches while those copies are in flight.
+* **join** — batch-1's host attention runs on its own thread concurrently
+  with batch-0's jitted device dispatch (swap-outs join on the batch-1 thread
+  right before host attention reads the pages; swap-ins join on the engine
+  thread right before the device graph consumes the pool); both lanes'
+  logits join and new tokens are sampled in plan order, so greedy decode is
+  bitwise identical to the serial path (``pipeline=False``).
+
+:class:`EngineStats` records the *measured* overlap (pipeline bubble
+fraction, swap bytes hidden under compute, host-vs-device busy time), which
+also feeds :meth:`PerfModel.observe_iteration` so calibration sees real
+rather than modelled stage times.
 
 Fault tolerance: every accepted request is journaled (prompt + sampling params
 + emitted tokens).  :meth:`export_journal` / :meth:`replay_journal` implement
@@ -28,6 +43,7 @@ from repro.core.kv_cache import DualPool
 from repro.core.perfmodel import PerfModel
 from repro.core.request import Request, RequestState
 from repro.core.scheduler import BatchPlan, NeoScheduler, PoolView
+from repro.core.transfer import TransferEngine
 from repro.models.api import get_model
 
 PAGED_FAMILIES = ("dense", "moe", "vlm")
@@ -43,12 +59,40 @@ class EngineStats:
     device_decodes: int = 0
     wall_time: float = 0.0
     host_busy_time: float = 0.0
+    # -- measured pipeline overlap (Fig. 5, realized) ----------------------
+    # device_busy_time: wall time of prefill + batch-0 dispatches (the lane
+    # batch-1 is supposed to hide under).
+    device_busy_time: float = 0.0
+    # pipeline_overlap_time: measured intersection of the batch-0 and
+    # batch-1 dispatch windows; pipeline_ideal_time: the shorter lane's
+    # duration (perfect pipelining would hide all of it).
+    pipeline_overlap_time: float = 0.0
+    pipeline_ideal_time: float = 0.0
+    pipelined_steps: int = 0
+    # -- transfer engine mirror (async swaps) ------------------------------
+    swap_out_bytes: int = 0
+    swap_in_bytes: int = 0
+    swap_hidden_bytes: int = 0  # copies that finished before anyone joined
+    swap_wait_time: float = 0.0  # time the compute lanes blocked on joins
     plans: List[str] = field(default_factory=list)
 
     def record_plan(self, plan: BatchPlan) -> None:
         self.mode_counts[plan.mode] = self.mode_counts.get(plan.mode, 0) + 1
         if len(self.plans) < 1000:
             self.plans.append(plan.summary())
+
+    @property
+    def bubble_fraction(self) -> float:
+        """1 - realized/ideal overlap across pipelined steps (0 = no bubble)."""
+        if self.pipeline_ideal_time <= 0:
+            return 0.0
+        return max(0.0, 1.0 - self.pipeline_overlap_time / self.pipeline_ideal_time)
+
+    @property
+    def host_device_busy_ratio(self) -> float:
+        if self.device_busy_time <= 0:
+            return 0.0
+        return self.host_busy_time / self.device_busy_time
 
 
 class NeoEngine:
@@ -79,6 +123,7 @@ class NeoEngine:
             self.executor = PagedExecutor(
                 self.model, params, self.pool, self.host_attn, impl=kernel_impl
             )
+            self.transfer = TransferEngine(self.pool)
             self._page = cfg.kv_block_size
         else:
             slots = min(engine_cfg.max_requests, 64)
@@ -89,6 +134,7 @@ class NeoEngine:
             self._page = capacity  # 1 "page" == 1 slot in scheduler accounting
             self.pool = None
             self.host_attn = None
+            self.transfer = None
         self._rng = np.random.default_rng(engine_cfg.seed)
         self._next_rid = 0
         self.requests: Dict[int, Request] = {}
@@ -205,13 +251,17 @@ class NeoEngine:
         now = self.clock if now is None else now
         self.clock = now
         host_busy0 = self.host_attn.busy_time if self.host_attn else 0.0
+        dev_busy0 = self.stats.device_busy_time
+        swap_busy0 = self.transfer.stats.busy_time if self.transfer else 0.0
 
+        # -- PLAN --------------------------------------------------------------
         plan = self.scheduler.plan(self._pool_view())
         if plan.is_empty():
             return []
         self.stats.iterations += 1
         self.stats.record_plan(plan)
 
+        # -- LAUNCH / DISPATCH / JOIN (paged) ----------------------------------
         emitted: List[Tuple[int, int]] = []
         if self.paged:
             self._step_paged(plan, now, emitted)
@@ -224,69 +274,178 @@ class NeoEngine:
                 self._finish(req, now)
         self.scheduler.remove_finished()
 
-        # -- perf-model refresh (EWMA; straggler mitigation) -------------------
+        # -- perf-model refresh from MEASURED stage times (EWMA; straggler
+        #    mitigation) — the pipelined path reports real overlap, not the
+        #    modelled one ------------------------------------------------------
         t_iter = time.perf_counter() - t0
         self.stats.wall_time += t_iter
+        host_busy = 0.0
         if self.host_attn:
             host_busy = self.host_attn.busy_time - host_busy0
             self.stats.host_busy_time += host_busy
-            st, L = plan.stages, self.cfg.num_layers
-            pred_host = L * (st.t_ca0 + st.t_ca1)
-            if pred_host > 0 and host_busy > 0:
-                self.perf.observe("cpu_attn", pred_host, host_busy)
+        if self.transfer:
+            ts = self.transfer.stats
+            self.stats.swap_out_bytes = ts.bytes_out
+            self.stats.swap_in_bytes = ts.bytes_in
+            self.stats.swap_wait_time = ts.wait_time
+        if self.paged:
+            self.perf.observe_iteration(
+                plan.stages,
+                host_busy=host_busy,
+                device_busy=self.stats.device_busy_time - dev_busy0,
+                swap_busy=(self.transfer.stats.busy_time - swap_busy0)
+                if self.transfer else 0.0,
+                pipelined=self.engine_cfg.pipeline and plan.mode != "serial",
+            )
         return emitted
 
     # -- paged families ------------------------------------------------------
     def _step_paged(self, plan: BatchPlan, now: float, emitted: List[Tuple[int, int]]) -> None:
-        # 1. recompute preemption (both pools full): drop KV, requeue
+        # "serial"-mode plans (strawman #1) must execute without overlap by
+        # definition; everything else pipelines when enabled.
+        pipelined = self.engine_cfg.pipeline and plan.mode != "serial"
+
+        # ==== LAUNCH phase ==================================================
+        # recompute preemption (both pools full): drop KV, requeue
         for r in plan.preempt:
             pool = self.pool.device if r.location == "gpu" else self.pool.host
             pool.free(r.pages)
             r.pages = []
             r.location = "gpu"
-        # 2. swaps (whole-request KV moves; layer-wise overlap is modelled)
-        for r in plan.swap_out:
-            self.pool.swap_request(r, "cpu")
-        for r in plan.swap_in:
-            self.pool.swap_request(r, "gpu")
+        # swaps: page accounting moves now; the data moves on the transfer
+        # worker (pipelined) or inline (serial)
+        out_handles: List = []
+        in_handles: List = []
+        if pipelined:
+            out_handles = [self.transfer.swap_out(r) for r in plan.swap_out]
+            in_handles = [self.transfer.swap_in(r) for r in plan.swap_in]
+        else:
+            for r in plan.swap_out:
+                self.pool.swap_request(r, "cpu")
+            for r in plan.swap_in:
+                self.pool.swap_request(r, "gpu")
         self.scheduler.commit(plan)
+        dispatch_t0 = time.perf_counter()  # compute-window start (hidden-bytes)
 
-        # 3. prefill sub-batch (integrated into batch-0); replayed prefills
-        #    (recompute preemption) re-derive their last token deterministically
-        #    and must not emit it twice
-        if plan.prefill:
-            page = self._page
-            to_host: List[bool] = []
-            for r in plan.prefill:
-                host = r in plan.prefill_to_host
-                npages = -(-r.prefill_len // page)
+        # ==== DISPATCH phase ================================================
+        # Page allocation happens up front, in the SAME order as the serial
+        # path (prefill pages, then decode-row pages in gpu/cpu0/cpu1 plan
+        # order) — identical page assignment keeps greedy decode bitwise
+        # identical.  Replayed prefills (recompute preemption) re-derive
+        # their last token deterministically and must not emit it twice.
+        page = self._page
+        to_host: List[bool] = []
+        for r in plan.prefill:
+            host = r in plan.prefill_to_host
+            npages = -(-r.prefill_len // page)
+            pool = self.pool.host if host else self.pool.device
+            r.pages = pool.alloc(npages)
+            to_host.append(host)
+
+        def _running(rs: List[Request]) -> List[Request]:
+            return [r for r in rs
+                    if r.state == RequestState.RUNNING and r not in plan.prefill]
+
+        rows0 = _running(plan.decode_gpu) + _running(plan.decode_cpu0)
+        rows1 = _running(plan.decode_cpu1)
+        rows = rows0 + rows1
+        b1_end: Optional[float] = None
+        host_flags: List[bool] = []
+        for r in rows:
+            host = r.location == "cpu"
+            if r.kv_len % page == 0 and r.kv_len // page >= len(r.pages):
                 pool = self.pool.host if host else self.pool.device
-                r.pages = pool.alloc(npages)
-                to_host.append(host)
+                r.pages = r.pages + pool.alloc(1)
+            host_flags.append(host)
+
+        # batch-1 (host rows) launches FIRST: its swap-out join + host
+        # attention overlap the whole device lane (prefill is integrated
+        # into batch-0 — Fig. 5's T_l0 covers it).  With no device lane to
+        # hide under, batch-1 runs inline — a future would only add thread
+        # handoff latency.
+        b1_future = None
+        b1_inline = False
+        if pipelined and rows1:
+            if plan.prefill or rows0:
+                pre_b1 = (lambda: self.transfer.join(out_handles)) \
+                    if out_handles else None
+                b1_future = self.executor.submit_batch1(rows1, pre_b1=pre_b1)
+            else:
+                b1_inline = True
+
+        # device lane: prefill sub-batch, then batch-0's fused decode graph.
+        # Each dispatch's (start, end) window is kept separately so overlap
+        # accounting excludes the engine-thread gap between them (joins,
+        # prefill emits) — the device is idle there.
+        dev_windows: List[Tuple[float, float]] = []
+        if plan.prefill:
+            t0 = time.perf_counter()
             logits = self.executor.prefill(plan.prefill, to_host, self._extras_batch)
+            dev_windows.append((t0, time.perf_counter()))
+            self.stats.device_busy_time += dev_windows[-1][1] - t0
             self.stats.prefill_tokens += sum(r.prefill_len for r in plan.prefill)
             for i, r in enumerate(plan.prefill):
                 if not r.out_tokens:
                     self._emit(r, logits[i], now, emitted)
 
-        # 3. decode sub-batches (batch-0 device+host rows, batch-1 host rows —
-        #    one fused dispatch; see executor docstring for the overlap note)
-        rows = [r for r in plan.decode_rows if r.state == RequestState.RUNNING
-                and r not in plan.prefill]
         if rows:
-            page = self._page
-            host_flags: List[bool] = []
-            for r in rows:
-                host = r.location == "cpu"
-                if r.kv_len % page == 0 and r.kv_len // page >= len(r.pages):
-                    pool = self.pool.host if host else self.pool.device
-                    r.pages = r.pages + pool.alloc(1)
-                host_flags.append(host)
-            logits = self.executor.decode(rows, host_flags)
+            if pipelined:
+                # swap-ins join here, before batch-0's graph consumes (and
+                # donates) the pool; swap-outs join on the batch-1 thread
+                self.transfer.join(in_handles)
+                logits0 = None
+                if rows0:
+                    t0 = time.perf_counter()
+                    logits0 = self.executor.decode_batch0(
+                        rows0, host_flags[: len(rows0)])
+                    dev_windows.append((t0, time.perf_counter()))
+                    self.stats.device_busy_time += dev_windows[-1][1] - t0
+                row_logits: List[np.ndarray] = []
+                if rows0:
+                    row_logits.extend(np.asarray(logits0))
+                if b1_future is not None:
+                    logits1, (s1, e1) = b1_future.result()
+                    b1_end = e1
+                    row_logits.extend(np.asarray(logits1))
+                    if dev_windows:
+                        self.stats.pipeline_overlap_time += sum(
+                            max(0.0, min(e, e1) - max(s, s1))
+                            for s, e in dev_windows)
+                        self.stats.pipeline_ideal_time += min(
+                            sum(e - s for s, e in dev_windows), e1 - s1)
+                        self.stats.pipelined_steps += 1
+                elif b1_inline:
+                    self.transfer.join(out_handles)
+                    row_logits.extend(np.asarray(
+                        self.executor.decode_batch1(rows1)))
+                    b1_end = time.perf_counter()
+            else:
+                t0 = time.perf_counter()
+                logits = self.executor.decode(rows, host_flags)
+                dev_windows.append((t0, time.perf_counter()))
+                self.stats.device_busy_time += dev_windows[-1][1] - t0
+                row_logits = list(logits)
+
             self.stats.offloaded_decodes += sum(host_flags)
             self.stats.device_decodes += len(rows) - sum(host_flags)
             for i, r in enumerate(rows):
-                self._emit(r, logits[i], now, emitted)
+                self._emit(r, row_logits[i], now, emitted)
+
+        # ==== JOIN phase ====================================================
+        # barrier on any transfer not consumed by a dependent dispatch (e.g.
+        # gpu_only swap-outs whose victims do not decode this iteration) so
+        # every step ends with pools fully consistent
+        if pipelined:
+            self.transfer.drain()
+            # bytes hidden under compute: copy-window overlap with this
+            # step's dispatch window (page-table building + prefill + both
+            # decode lanes)
+            dev_end = dev_windows[-1][1] if dev_windows else None
+            win_end = max(filter(None, (dev_end, b1_end)), default=None)
+            if win_end is not None:
+                for h in out_handles + in_handles:
+                    self.stats.swap_hidden_bytes += int(
+                        h.nbytes * h.hidden_fraction(dispatch_t0, win_end))
 
     # -- contiguous families ---------------------------------------------------
     def _step_contiguous(self, plan: BatchPlan, now: float, emitted: List[Tuple[int, int]]) -> None:
@@ -310,6 +469,16 @@ class NeoEngine:
             self.stats.device_decodes += len(rows)
             for r in rows:
                 self._emit(r, logits[r.pages[0]], now, emitted)
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def close(self) -> None:
+        """Join and stop the background transfer/dispatch threads."""
+        if self.transfer is not None:
+            self.transfer.close()
+        if self.paged:
+            self.executor.close()
 
     # ------------------------------------------------------------------
     # drivers

@@ -3,29 +3,38 @@
 Two executors:
 
 * :class:`PagedExecutor` — dense / moe / vlm families.  Decode runs over the
-  paged dual-pool KV cache: device rows attend via the paged-attention kernel
-  (Pallas on TPU, jnp oracle here); host rows detour through an **ordered
-  io_callback** to :class:`HostAttention` per layer — the JAX-native analogue
-  of the paper's TrQKV → CPU-attn → TrO per-layer pipeline.  The whole decode
-  step is ONE jitted graph per (rows, pages) bucket, so Python kernel-launch
-  overhead is paid once per iteration (the paper's §4 launch-overhead fix,
-  achieved with XLA fusion instead of CUDA C++).
+  paged dual-pool KV cache in two separately dispatched sub-batches:
+
+  - **batch-0** (device rows + ``cpu0`` host rows): ONE jitted graph per
+    (rows, pages) bucket — device rows attend via the paged-attention kernel
+    (Pallas on TPU, jnp oracle here); its host rows detour through an
+    **ordered io_callback** to :class:`HostAttention` per layer (the
+    JAX-native analogue of the paper's TrQKV → CPU-attn → TrO pipeline).
+    Python kernel-launch overhead is paid once per iteration (the paper's §4
+    launch-overhead fix, achieved with XLA fusion instead of CUDA C++).
+  - **batch-1** (host rows only): a per-layer loop driven from a dedicated
+    dispatch thread — small jitted linear stages plus direct
+    :meth:`HostAttention.run_layer` calls on its thread pool.  Because it
+    never touches the device KV pool, it runs **concurrently** with batch-0's
+    jitted dispatch; :meth:`submit_batch1` hands the result back through a
+    future (Fig. 5's asymmetric overlap, realized rather than modelled).
+
+  The serial :meth:`decode` path (all rows in one fused graph) is kept for
+  ``pipeline=False`` and as the bitwise-equality oracle for the pipelined
+  path.
 
 * :class:`ContiguousExecutor` — ssm / hybrid / audio families (and any arch
   with ``supports_offload=False``).  Slot-based contiguous caches driven by
   the model's own prefill/decode; device-only scheduling (NEO's degradation
   mode — there is no growing KV to offload).
-
-Execution-order note (recorded per DESIGN.md §7): this container has one CPU
-backend, so batch-0 and batch-1 dispatch sequentially; on a TPU VM the two
-jitted graphs + host executor threads overlap exactly as Figure 5 — the
-wall-clock gain of that overlap is what the calibrated simulator models.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +77,13 @@ class PagedExecutor:
         self._cb_state: Dict[str, np.ndarray] = {}
         self._decode_fns: Dict[Tuple[int, int], Any] = {}
         self._prefill_fns: Dict[Tuple[int, int], Any] = {}
+        # batch-1 lane: dedicated dispatch thread + its own fused host-only
+        # graph per row bucket, with a SEPARATE io_callback/state pair so the
+        # two graphs can execute concurrently without sharing mutable state
+        self._b1_pool = ThreadPoolExecutor(max_workers=1,
+                                           thread_name_prefix="neo-batch1")
+        self._cb_state1: Dict[str, np.ndarray] = {}
+        self._b1_fn: Optional[Any] = None
 
     # ------------------------------------------------------------------
     # host attention callback (one per layer, ordered)
@@ -93,13 +109,32 @@ class PagedExecutor:
     # ------------------------------------------------------------------
     # decode step graph
     # ------------------------------------------------------------------
-    def _layer_step(self, p: Params, kind: str, lidx, x, pool_k, pool_v,
-                    tokens_meta) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    # The per-layer step is split into pre (norm + QKV projection) and post
+    # (output projection + FFN) halves shared VERBATIM by the fused batch-0
+    # graph and the batch-1 lane — op-for-op identity is what keeps the
+    # pipelined path bitwise equal to the serial one.
+    def _layer_pre(self, p: Params, x, positions):
         cfg = self.cfg
-        (positions, dev_bt, dev_lens, is_host, page_ids, offsets) = tokens_meta
         h = rms_norm(x, p["ln1"], cfg.rms_eps)
         q, k, v = project_qkv(p["attn"], cfg, h[:, None, :], positions[:, None])
-        q, k, v = q[:, 0], k[:, 0], v[:, 0]  # [D,H,hd], [D,KV,hd]
+        return q[:, 0], k[:, 0], v[:, 0]  # [D,H,hd], [D,KV,hd]
+
+    def _layer_post(self, kind: str, p: Params, x, o):
+        cfg = self.cfg
+        out = jnp.einsum("bhk,hkd->bd", o, p["attn"]["wo"])
+        x = x + out
+        h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+        if kind == "moe":
+            m, _ = moe_apply(p["moe"], h2[:, None, :], cfg.moe)
+            m = m[:, 0]
+        else:
+            m = swiglu_apply(p["mlp"], h2)
+        return x + m
+
+    def _layer_step(self, p: Params, kind: str, lidx, x, pool_k, pool_v,
+                    tokens_meta) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        (positions, dev_bt, dev_lens, is_host, page_ids, offsets) = tokens_meta
+        q, k, v = self._layer_pre(p, x, positions)
 
         # -- device pool append (host rows masked out; they go to scratch) ----
         valid = ~is_host
@@ -125,15 +160,7 @@ class PagedExecutor:
             ordered=True,
         )
         o = jnp.where(is_host[:, None, None], host_out.astype(dev_out.dtype), dev_out)
-        out = jnp.einsum("bhk,hkd->bd", o, p["attn"]["wo"])
-        x = x + out
-        h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
-        if kind == "moe":
-            m, _ = moe_apply(p["moe"], h2[:, None, :], cfg.moe)
-            m = m[:, 0]
-        else:
-            m = swiglu_apply(p["mlp"], h2)
-        return x + m, pool_k, pool_v
+        return self._layer_post(kind, p, x, o), pool_k, pool_v
 
     def _build_decode(self, D: int, MP: int):
         model, cfg = self.model, self.cfg
@@ -235,6 +262,147 @@ class PagedExecutor:
         )
         return np.asarray(logits[:n])
 
+    # batch-0 is the fused graph over device + cpu0 rows — exactly the serial
+    # entry restricted to its sub-batch.
+    decode_batch0 = decode
+
+    # ------------------------------------------------------------------
+    # batch-1 lane (host rows only; runs off the engine thread)
+    # ------------------------------------------------------------------
+    def _host_cb1(self, layer, q, k_new, v_new):
+        st = self._cb_state1
+        layer = int(layer)
+        if st["host_rows"].size == 0:
+            return np.zeros(q.shape, np.float32)
+        return self.host.run_layer(
+            layer,
+            np.asarray(q),
+            np.asarray(k_new),
+            np.asarray(v_new),
+            host_rows=st["host_rows"],
+            tables=st["tables"],
+            lens=st["lens"],
+            page_ids=st["page_ids"],
+            offsets=st["offsets"],
+            window=int(st["window"][0]) if "window" in st else 0,
+        )
+
+    def _build_decode_b1(self):
+        """Fused decode graph for an all-host-rows batch: the per-layer pre
+        and post halves are shared with the batch-0 graph; attention is the
+        ordered host callback only — no device pool access, no donation, so
+        the graph can execute concurrently with batch-0's.  One jit object;
+        jax retraces per row bucket."""
+        model, cfg = self.model, self.cfg
+
+        def layer(p: Params, kind: str, lidx, x, positions):
+            q, k, v = self._layer_pre(p, x, positions)
+            host_out = io_callback(
+                self._host_cb1,
+                jax.ShapeDtypeStruct(q.shape, jnp.float32),
+                lidx, q, k, v,
+                ordered=True,
+            )
+            # same cast the batch-0 graph applies to host rows (pool dtype ==
+            # activation dtype)
+            o = host_out.astype(cfg.activation_dtype)
+            return self._layer_post(kind, p, x, o)
+
+        def step(params, tokens, positions):
+            x = embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
+            for i, kind in enumerate(model.prefix_kinds):
+                x = layer(params[f"prefix{i}"], kind, jnp.int32(i), x, positions)
+            n_prefix = len(model.prefix_kinds)
+            r = len(model.repeat_kinds)
+
+            def group_body(carry, gp):
+                x, base = carry
+                for j, kind in enumerate(model.repeat_kinds):
+                    x = layer(gp[f"sub{j}"], kind, base + j, x, positions)
+                return (x, base + r), None
+
+            (x, _), _ = jax.lax.scan(
+                group_body, (x, jnp.int32(n_prefix)), params["blocks"]
+            )
+            x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+            return logits_last(x, model._unembed(params))
+
+        return jax.jit(step)
+
+    def decode_b1_fn(self):
+        if self._b1_fn is None:
+            self._b1_fn = self._build_decode_b1()
+        return self._b1_fn
+
+    def decode_batch1(self, rows: List[Request], window: int = 0) -> np.ndarray:
+        """One decode iteration over host-resident ``rows`` (batch-1).
+
+        One fused jitted dispatch whose per-layer host attention (append new
+        KV token + attend over the host pool) runs through its OWN ordered
+        callback chain on :class:`HostAttention`.  Never touches the device
+        KV pool, so it is safe to run concurrently with
+        :meth:`decode_batch0` — that concurrency is the
+        batch-1-hides-under-batch-0 overlap of Fig. 5.
+        """
+        n = len(rows)
+        D = _bucket(n)
+        page = self.page
+        tokens = np.zeros((D,), np.int32)
+        positions = np.zeros((D,), np.int32)
+        max_hp = max(len(r.pages) for r in rows)
+        tables = np.zeros((n, max_hp), np.int32)
+        lens = np.zeros((n,), np.int32)
+        pids = np.zeros((n,), np.int32)
+        offs = np.zeros((n,), np.int32)
+        for i, r in enumerate(rows):
+            pos = r.kv_len
+            tokens[i] = r.all_tokens[-1]
+            positions[i] = pos
+            tables[i, : len(r.pages)] = r.pages
+            lens[i] = pos
+            pids[i] = r.pages[pos // page]
+            offs[i] = pos % page
+        self._cb_state1 = {
+            "host_rows": np.arange(n, dtype=np.int64),
+            "tables": tables,
+            "lens": lens,
+            "page_ids": pids,
+            "offsets": offs,
+            "window": np.asarray([window], np.int32),
+        }
+        logits = self.decode_b1_fn()(self.params, tokens, positions)
+        return np.asarray(logits[:n])
+
+    # ------------------------------------------------------------------
+    # pipelined dispatch (futures-based handoff)
+    # ------------------------------------------------------------------
+    def submit_batch1(
+        self,
+        rows: List[Request],
+        window: int = 0,
+        *,
+        pre_b1: Optional[Callable[[], None]] = None,
+    ) -> Future:
+        """Launch batch-1 on its dispatch thread; the future resolves to
+        ``(logits [n,V], (start, end))`` perf_counter stamps.
+
+        ``pre_b1`` runs on the batch-1 thread before any page is read — the
+        engine passes the swap-out join there, so PCIe transfers complete
+        exactly when (and only when) the dependent host attention needs them.
+        """
+
+        def run_b1() -> Tuple[np.ndarray, Tuple[float, float]]:
+            t0 = time.perf_counter()
+            if pre_b1 is not None:
+                pre_b1()
+            out = self.decode_batch1(rows, window)
+            return out, (t0, time.perf_counter())
+
+        return self._b1_pool.submit(run_b1)
+
+    def close(self) -> None:
+        self._b1_pool.shutdown(wait=True)
+
     # ------------------------------------------------------------------
     # prefill
     # ------------------------------------------------------------------
@@ -290,9 +458,12 @@ class PagedExecutor:
             kr = kr.reshape(kr.shape[0], npages, page, *kr.shape[2:])
             vr = vr.reshape(vr.shape[0], npages, page, *vr.shape[2:])
             if host:
-                self.pool.host.put_pages(r.pages, np.asarray(kr, np.float32),
-                                         np.asarray(vr, np.float32))
-                self.pool.swap_bytes += kr.size * 2 * 2  # layer-wise PCIe swap
+                host_dt = self.pool.host.k.dtype
+                k_host = np.asarray(kr, host_dt)
+                v_host = np.asarray(vr, host_dt)
+                self.pool.host.put_pages(r.pages, k_host, v_host)
+                # layer-wise PCIe swap of the freshly computed KV
+                self.pool.add_swap_bytes(k_host.nbytes + v_host.nbytes)
             else:
                 self.pool.device.put_pages(r.pages, kr, vr)
         return np.asarray(logits)

@@ -19,6 +19,7 @@ decode step); in this container it is the literal execution path.
 
 from __future__ import annotations
 
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import List, Optional, Sequence, Tuple
@@ -59,8 +60,11 @@ class HostAttention:
             ThreadPoolExecutor(max_workers=self.threads) if self.threads > 1 else None
         )
         # instrumentation (perf-model calibration + paper §5.5 bandwidth study)
+        # — lock-protected: batch-0's io_callback and the batch-1 lane may
+        # run concurrently from different threads
         self.busy_time = 0.0
         self.bytes_read = 0
+        self._acct_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def _row_attention(self, layer: int, q_row: np.ndarray, table: np.ndarray,
@@ -86,7 +90,8 @@ class HostAttention:
             v = self.pool_v[layer, ids].reshape(-1, KV, hd)
             lo, hi = p0 * self.page, min(p1 * self.page, n_tokens)
             k, v = k[: hi - lo], v[: hi - lo]
-            self.bytes_read += k.nbytes + v.nbytes
+            with self._acct_lock:
+                self.bytes_read += k.nbytes + v.nbytes
             s = np.einsum("kqd,tkd->kqt", qg, k, optimize=True) * scale  # [KV,qpk,T]
             if lo < start_tok:
                 s[:, :, : start_tok - lo] = -np.inf
@@ -142,7 +147,8 @@ class HostAttention:
         else:
             for i in range(len(host_rows)):
                 work(i)
-        self.busy_time += time.perf_counter() - t0
+        with self._acct_lock:
+            self.busy_time += time.perf_counter() - t0
         return out
 
     # -- standalone oracle-checkable entry (tests) ----------------------------

@@ -10,6 +10,7 @@ Free-page accounting is host-side (Python) exactly like vLLM's block manager.
 
 from __future__ import annotations
 
+import threading
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -43,7 +44,11 @@ class PagePool:
             self.k = jnp.zeros(shape, self.dtype)
             self.v = jnp.zeros(shape, self.dtype)
         else:
-            np_dt = np.float32 if cfg.activation_dtype == "float32" else np.float32
+            # Host pools honor the activation dtype's byte width: numpy has no
+            # bfloat16, so 16-bit archs store float16 (2 bytes/elt — the
+            # paper's PACPU streams fp16; sizing, swap accounting and the perf
+            # model all see the deployment byte counts).
+            np_dt = np.float32 if cfg.activation_dtype == "float32" else np.float16
             self.k = np.zeros(shape, np_dt)
             self.v = np.zeros(shape, np_dt)
         self._free: List[int] = list(range(num_pages))
@@ -159,22 +164,38 @@ class DualPool:
         self.page_size = cfg.kv_block_size
         self.device = PagePool(cfg, device_pages, backend="device")
         self.host = PagePool(cfg, host_pages, backend="host")
-        self.swap_bytes = 0  # PCIe traffic accounting
+        # PCIe traffic accounting — updated from the engine thread (prefill
+        # host writes, serial swaps) and the transfer worker; lock-protected
+        self.swap_bytes = 0
+        self._swap_lock = threading.Lock()
+
+    def add_swap_bytes(self, n: int) -> None:
+        with self._swap_lock:
+            self.swap_bytes += n
 
     def pool(self, location: str) -> PagePool:
         return self.device if location == "gpu" else self.host
 
     def swap_request(self, req, to: str) -> None:
-        """Move a request's whole KV between pools. ``to``: "gpu" | "cpu"."""
+        """Move a request's whole KV between pools. ``to``: "gpu" | "cpu".
+
+        Blocking whole-request copy — the serial execution path.  The
+        pipelined engine uses :class:`repro.core.transfer.TransferEngine`
+        instead, which overlaps these copies with compute.
+        """
         src = self.device if to == "cpu" else self.host
         dst = self.host if to == "cpu" else self.device
         if not req.pages:
             req.location = "gpu" if to == "gpu" else "cpu"
             return
         k_np, v_np = src.read_pages(req.pages)
+        if to == "cpu":
+            # account PCIe traffic at the host pool's byte width
+            k_np = np.asarray(k_np, dst.k.dtype)
+            v_np = np.asarray(v_np, dst.v.dtype)
         new_pages = dst.alloc(len(req.pages))
         dst.put_pages(new_pages, k_np, v_np)
         src.free(req.pages)
         req.pages = new_pages
         req.location = "gpu" if to == "gpu" else "cpu"
-        self.swap_bytes += k_np.nbytes + v_np.nbytes
+        self.add_swap_bytes(k_np.nbytes + v_np.nbytes)

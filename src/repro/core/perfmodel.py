@@ -178,3 +178,32 @@ class PerfModel:
         a = self.ewma_alpha
         s = (1 - a) * self.scale[stage] + a * ratio
         self.scale[stage] = min(max(s, self.SCALE_MIN), self.SCALE_MAX)
+
+    def observe_iteration(self, stages, *, host_busy: float = 0.0,
+                          device_busy: float = 0.0, swap_busy: float = 0.0,
+                          pipelined: bool = False) -> None:
+        """Refresh calibration from one iteration's MEASURED lane times.
+
+        ``stages`` is the chosen plan's :class:`StageEstimates` (per-layer
+        T_* symbols, duck-typed to avoid a scheduler import cycle).  The
+        pipelined engine passes real wall times: host attention busy time,
+        the device dispatch window, and the transfer worker's copy time —
+        so the no-bubble inequalities are checked against observed overlap
+        rather than the model's own predictions.
+
+        The device window is prefill + batch-0 dispatch wall time; batch-0's
+        ordered host callback (t_ca0) blocks inside it, and when pipelined
+        the batch-1 stages (t_l1, t_ca1) run on another lane and are NOT in
+        the window — the prediction mirrors that composition so the EWMA
+        "linear" scale tracks the device lane rather than a mismatched sum.
+        """
+        L = max(self.cfg.num_layers, 1)
+        if host_busy > 0:
+            self.observe("cpu_attn", L * (stages.t_ca0 + stages.t_ca1), host_busy)
+        if device_busy > 0:
+            pred = L * (stages.t_l0 + stages.t_ga0 + stages.t_ca0)
+            if not pipelined:
+                pred += L * (stages.t_l1 + stages.t_ca1)
+            self.observe("linear", pred, device_busy)
+        if swap_busy > 0:
+            self.observe("swap", L * stages.t_swap, swap_busy)

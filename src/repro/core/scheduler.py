@@ -438,7 +438,8 @@ class NeoScheduler:
             req = self.waitq.popleft()
             plan.prefill.append(req)
             plan.prefill_to_host.append(req)
-            budget -= nxt.prompt_len
+            budget -= nxt.prefill_len  # match the admission check (replayed
+            # prefills cover prompt + all-but-one emitted token)
         self._estimate(plan)
         return plan
 

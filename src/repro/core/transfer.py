@@ -1,0 +1,264 @@
+"""Asynchronous KV transfer engine (the PCIe DMA stage of Fig. 5).
+
+NEO overlaps KV swaps with compute: the scheduler's no-bubble inequalities
+budget ``T_swap`` under the device stages, and the execution layer must
+actually run the copies concurrently for the plan to be realized.  This
+module replaces :meth:`DualPool.swap_request`'s blocking whole-request copy
+with a **launch → join** protocol:
+
+* :meth:`TransferEngine.swap_out` / :meth:`swap_in` are called at *plan*
+  time (the engine's LAUNCH phase).  They synchronously update the free-page
+  accounting and the request's ``pages``/``location`` — so the scheduler's
+  view stays identical to the serial path — and enqueue the actual data
+  movement on a background worker.
+* The returned :class:`TransferHandle` is joined immediately **before the
+  pages are touched**: the batch-1 dispatch thread joins swap-outs before
+  host attention reads the pages; the engine joins swap-ins before the
+  device decode graph consumes the pool.
+
+Copies are page-granular and layer-wise (the worker streams ``[layer,
+pages]`` chunks), with per-job byte and wall-time accounting so the engine
+can report measured PCIe bandwidth and how many bytes were hidden under
+compute.
+
+Thread-safety contract:
+
+* ``swap_out``/``swap_in`` and any ``join`` that applies a staged *device*
+  write (i.e. joining swap-ins) must run on the engine thread — the device
+  pool is a functionally-updated jax array and only the engine thread may
+  reassign it.  Joining swap-outs is safe from any thread (host pool writes
+  happen on the worker; the join only waits).
+* Device reads are snapshotted at submit time: jax arrays are immutable, so
+  the gather dispatched in ``swap_out`` stays valid even after the decode
+  graph donates and replaces the pool buffers.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Iterable, List, Optional
+
+import numpy as np
+
+from repro.core.kv_cache import DualPool
+from repro.core.request import Request
+
+
+@dataclass
+class TransferStats:
+    """Aggregate accounting (lock-protected inside the engine)."""
+
+    jobs: int = 0
+    bytes_out: int = 0  # device -> host
+    bytes_in: int = 0  # host -> device
+    busy_time: float = 0.0  # worker wall time spent copying
+    wait_time: float = 0.0  # time join() callers spent blocked
+
+    @property
+    def total_bytes(self) -> int:
+        return self.bytes_out + self.bytes_in
+
+    def bandwidth(self) -> float:
+        """Measured copy bandwidth (bytes/s) over worker busy time."""
+        if self.busy_time <= 0:
+            return 0.0
+        return self.total_bytes / self.busy_time
+
+
+class TransferHandle:
+    """Future for one queued request-swap; join before touching the pages."""
+
+    def __init__(self, kind: str, req: Request, nbytes: int):
+        self.kind = kind  # "out" | "in"
+        self.req = req
+        self.nbytes = nbytes
+        self.error: Optional[BaseException] = None
+        self._event = threading.Event()
+        self._apply: Optional[Callable[[], None]] = None  # staged device write
+        self._joined = False
+        # copy window stamped by the worker — the engine intersects it with
+        # its device-lane window to count bytes hidden under compute
+        self.copy_start: float = 0.0
+        self.copy_end: float = 0.0
+
+    def hidden_fraction(self, window_start: float, window_end: float) -> float:
+        """Fraction of this copy's wall time overlapped by [start, end]."""
+        dur = self.copy_end - self.copy_start
+        if dur <= 0:
+            return 0.0
+        ov = min(self.copy_end, window_end) - max(self.copy_start, window_start)
+        return max(0.0, min(1.0, ov / dur))
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._event.wait(timeout)
+
+
+@dataclass
+class _Job:
+    handle: TransferHandle
+    fn: Callable[[], None]
+
+
+class TransferEngine:
+    """Background worker that executes page-granular, layer-wise KV moves."""
+
+    def __init__(self, pool: DualPool):
+        self.pool = pool
+        self.stats = TransferStats()
+        self._lock = threading.Lock()
+        self._q: "queue.Queue[Optional[_Job]]" = queue.Queue()
+        self._pending: List[TransferHandle] = []
+        self._worker = threading.Thread(
+            target=self._run, name="neo-transfer", daemon=True
+        )
+        self._worker.start()
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    # worker
+    # ------------------------------------------------------------------
+    def _run(self) -> None:
+        while True:
+            job = self._q.get()
+            if job is None:
+                return
+            t0 = time.perf_counter()
+            job.handle.copy_start = t0
+            try:
+                job.fn()
+            except BaseException as e:  # surfaced at join
+                job.handle.error = e
+            t1 = time.perf_counter()
+            job.handle.copy_end = t1
+            with self._lock:
+                self.stats.jobs += 1
+                self.stats.busy_time += t1 - t0
+            job.handle._event.set()
+
+    # ------------------------------------------------------------------
+    # launch (engine thread)
+    # ------------------------------------------------------------------
+    def swap_out(self, req: Request) -> TransferHandle:
+        """Device -> host.  Pages/location move now; data moves in background."""
+        dev, host = self.pool.device, self.pool.host
+        if not req.pages:
+            req.location = "cpu"
+            h = TransferHandle("out", req, 0)
+            h._event.set()
+            return h
+        idx = np.asarray(req.pages, np.int32)
+        # Snapshot the device pages to a host staging buffer NOW (the jax
+        # gather against the current immutable pool buffers; materialized
+        # here so the worker never queues work on the device — on this
+        # backend device ops from a second thread would serialize behind the
+        # decode graphs and stall the join).  The host-pool scatter — the
+        # DRAM-side half of the PCIe move — runs on the worker.
+        host_dtype = host.k.dtype
+        k_np = np.asarray(dev.k[:, idx], host_dtype)
+        v_np = np.asarray(dev.v[:, idx], host_dtype)
+        new_pages = host.alloc(len(req.pages))
+        dev.free(req.pages)
+        req.pages = new_pages
+        req.location = "cpu"
+        L = host.num_layers
+        nbytes = k_np.nbytes + v_np.nbytes
+        handle = TransferHandle("out", req, nbytes)
+        dst_idx = np.asarray(new_pages, np.int32)
+
+        def copy() -> None:
+            for layer in range(L):  # layer-wise, page-granular scatter
+                host.k[layer, dst_idx] = k_np[layer]
+                host.v[layer, dst_idx] = v_np[layer]
+            with self._lock:
+                self.stats.bytes_out += nbytes
+            self.pool.add_swap_bytes(nbytes)
+
+        self._q.put(_Job(handle, copy))
+        with self._lock:
+            self._pending.append(handle)
+        return handle
+
+    def swap_in(self, req: Request) -> TransferHandle:
+        """Host -> device.  The host pages are gathered into a staging copy
+        on the worker (they may not be freed back to the pool until that
+        read completes); the device upload + pool scatter happen at join
+        time on the engine thread — device ops issued from a second thread
+        would contend with the in-flight decode graphs on this backend."""
+        dev, host = self.pool.device, self.pool.host
+        if not req.pages:
+            req.location = "gpu"
+            h = TransferHandle("in", req, 0)
+            h._event.set()
+            return h
+        src_idx = np.asarray(req.pages, np.int32)
+        old_pages = req.pages
+        new_pages = dev.alloc(len(req.pages))
+        req.pages = new_pages
+        req.location = "gpu"
+        nbytes = 2 * host.k[:, src_idx[:1]].nbytes * len(old_pages)
+        handle = TransferHandle("in", req, nbytes)
+        staged = {}
+
+        def gather() -> None:
+            # DRAM-side read of the host pages (layer-major contiguous copy);
+            # pages return to the host free list only once read.
+            staged["k"] = host.k[:, src_idx].copy()
+            staged["v"] = host.v[:, src_idx].copy()
+            with self._lock:
+                self.stats.bytes_in += nbytes
+            self.pool.add_swap_bytes(nbytes)
+
+        def apply() -> None:
+            host.free(old_pages)
+            dev.put_pages(new_pages, staged["k"], staged["v"])
+
+        handle._apply = apply
+        self._q.put(_Job(handle, gather))
+        with self._lock:
+            self._pending.append(handle)
+        return handle
+
+    # ------------------------------------------------------------------
+    # join
+    # ------------------------------------------------------------------
+    def join(self, handles: Iterable[TransferHandle]) -> None:
+        """Block until the given transfers are complete and safe to use.
+
+        Swap-in handles apply their staged device write here — only call
+        join() on swap-ins from the engine thread.  Time spent blocked is
+        accounted in ``stats.wait_time``.
+        """
+        t0 = time.perf_counter()
+        try:
+            for h in handles:
+                h._event.wait()
+                with self._lock:
+                    h._joined = True  # consumed even on error — a failed
+                    # handle must not poison later drain()/close() calls
+                    apply, h._apply = h._apply, None
+                if h.error is not None:
+                    raise h.error
+                if apply is not None:
+                    apply()
+        finally:
+            with self._lock:
+                self.stats.wait_time += time.perf_counter() - t0
+                self._pending = [p for p in self._pending if not p._joined]
+
+    def drain(self) -> None:
+        """Join every outstanding transfer (step barrier / shutdown)."""
+        self.join(list(self._pending))
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self.drain()
+        self._q.put(None)
+        self._worker.join(timeout=5.0)

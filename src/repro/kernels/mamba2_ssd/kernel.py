@@ -21,6 +21,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax<0.5 names this TPUCompilerParams; newer jax renamed it CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 CLIP = 60.0
 
 
@@ -134,7 +137,7 @@ def mamba2_ssd_pallas(
             jax.ShapeDtypeStruct((B, H, Np, Pp), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((Np, Pp), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -20,6 +20,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax<0.5 names this TPUCompilerParams; newer jax renamed it CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 
 
@@ -121,7 +124,7 @@ def paged_decode_pallas(
         functools.partial(_decode_kernel, scale=scale, page=page, n_pages=n_pages),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, qpk, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -20,6 +20,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax<0.5 names this TPUCompilerParams; newer jax renamed it CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 CLIP = 60.0
 
 
@@ -132,7 +135,7 @@ def rwkv6_scan_pallas(
             jax.ShapeDtypeStruct((B, H, Np, Np), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((Np, Np), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

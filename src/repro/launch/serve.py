@@ -67,6 +67,12 @@ def run_trace(engine: NeoEngine, trace, *, vocab: int, seed: int = 0,
     metrics.mode_counts = dict(engine.stats.mode_counts)
     metrics.offloaded_decodes = engine.stats.offloaded_decodes
     metrics.device_decodes = engine.stats.device_decodes
+    metrics.host_busy_time = engine.stats.host_busy_time
+    metrics.device_busy_time = engine.stats.device_busy_time
+    metrics.pipeline_overlap_time = engine.stats.pipeline_overlap_time
+    metrics.bubble_fraction = engine.stats.bubble_fraction
+    metrics.swap_hidden_bytes = engine.stats.swap_hidden_bytes
+    metrics.swap_wait_time = engine.stats.swap_wait_time
     if engine.pool is not None:
         metrics.swap_bytes = engine.pool.swap_bytes
     return metrics
@@ -85,6 +91,8 @@ def main(argv=None) -> int:
     ap.add_argument("--device-pages", type=int, default=64)
     ap.add_argument("--host-pages", type=int, default=256)
     ap.add_argument("--max-batch-tokens", type=int, default=2048)
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="serial reference execution (no async swaps/overlap)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -94,9 +102,11 @@ def main(argv=None) -> int:
         host_pool_pages=args.host_pages,
         max_batch_tokens=args.max_batch_tokens,
         policy=args.policy,
+        pipeline=not args.no_pipeline,
         seed=args.seed,
     )
     print(f"[serve] arch={cfg.name} policy={args.policy} "
+          f"pipeline={not args.no_pipeline} "
           f"pools=({args.device_pages},{args.host_pages})")
     engine = NeoEngine(cfg, ecfg)
     trace = get_trace(args.trace, args.n, args.rate, args.seed)
@@ -105,6 +115,7 @@ def main(argv=None) -> int:
         t.prompt_len = min(t.prompt_len, args.max_batch_tokens // 4)
         t.output_len = min(t.output_len, 32)
     m = run_trace(engine, trace, vocab=cfg.vocab_size, seed=args.seed)
+    engine.close()
     print(json.dumps(m.summary(), indent=1))
     print("scheduler modes:", m.mode_counts)
     return 0

@@ -51,6 +51,13 @@ class ServeMetrics:
     swap_bytes: int = 0
     offloaded_decodes: int = 0
     device_decodes: int = 0
+    # measured pipeline overlap (engine EngineStats mirror)
+    host_busy_time: float = 0.0
+    device_busy_time: float = 0.0
+    pipeline_overlap_time: float = 0.0
+    bubble_fraction: float = 0.0
+    swap_hidden_bytes: int = 0
+    swap_wait_time: float = 0.0
 
     # ------------------------------------------------------------------
     @property
@@ -112,4 +119,11 @@ class ServeMetrics:
                 / max(1, self.offloaded_decodes + self.device_decodes),
                 3,
             ),
+            # realized (measured) asymmetric-pipeline overlap
+            "host_busy_s": round(self.host_busy_time, 3),
+            "device_busy_s": round(self.device_busy_time, 3),
+            "overlap_s": round(self.pipeline_overlap_time, 3),
+            "bubble_fraction": round(self.bubble_fraction, 3),
+            "swap_hidden_MB": round(self.swap_hidden_bytes / 1e6, 3),
+            "swap_wait_s": round(self.swap_wait_time, 3),
         }

@@ -1,0 +1,309 @@
+"""Transfer engine + pipelined plan→launch→join execution tests.
+
+Covers: async swaps preserving KV contents and free-page accounting,
+pipelined vs serial greedy decode bitwise equality, dependent-decode
+correctness under swap pressure, starvation-limit preemption draining a full
+host pool, and the measured-overlap stats."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import EngineConfig
+from repro.configs import get_smoke_config
+from repro.core.engine import NeoEngine
+from repro.core.kv_cache import DualPool
+from repro.core.perfmodel import PerfModel
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import NeoScheduler, PoolView
+from repro.core.transfer import TransferEngine
+from repro.models.api import get_model
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_smoke_config("qwen3-0.6b")
+    model = get_model(cfg)
+    params = model.init(jax.random.key(7))
+    return cfg, model, params
+
+
+def _mk_request(rid, pool: DualPool, n_pages: int, location="gpu"):
+    req = Request(rid=rid, prompt=[1, 2, 3], max_new_tokens=4)
+    req.state = RequestState.RUNNING
+    req.location = location
+    src = pool.device if location == "gpu" else pool.host
+    req.pages = src.alloc(n_pages)
+    return req
+
+
+# ---------------------------------------------------------------------------
+# TransferEngine unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_transfer_roundtrip_preserves_kv(dense_setup):
+    cfg, _, _ = dense_setup
+    pool = DualPool(cfg, device_pages=8, host_pages=8)
+    te = TransferEngine(pool)
+    req = _mk_request(0, pool, 3)
+    rng = np.random.default_rng(0)
+    k = rng.normal(size=(cfg.num_attention_layers, 3, cfg.kv_block_size,
+                         cfg.num_kv_heads, cfg.head_dim)).astype(np.float32)
+    v = rng.normal(size=k.shape).astype(np.float32)
+    pool.device.put_pages(req.pages, k, v)
+
+    h = te.swap_out(req)
+    te.join([h])
+    assert req.location == "cpu"
+    k_host, v_host = pool.host.read_pages(req.pages)
+    np.testing.assert_allclose(k_host, k, rtol=1e-6)
+    np.testing.assert_allclose(v_host, v, rtol=1e-6)
+    assert te.stats.bytes_out == k_host.nbytes + v_host.nbytes
+    assert pool.swap_bytes == te.stats.bytes_out
+
+    h2 = te.swap_in(req)
+    te.join([h2])
+    assert req.location == "gpu"
+    k_dev, v_dev = pool.device.read_pages(req.pages)
+    np.testing.assert_allclose(k_dev, k, rtol=1e-6)
+    np.testing.assert_allclose(v_dev, v, rtol=1e-6)
+    assert te.stats.bytes_in > 0
+    # free lists balanced after the round trip
+    assert pool.device.free_pages == 8 - 3
+    assert pool.host.free_pages == 8
+    te.close()
+
+
+def test_transfer_free_accounting_at_launch(dense_setup):
+    """Page accounting must move at LAUNCH time (the scheduler plans against
+    it), even while the copy is still in flight."""
+    cfg, _, _ = dense_setup
+    pool = DualPool(cfg, device_pages=6, host_pages=6)
+    te = TransferEngine(pool)
+    req = _mk_request(0, pool, 4)
+    h = te.swap_out(req)
+    # accounting is synchronous: device pages freed, host pages allocated
+    assert pool.device.free_pages == 6
+    assert pool.host.free_pages == 2
+    assert req.location == "cpu"
+    te.join([h])
+    te.drain()
+    te.close()
+
+
+def test_transfer_empty_request(dense_setup):
+    cfg, _, _ = dense_setup
+    pool = DualPool(cfg, device_pages=2, host_pages=2)
+    te = TransferEngine(pool)
+    req = Request(rid=0, prompt=[1], max_new_tokens=1)
+    h = te.swap_out(req)
+    assert h.done() and req.location == "cpu"
+    h2 = te.swap_in(req)
+    assert h2.done() and req.location == "gpu"
+    te.close()
+
+
+# ---------------------------------------------------------------------------
+# pipelined engine end-to-end
+# ---------------------------------------------------------------------------
+
+
+def _oracle(model, params, prompt, n):
+    logits, cache = model.prefill(
+        params, jnp.asarray([prompt], jnp.int32), capacity=len(prompt) + n)
+    seq = [int(jnp.argmax(logits[0]))]
+    for _ in range(n - 1):
+        logits, cache = model.decode(params, jnp.asarray([seq[-1]], jnp.int32), cache)
+        seq.append(int(jnp.argmax(logits[0])))
+    return seq
+
+
+@pytest.mark.parametrize("policy", ["neo", "fastdecode"])
+def test_pipelined_matches_serial_bitwise(policy, dense_setup):
+    """Pipelined greedy decode (async swaps + overlapped batch-1) must be
+    bitwise identical to the serial reference path AND the pure model."""
+    cfg, model, params = dense_setup
+    rng = np.random.default_rng(3)
+    prompts = [list(map(int, rng.integers(1, 500, size=n))) for n in (9, 21, 33)]
+    oracles = [_oracle(model, params, p, 7) for p in prompts]
+    outs = {}
+    for pipe in (True, False):
+        ecfg = EngineConfig(device_pool_pages=7, host_pool_pages=96,
+                            max_batch_tokens=64, policy=policy, pipeline=pipe)
+        eng = NeoEngine(cfg, ecfg, params=params)
+        rids = [eng.submit(p, 7) for p in prompts]
+        res = eng.run_until_done(300)
+        outs[pipe] = [res[r] for r in rids]
+        eng.close()
+    assert outs[True] == outs[False], f"{policy}: pipelined != serial"
+    assert outs[True] == oracles, f"{policy}: pipelined != oracle"
+
+
+def test_async_swap_completes_before_dependent_decode(dense_setup):
+    """Swap-pressure workload: every decode that follows a swap must read the
+    moved pages — token streams stay exact under a tiny device pool."""
+    cfg, model, params = dense_setup
+    rng = np.random.default_rng(11)
+    prompts = [list(map(int, rng.integers(1, 500, size=n)))
+               for n in (24, 30, 18, 22)]
+    oracles = [_oracle(model, params, p, 6) for p in prompts]
+    ecfg = EngineConfig(device_pool_pages=7, host_pool_pages=128,
+                        max_batch_tokens=128, policy="neo")
+    eng = NeoEngine(cfg, ecfg, params=params)
+    rids = [eng.submit(p, 6) for p in prompts]
+    out = eng.run_until_done(300)
+    assert eng.stats.offloaded_decodes > 0, "tight device pool must offload"
+    assert eng.stats.swap_out_bytes > 0
+    for rid, o in zip(rids, oracles):
+        assert out[rid] == o
+    eng.close()
+
+
+def test_pipelined_overlap_metrics(dense_setup):
+    """The pipelined engine must report measured overlap: host attention
+    concurrent with device dispatch and swap bytes hidden under compute."""
+    cfg, model, params = dense_setup
+    rng = np.random.default_rng(5)
+    ecfg = EngineConfig(device_pool_pages=7, host_pool_pages=128,
+                        max_batch_tokens=128, policy="neo")
+    eng = NeoEngine(cfg, ecfg, params=params)
+    for n in (24, 30, 18, 22, 26, 28):
+        eng.submit(list(map(int, rng.integers(1, 500, size=n))), 6)
+    eng.run_until_done(400)
+    s = eng.stats
+    assert s.pipelined_steps > 0, "no step ran both batches concurrently"
+    assert s.pipeline_overlap_time > 0.0
+    assert s.swap_hidden_bytes > 0
+    assert s.host_busy_time > 0.0 and s.device_busy_time > 0.0
+    assert 0.0 <= s.bubble_fraction <= 1.0
+    eng.close()
+
+
+def test_f16_host_pool_roundtrip_and_equality():
+    """16-bit archs store host KV as float16 (activation-dtype byte width):
+    the swap round trip must stay f16-exact, and pipelined greedy decode must
+    still match the serial path."""
+    import dataclasses
+
+    cfg = dataclasses.replace(get_smoke_config("qwen3-0.6b"), name="bf16-smoke",
+                              param_dtype="bfloat16", activation_dtype="bfloat16")
+    pool = DualPool(cfg, device_pages=6, host_pages=6)
+    assert pool.host.k.dtype == np.float16
+    te = TransferEngine(pool)
+    req = _mk_request(0, pool, 2)
+    rng = np.random.default_rng(2)
+    k = rng.normal(size=(cfg.num_attention_layers, 2, cfg.kv_block_size,
+                         cfg.num_kv_heads, cfg.head_dim)).astype(np.float32)
+    pool.device.put_pages(req.pages, k, k)
+    h = te.swap_out(req)
+    te.join([h])
+    k_host, _ = pool.host.read_pages(req.pages)
+    # device bf16 -> host f16 is exact for normal-range values
+    np.testing.assert_allclose(k_host, k, atol=1e-2)
+    assert te.stats.bytes_out == 2 * k_host.nbytes  # 2-byte accounting
+    te.close()
+
+    model = get_model(cfg)
+    params = model.init(jax.random.key(1))
+    rng = np.random.default_rng(4)
+    prompts = [list(map(int, rng.integers(1, 500, size=n))) for n in (9, 22, 30)]
+    outs = {}
+    for pipe in (True, False):
+        eng = NeoEngine(cfg, EngineConfig(device_pool_pages=7, host_pool_pages=96,
+                                          max_batch_tokens=64, policy="fastdecode",
+                                          pipeline=pipe), params=params)
+        rids = [eng.submit(p, 5) for p in prompts]
+        res = eng.run_until_done(200)
+        outs[pipe] = [res[r] for r in rids]
+        assert eng.stats.offloaded_decodes > 0
+        eng.close()
+    assert outs[True] == outs[False]
+
+
+def test_serial_mode_plans_stay_serial(dense_setup):
+    """policy="simple" (strawman #1) must not pipeline even when the engine
+    default enables it — its plans are mode="serial" by construction."""
+    cfg, model, params = dense_setup
+    rng = np.random.default_rng(9)
+    p = list(map(int, rng.integers(1, 500, size=12)))
+    oracle = _oracle(model, params, p, 5)
+    eng = NeoEngine(cfg, EngineConfig(device_pool_pages=8, host_pool_pages=64,
+                                      max_batch_tokens=64, policy="simple"),
+                    params=params)
+    rid = eng.submit(p, 5)
+    out = eng.run_until_done(100)
+    assert out[rid] == oracle
+    assert eng.stats.pipelined_steps == 0
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# starvation-limit preemption drains a full host pool
+# ---------------------------------------------------------------------------
+
+
+def test_starvation_preemption_drains_full_host_pool(dense_setup):
+    """Host requests that cannot allocate their next page are skipped; after
+    ``starvation_limit`` skips they are recompute-preempted so the host pool
+    drains instead of deadlocking."""
+    cfg, _, _ = dense_setup
+    ecfg = EngineConfig(device_pool_pages=4, host_pool_pages=4,
+                        max_batch_tokens=256, starvation_limit=3, policy="neo")
+    perf = PerfModel.for_arch(cfg, ecfg.hw_profile)
+    sched = NeoScheduler(cfg, ecfg, perf)
+    page = cfg.kv_block_size
+    # two host-resident requests pinning 2 pages each (host pool FULL), both
+    # exactly at a page boundary so the next token needs a new page
+    reqs = []
+    for rid in range(2):
+        r = Request(rid=rid, prompt=list(range(2 * page)), max_new_tokens=8)
+        r.state = RequestState.RUNNING
+        r.location = "cpu"
+        r.pages = [2 * rid, 2 * rid + 1]
+        r.out_tokens = [1]  # kv_len == 2*page -> next token needs page 3
+        sched.cpu_runq.append(r)
+        reqs.append(r)
+
+    preempted = False
+    for _ in range(ecfg.starvation_limit + 1):
+        view = PoolView(page_size=page, device_free=0, host_free=0,
+                        device_total=4, host_total=4)
+        plan = sched.plan(view)
+        if plan.preempt:
+            preempted = True
+            victim = plan.preempt[0]
+            survivor = next(r for r in reqs if r is not victim)
+            # the victim's pages drained back into the pool — enough for the
+            # surviving host request to allocate its next page and decode
+            assert survivor in plan.host_rows  # cpu0 or cpu1 sub-batch
+            assert view.host_free == len(victim.pages) - 1
+            break
+    assert preempted, "full host pool never drained via starvation preemption"
+
+
+def test_full_offload_budget_uses_prefill_len(dense_setup):
+    """_plan_full_offload must decrement the token budget by prefill_len —
+    the same quantity the admission check used (replayed prefills differ
+    from prompt_len)."""
+    cfg, _, _ = dense_setup
+    ecfg = EngineConfig(device_pool_pages=64, host_pool_pages=64,
+                        max_batch_tokens=40, policy="fastdecode")
+    perf = PerfModel.for_arch(cfg, ecfg.hw_profile)
+    sched = NeoScheduler(cfg, ecfg, perf)
+    # a replayed request: long prompt, several emitted tokens -> prefill_len
+    # = prompt + emitted - 1 > prompt_len
+    r1 = Request(rid=0, prompt=list(range(20)), max_new_tokens=16)
+    r1.out_tokens = [1, 2, 3, 4, 5]  # prefill_len = 24 (prompt_len = 20)
+    r2 = Request(rid=1, prompt=list(range(18)), max_new_tokens=4)
+    sched.add_request(r1)
+    sched.add_request(r2)
+    view = PoolView(page_size=cfg.kv_block_size, device_free=64, host_free=64,
+                    device_total=64, host_total=64)
+    plan = sched.plan(view)
+    # r1 consumes prefill_len=24 of the 40-token budget, leaving 16 — too
+    # small for r2 (prefill_len 18).  The old prompt_len decrement (20) would
+    # have admitted r2 and overflowed the activation budget.
+    assert r1 in plan.prefill
+    assert r2 not in plan.prefill
