@@ -19,7 +19,8 @@ def main(argv=None) -> int:
     t0 = time.time()
 
     from benchmarks import (engine_real, fig6_load_latency, fig8_fastdecode,
-                            fig9_lengths, fig10a_cpu, kernels, roofline_table)
+                            fig9_lengths, fig10a_cpu, kernels, prefix_cache,
+                            roofline_table)
 
     print("#" * 70)
     print("# NEO-on-TPU benchmark suite (simulator figures use the real")
@@ -35,13 +36,16 @@ def main(argv=None) -> int:
     ]
     if not args.skip_real:
         sections.append(("Real engine (Fig. 10b spirit)", lambda: engine_real.main([])))
+        sections.append(("Prefix cache (multiturn)", lambda: prefix_cache.main(q)))
     sections.append(("Roofline table", lambda: roofline_table.main()))
 
     failures = []
     for name, fn in sections:
         print(f"\n{'=' * 70}\n== {name}\n{'=' * 70}")
         try:
-            fn()
+            rc = fn()
+            if rc:  # sections signal gate failures via nonzero return codes
+                failures.append((name, f"exit {rc}"))
         except Exception as e:  # noqa: BLE001
             import traceback
 

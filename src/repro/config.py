@@ -265,6 +265,11 @@ class EngineConfig:
     # Default for paged families; False forces the serial reference path.
     # "serial"-mode plans (policy="simple") always execute serially.
     pipeline: bool = True
+    # Two-tier radix prefix cache (core/prefix_cache.py): finished requests'
+    # KV pages are kept in a radix tree spanning both pools and shared
+    # copy-on-write with later requests that repeat the prefix.  Off by
+    # default — the compat path is bitwise identical to the uncached engine.
+    prefix_cache: bool = False
     # Perf-model refresh rate (EWMA) — also the straggler-mitigation knob.
     ewma_alpha: float = 0.2
     # Force a host request into batch-1 after this many consecutive skips

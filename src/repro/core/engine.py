@@ -41,6 +41,7 @@ from repro.core.executor import ContiguousExecutor, PagedExecutor
 from repro.core.host_attention import HostAttention
 from repro.core.kv_cache import DualPool
 from repro.core.perfmodel import PerfModel
+from repro.core.prefix_cache import PrefixCache
 from repro.core.request import Request, RequestState
 from repro.core.scheduler import BatchPlan, NeoScheduler, PoolView
 from repro.core.transfer import TransferEngine
@@ -125,6 +126,12 @@ class NeoEngine:
             )
             self.transfer = TransferEngine(self.pool)
             self._page = cfg.kv_block_size
+            # Two-tier radix prefix cache (off by default: the uncached path
+            # stays bitwise identical to the pre-cache engine).
+            self.prefix_cache = (
+                PrefixCache(self.pool, self.transfer)
+                if engine_cfg.prefix_cache else None
+            )
         else:
             slots = min(engine_cfg.max_requests, 64)
             capacity = engine_cfg.max_batch_tokens
@@ -135,6 +142,7 @@ class NeoEngine:
             self.pool = None
             self.host_attn = None
             self.transfer = None
+            self.prefix_cache = None
         self._rng = np.random.default_rng(engine_cfg.seed)
         self._next_rid = 0
         self.requests: Dict[int, Request] = {}
@@ -165,6 +173,11 @@ class NeoEngine:
         )
         if extras:
             req.extras = extras  # type: ignore[attr-defined]
+        if self.prefix_cache is not None and not extras:
+            # longest-prefix match (estimate only; re-validated and pinned at
+            # prefill dispatch) so the scheduler prices the prefill correctly
+            # (multimodal prompts are not prefix-cached)
+            req.cached_len = self.prefix_cache.lookup(req.prompt)
         self.requests[rid] = req
         self.scheduler.add_request(req)
         self._journal.append(
@@ -184,10 +197,16 @@ class NeoEngine:
     # ------------------------------------------------------------------
     def _pool_view(self) -> PoolView:
         if self.paged:
+            dev_evict = host_evict = 0
+            if self.prefix_cache is not None:
+                # unpinned cached pages are reclaimable on demand (make_room),
+                # so the scheduler plans against free + evictable
+                dev_evict = self.prefix_cache.evictable_pages("gpu")
+                host_evict = self.prefix_cache.evictable_pages("cpu")
             return PoolView(
                 page_size=self._page,
-                device_free=self.pool.device.free_pages,
-                host_free=self.pool.host.free_pages,
+                device_free=self.pool.device.free_pages + dev_evict,
+                host_free=self.pool.host.free_pages + host_evict,
                 device_total=self.pool.device.num_pages - 1,  # minus scratch
                 host_total=self.pool.host.num_pages,
             )
@@ -223,6 +242,11 @@ class NeoEngine:
         if self.paged:
             if req.pages:
                 pool = self.pool.device if req.location == "gpu" else self.pool.host
+                if self.prefix_cache is not None:
+                    # adopt the full pages into the radix tree (tree takes its
+                    # own reference), THEN release the request's references —
+                    # adopted and still-shared pages survive, the rest free
+                    self.prefix_cache.insert_request(req)
                 pool.free(req.pages)
         else:
             if req.pages:
@@ -309,9 +333,22 @@ class NeoEngine:
         # recompute preemption (both pools full): drop KV, requeue
         for r in plan.preempt:
             pool = self.pool.device if r.location == "gpu" else self.pool.host
-            pool.free(r.pages)
+            pool.free(r.pages)  # refcounted: shared prefix pages survive
             r.pages = []
             r.location = "gpu"
+            r.cached_len = 0  # replay re-matches the tree at dispatch
+        # the scheduler planned against free + evictable cached pages; evict
+        # (demote-first) so the promised room actually exists for the swaps.
+        # The gpu pass runs FIRST: it may demote device nodes INTO the host
+        # pool, so the host reservation must be carved out afterwards or the
+        # demotions would consume the pages the swap-outs are about to alloc.
+        if self.prefix_cache is not None:
+            need_dev = sum(len(r.pages) for r in plan.swap_in)
+            if need_dev:
+                self.prefix_cache.make_room("gpu", need_dev)
+            need_host = sum(len(r.pages) for r in plan.swap_out)
+            if need_host:
+                self.prefix_cache.make_room("cpu", need_host)
         # swaps: page accounting moves now; the data moves on the transfer
         # worker (pipelined) or inline (serial)
         out_handles: List = []
@@ -334,13 +371,6 @@ class NeoEngine:
         # identical.  Replayed prefills (recompute preemption) re-derive
         # their last token deterministically and must not emit it twice.
         page = self._page
-        to_host: List[bool] = []
-        for r in plan.prefill:
-            host = r in plan.prefill_to_host
-            npages = -(-r.prefill_len // page)
-            pool = self.pool.host if host else self.pool.device
-            r.pages = pool.alloc(npages)
-            to_host.append(host)
 
         def _running(rs: List[Request]) -> List[Request]:
             return [r for r in rs
@@ -349,14 +379,97 @@ class NeoEngine:
         rows0 = _running(plan.decode_gpu) + _running(plan.decode_cpu0)
         rows1 = _running(plan.decode_cpu1)
         rows = rows0 + rows1
-        b1_end: Optional[float] = None
         host_flags: List[bool] = []
-        for r in rows:
-            host = r.location == "cpu"
-            if r.kv_len % page == 0 and r.kv_len // page >= len(r.pages):
-                pool = self.pool.host if host else self.pool.device
-                r.pages = r.pages + pool.alloc(1)
-            host_flags.append(host)
+
+        def _grow_decode_pages() -> None:
+            for r in rows:
+                host = r.location == "cpu"
+                if r.kv_len % page == 0 and r.kv_len // page >= len(r.pages):
+                    pool = self.pool.host if host else self.pool.device
+                    if self.prefix_cache is not None:
+                        self.prefix_cache.make_room("cpu" if host else "gpu", 1)
+                    r.pages = r.pages + pool.alloc(1)
+                host_flags.append(host)
+
+        if self.prefix_cache is not None:
+            # decode rows were budgeted by scheduler step 2, BEFORE prefills
+            # (step 3): grow their pages first so a prefill's acquire() pins
+            # cannot consume the evictable pages the rows were admitted
+            # against (the cache-off path keeps the historical prefill-first
+            # allocation order below)
+            _grow_decode_pages()
+
+        to_host: List[bool] = []
+        deferred: List[Request] = []
+        for r in plan.prefill:
+            host = r in plan.prefill_to_host
+            pool = self.pool.host if host else self.pool.device
+            # multimodal prompts are not prefix-cached (the partial-prefill
+            # path has no extras injection; ROADMAP open item)
+            cacheable = (self.prefix_cache is not None
+                         and getattr(r, "extras", None) is None)
+            if cacheable:
+                # authoritative match: pin shared full pages, materialize the
+                # COW page for a mid-page hit, then allocate only the suffix
+                target = "cpu" if host else "gpu"
+                shared, cow, r.cached_len = self.prefix_cache.acquire(
+                    r.prefill_tokens, target)
+                total = -(-r.prefill_len // page)
+                fresh = total - len(shared) - (1 if cow is not None else 0)
+                self.prefix_cache.make_room(target, fresh)
+                if pool.free_pages < fresh:
+                    # dispatch-time match exceeded the scheduler's page
+                    # budget (tree changed since submit): release the prefix
+                    # — the pages stay tree-owned and evictable — and fall
+                    # back to a cold prefill under full eviction pressure
+                    if shared:
+                        pool.free(shared)
+                    if cow is not None:
+                        pool.free([cow])
+                    self.prefix_cache.retract_hit(r.cached_len)
+                    r.cached_len = 0
+                    self.prefix_cache.make_room(target, total)
+                    if pool.free_pages < total:
+                        # genuine overcommit (evictable pages got pinned by
+                        # an earlier prefill this step): defer to a later
+                        # iteration instead of faulting the whole step; the
+                        # retry will re-run acquire, so drop this lookup
+                        # from the hit-rate accounting entirely
+                        self.prefix_cache.retract_lookup(len(r.prefill_tokens))
+                        deferred.append(r)
+                        continue
+                    r.pages = pool.alloc(total)
+                else:
+                    r.pages = shared + ([cow] if cow is not None else []) + pool.alloc(fresh)
+            else:
+                r.cached_len = 0
+                npages = -(-r.prefill_len // page)
+                if self.prefix_cache is not None:
+                    # the scheduler admitted this against free + evictable
+                    # tree pages; reclaim them (or defer) before allocating
+                    self.prefix_cache.make_room("cpu" if host else "gpu", npages)
+                    if pool.free_pages < npages:
+                        deferred.append(r)
+                        continue
+                r.pages = pool.alloc(npages)
+            to_host.append(host)
+        for r in reversed(deferred):
+            # unwind the commit: back to the head of the waitqueue, re-planned
+            # next iteration against the true pool state
+            plan.prefill.remove(r)
+            if r in plan.prefill_to_host:
+                plan.prefill_to_host.remove(r)
+            if r in self.scheduler.gpu_runq:
+                self.scheduler.gpu_runq.remove(r)
+            if r in self.scheduler.cpu_runq:
+                self.scheduler.cpu_runq.remove(r)
+            r.state = RequestState.WAITING
+            r.location = "gpu"
+            self.scheduler.waitq.appendleft(r)
+
+        if self.prefix_cache is None:
+            _grow_decode_pages()  # historical order: prefill pages first
+        b1_end: Optional[float] = None
 
         # batch-1 (host rows) launches FIRST: its swap-out join + host
         # attention overlap the whole device lane (prefill is integrated
@@ -383,7 +496,8 @@ class NeoEngine:
             logits = self.executor.prefill(plan.prefill, to_host, self._extras_batch)
             dev_windows.append((t0, time.perf_counter()))
             self.stats.device_busy_time += dev_windows[-1][1] - t0
-            self.stats.prefill_tokens += sum(r.prefill_len for r in plan.prefill)
+            # computed prefill tokens: prefix-cache hits skip the cached part
+            self.stats.prefill_tokens += sum(r.suffix_len for r in plan.prefill)
             for i, r in enumerate(plan.prefill):
                 if not r.out_tokens:
                     self._emit(r, logits[i], now, emitted)

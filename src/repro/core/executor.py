@@ -428,8 +428,29 @@ class PagedExecutor:
         """Prefill ``reqs`` (bucketed padding), scatter KV into the pools.
 
         Pages must already be allocated on ``req.pages`` in the right pool.
+        Requests with a prefix-cache hit (``cached_len > 0``) take the
+        partial-prefill path — only the suffix is computed, attending over
+        the cached prefix pages; the rest go through the cold path unchanged.
         Returns first-token logits [n, V].
         """
+        warm_idx = [i for i, r in enumerate(reqs) if r.cached_len > 0]
+        if warm_idx:
+            warm_set = set(warm_idx)
+            cold_idx = [i for i in range(len(reqs)) if i not in warm_set]
+            warm_logits = self._prefill_cached(
+                [reqs[i] for i in warm_idx], [to_host[i] for i in warm_idx])
+            out = np.zeros((len(reqs), warm_logits.shape[-1]), np.float32)
+            out[warm_idx] = np.asarray(warm_logits, np.float32)
+            if cold_idx:
+                cold_logits = self._prefill_cold(
+                    [reqs[i] for i in cold_idx], [to_host[i] for i in cold_idx],
+                    extras_fn)
+                out[cold_idx] = np.asarray(cold_logits, np.float32)
+            return out
+        return self._prefill_cold(reqs, to_host, extras_fn)
+
+    def _prefill_cold(self, reqs: List[Request], to_host: List[bool],
+                      extras_fn=None) -> np.ndarray:
         n = len(reqs)
         S = _bucket(max(r.prefill_len for r in reqs), 16)
         B = n
@@ -466,6 +487,80 @@ class PagedExecutor:
                 self.pool.add_swap_bytes(k_host.nbytes + v_host.nbytes)
             else:
                 self.pool.device.put_pages(r.pages, kr, vr)
+        return np.asarray(logits)
+
+    # ------------------------------------------------------------------
+    # partial prefill over a cached prefix (prefix cache)
+    # ------------------------------------------------------------------
+    def _build_prefill_prefix(self, B: int, S: int, T: int):
+        model, cfg = self.model, self.cfg
+
+        def fn(params, tokens, true_lens, prefix_k, prefix_v, prefix_lens):
+            pk = prefix_k.astype(cfg.activation_dtype)
+            pv = prefix_v.astype(cfg.activation_dtype)
+            return model.prefill_with_prefix(
+                params, tokens, pk, pv, prefix_lens,
+                capacity=S, true_lens=true_lens,
+            )
+
+        return jax.jit(fn)
+
+    def prefill_prefix_fn(self, B: int, S: int, T: int):
+        key = ("prefix", B, S, T)
+        if key not in self._prefill_fns:
+            self._prefill_fns[key] = self._build_prefill_prefix(B, S, T)
+        return self._prefill_fns[key]
+
+    def _prefill_cached(self, reqs: List[Request], to_host: List[bool]) -> np.ndarray:
+        """Suffix-only prefill for prefix-cache hits.
+
+        ``req.pages`` already holds the shared/COW prefix pages (in the
+        target pool) followed by freshly allocated suffix pages.  The cached
+        prefix KV is gathered from the pool into a padded [L, B, T, KV, hd]
+        input; the computed suffix KV is scattered back token-granular (the
+        COW page fills from a mid-page offset).
+        """
+        cfg, page = self.cfg, self.page
+        n = len(reqs)
+        L = self.pool.device.num_layers
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+        S = _bucket(max(r.suffix_len for r in reqs), 16)
+        t_pages = _bucket(max(-(-r.cached_len // page) for r in reqs), 1)
+        T = t_pages * page
+
+        tokens = np.zeros((n, S), np.int32)
+        suffix_lens = np.zeros((n,), np.int32)
+        prefix_lens = np.zeros((n,), np.int32)
+        pre_k = np.zeros((L, n, T, KV, hd), np.float32)
+        pre_v = np.zeros((L, n, T, KV, hd), np.float32)
+        for i, (r, host) in enumerate(zip(reqs, to_host)):
+            suf = r.suffix_len
+            tokens[i, :suf] = r.prefill_tokens[r.cached_len:]
+            suffix_lens[i] = suf
+            prefix_lens[i] = r.cached_len
+            npg = -(-r.cached_len // page)
+            pool = self.pool.host if host else self.pool.device
+            k_np, v_np = pool.read_pages(r.pages[:npg])  # [L, npg, page, KV, hd]
+            pre_k[:, i, : npg * page] = k_np.reshape(L, npg * page, KV, hd)
+            pre_v[:, i, : npg * page] = v_np.reshape(L, npg * page, KV, hd)
+
+        logits, k_all, v_all = self.prefill_prefix_fn(n, S, T)(
+            self.params, tokens, suffix_lens, pre_k, pre_v, prefix_lens
+        )
+        # token-granular scatter: suffix KV starts at offset cached_len, which
+        # may sit mid-page (inside the COW page)
+        for i, (r, host) in enumerate(zip(reqs, to_host)):
+            suf = int(suffix_lens[i])
+            pos = r.cached_len + np.arange(suf)
+            pids = np.asarray([r.pages[p // page] for p in pos], np.int32)
+            offs = (pos % page).astype(np.int32)
+            pool = self.pool.host if host else self.pool.device
+            k_toks = k_all[:, i, :suf]
+            v_toks = v_all[:, i, :suf]
+            pool.write_token_range(pids, offs, k_toks, v_toks)
+            if host:  # layer-wise PCIe swap of the freshly computed KV
+                nb = 2 * suf * L * KV * hd * self.pool.host.k.dtype.itemsize
+                self.pool.add_swap_bytes(nb)
         return np.asarray(logits)
 
 

@@ -52,6 +52,10 @@ class PagePool:
             self.k = np.zeros(shape, np_dt)
             self.v = np.zeros(shape, np_dt)
         self._free: List[int] = list(range(num_pages))
+        # Per-page reference counts (prefix-cache sharing): a page returns to
+        # the free list only when its LAST reader releases it.  Unshared pages
+        # keep the historical alloc/free semantics (ref 1 -> 0).
+        self._ref: List[int] = [0] * num_pages
 
     # -- accounting ------------------------------------------------------------
     @property
@@ -71,15 +75,33 @@ class PagePool:
                 f"{self.backend} pool out of pages: want {n}, have {len(self._free)}"
             )
         pages, self._free = self._free[:n], self._free[n:]
+        for p in pages:
+            self._ref[p] = 1
         return pages
 
+    def incref(self, pages: List[int]) -> None:
+        """Add a reader to already-allocated (shared) pages."""
+        for p in pages:
+            if self._ref[p] <= 0:
+                raise ValueError(f"incref of free page {p}")
+            self._ref[p] += 1
+
+    def refcount(self, page: int) -> int:
+        return self._ref[page]
+
     def free(self, pages: List[int]) -> None:
+        """Release one reference per page; pages with no remaining readers
+        return to the free list (a double release raises)."""
+        if len(set(pages)) != len(pages):
+            raise ValueError("duplicate pages in free()")
         for p in pages:
             assert 0 <= p < self.num_pages
-        dup = set(pages) & set(self._free)
-        if dup:
-            raise ValueError(f"double free of pages {sorted(dup)}")
-        self._free.extend(pages)
+            if self._ref[p] <= 0:
+                raise ValueError(f"double free of page {p}")
+        for p in pages:
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
 
     # -- device pool writes (jit'd) --------------------------------------------
     def write_decode_tokens(self, layer_kv: Tuple[jnp.ndarray, jnp.ndarray],
@@ -117,6 +139,20 @@ class PagePool:
         ids, offs = page_ids[valid], offsets[valid]
         self.k[layer, ids, offs] = k_new[valid]
         self.v[layer, ids, offs] = v_new[valid]
+
+    def write_token_range(self, page_ids: np.ndarray, offsets: np.ndarray,
+                          k_toks, v_toks) -> None:
+        """Write per-token KV across ALL layers: k_toks/v_toks [L, T, KV, hd]
+        land at (page_ids[t], offsets[t]).  Used by the suffix-prefill path to
+        fill a copy-on-write page from an arbitrary token offset."""
+        if self.backend == "device":
+            ids = jnp.asarray(page_ids, jnp.int32)
+            offs = jnp.asarray(offsets, jnp.int32)
+            self.k = self.k.at[:, ids, offs].set(jnp.asarray(k_toks, self.k.dtype))
+            self.v = self.v.at[:, ids, offs].set(jnp.asarray(v_toks, self.v.dtype))
+        else:
+            self.k[:, page_ids, offsets] = np.asarray(k_toks, self.k.dtype)
+            self.v[:, page_ids, offsets] = np.asarray(v_toks, self.v.dtype)
 
     # -- swap I/O ---------------------------------------------------------------
     def read_pages(self, pages: List[int]) -> Tuple[np.ndarray, np.ndarray]:

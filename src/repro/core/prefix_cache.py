@@ -1,0 +1,468 @@
+"""Two-tier radix prefix cache: copy-on-write KV page sharing across pools.
+
+Multi-turn chat and agent workloads re-prefill identical system prompts and
+conversation history on every request.  This module keeps finished requests'
+KV pages in a radix tree over **page-aligned token blocks** so a new request
+can skip prefilling its longest cached prefix.  NEO's dual-pool machinery
+makes the cache two-tier: a cached page may live in either pool
+(``node.location``), hot prefixes are promoted back to HBM through the
+:class:`TransferEngine`, and LRU eviction *demotes* device pages to the host
+pool before dropping them outright — host DRAM as the KV capacity tier.
+
+Invariants (see ROADMAP architecture note):
+
+* Node token blocks are page-aligned: ``len(node.tokens) == len(node.pages)
+  * page_size`` and splits happen only at page boundaries.  Divergence
+  *inside* a page is handled at match time by **copy-on-write**: the
+  straddling page is copied into a private page for the requester, valid up
+  to the common token count.
+* Ownership is per-page reference counts in :class:`PagePool`: the tree holds
+  one reference per page it owns; every active reader (request) holds one
+  more.  A page returns to the free list only when its last reference drops —
+  so preemption/swap-out of one request can never evict a shared page out
+  from under a sibling.
+* Only pages with ``refcount == 1`` (tree-only) are evictable or relocatable;
+  pinned pages (in use by a request) never move.
+* Interior nodes are never dropped while they have children (a child's KV is
+  meaningless without its prefix path); they may still be demoted/promoted,
+  which moves pages without changing the tree shape.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.kv_cache import DualPool, PagePool
+
+
+@dataclass
+class PrefixCacheStats:
+    lookups: int = 0
+    hits: int = 0  # lookups with cached_len > 0
+    hit_tokens: int = 0  # prompt tokens served from the cache
+    prompt_tokens: int = 0  # total prefill tokens seen by lookups
+    inserted_pages: int = 0
+    evicted_pages: int = 0  # dropped outright
+    demoted_pages: int = 0  # device -> host (eviction or acquire relocation)
+    promoted_pages: int = 0  # host -> device
+    cow_copies: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        """Token-level hit rate over all lookups."""
+        if self.prompt_tokens <= 0:
+            return 0.0
+        return self.hit_tokens / self.prompt_tokens
+
+
+class RadixNode:
+    """One path-compressed edge: a run of full pages in a single pool."""
+
+    __slots__ = ("tokens", "pages", "location", "parent", "children", "last_access")
+
+    def __init__(self, tokens: List[int], pages: List[int], location: str,
+                 parent: Optional["RadixNode"]):
+        self.tokens = tokens  # len(tokens) == len(pages) * page_size
+        self.pages = pages
+        self.location = location  # "gpu" | "cpu"
+        self.parent = parent
+        # children keyed by their first page-aligned token block
+        self.children: Dict[Tuple[int, ...], "RadixNode"] = {}
+        self.last_access = 0
+
+    @property
+    def npages(self) -> int:
+        return len(self.pages)
+
+
+def _common_tokens(a: Sequence[int], b: Sequence[int]) -> int:
+    n = min(len(a), len(b))
+    i = 0
+    while i < n and a[i] == b[i]:
+        i += 1
+    return i
+
+
+@dataclass
+class MatchResult:
+    """Outcome of a longest-prefix walk (before any copying/pinning)."""
+
+    cached_len: int = 0
+    # full shared pages, in prefix order, with the node that owns each
+    shared: List[Tuple[int, RadixNode]] = field(default_factory=list)
+    # page to copy-on-write for the final partial-page run (page, node, valid)
+    cow: Optional[Tuple[int, RadixNode, int]] = None
+    nodes: List[RadixNode] = field(default_factory=list)
+
+
+class PrefixCache:
+    def __init__(self, pool: DualPool, transfer) -> None:
+        self.pool = pool
+        self.transfer = transfer
+        self.page = pool.page_size
+        self.root = RadixNode([], [], "gpu", None)
+        self.stats = PrefixCacheStats()
+        self._clock = 0
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+    def _pool(self, location: str) -> PagePool:
+        return self.pool.pool(location)
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _iter_nodes(self):
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            yield n
+            stack.extend(n.children.values())
+
+    def _unpinned(self, node: RadixNode) -> bool:
+        pool = self._pool(node.location)
+        return all(pool.refcount(p) == 1 for p in node.pages)
+
+    # ------------------------------------------------------------------
+    # match / lookup
+    # ------------------------------------------------------------------
+    def _walk(self, tokens: Sequence[int]) -> MatchResult:
+        """Longest prefix over page-aligned blocks; never mutates the tree.
+
+        At most ``len(tokens) - 1`` tokens match (at least one token must be
+        prefilled to produce first-token logits).
+        """
+        page = self.page
+        res = MatchResult()
+        cap = max(len(tokens) - 1, 0)
+        cur = self.root
+        i = 0  # matched tokens so far (page-aligned while walking)
+        while i + page <= len(tokens):
+            key = tuple(tokens[i: i + page])
+            child = cur.children.get(key)
+            if child is None:
+                break
+            m = _common_tokens(child.tokens, tokens[i:])
+            full = (m // page) * page
+            res.nodes.append(child)
+            for pi in range(full // page):
+                res.shared.append((child.pages[pi], child))
+            i += full
+            if full < len(child.tokens):
+                rem = m - full
+                if rem > 0:
+                    res.cow = (child.pages[full // page], child, rem)
+                break
+            cur = child
+        # cap: leave >= 1 token to prefill, re-expressing the clipped tail as
+        # a COW of the page it lands in
+        total = i + (res.cow[2] if res.cow else 0)
+        total = min(total, cap)
+        f = total // page
+        rem = total % page
+        if f < len(res.shared):
+            cow_page, cow_node = res.shared[f]
+            res.shared = res.shared[:f]
+            res.cow = (cow_page, cow_node, rem) if rem else None
+        elif res.cow is not None:
+            cow_page, cow_node, _ = res.cow
+            res.cow = (cow_page, cow_node, rem) if rem else None
+        res.cached_len = f * page + rem
+        return res
+
+    def lookup(self, tokens: Sequence[int]) -> int:
+        """Length of the longest cached prefix (no side effects) — used by
+        :meth:`NeoEngine.submit` so the scheduler sees ``req.cached_len``."""
+        return self._walk(tokens).cached_len
+
+    def retract_hit(self, cached_len: int) -> None:
+        """Undo one hit's accounting when the engine discards the acquired
+        prefix (cold-prefill fallback) — hit_rate must reflect prefixes that
+        were actually consumed."""
+        if cached_len > 0:
+            self.stats.hits -= 1
+            self.stats.hit_tokens -= cached_len
+
+    def retract_lookup(self, prompt_tokens: int) -> None:
+        """Undo one lookup's denominator contribution when the engine defers
+        the prefill entirely — the retry re-runs acquire and would otherwise
+        double-count the prompt in hit_rate."""
+        self.stats.lookups -= 1
+        self.stats.prompt_tokens -= prompt_tokens
+
+    # ------------------------------------------------------------------
+    # acquire (engine thread, at prefill dispatch)
+    # ------------------------------------------------------------------
+    def acquire(self, tokens: Sequence[int], target: str) -> Tuple[List[int], Optional[int], int]:
+        """Pin the longest cached prefix of ``tokens`` in the ``target`` pool.
+
+        Returns ``(shared_pages, cow_page, cached_len)``: ``shared_pages``
+        are incref'd tree pages (released by the request's normal refcounted
+        ``free``); ``cow_page`` — present when the match ends mid-page — is a
+        private copy valid for the trailing ``cached_len % page_size``
+        tokens.  Nodes resident in the other pool are relocated through the
+        TransferEngine when unpinned (promotion/demotion), else copied
+        privately for this request.
+        """
+        res = self._walk(tokens)
+        self.stats.lookups += 1
+        self.stats.prompt_tokens += len(tokens)
+        if res.cached_len == 0:
+            return [], None, 0
+        now = self._tick()
+        for node in res.nodes:
+            node.last_access = now
+
+        # PIN FIRST: take the request's reference on every matched page (and
+        # the COW source) before any make_room below runs — a pinned page's
+        # node can be neither evicted nor relocated, so later segments can't
+        # be pulled out from under the in-progress match.
+        segments = _segments(res.shared)
+        for seg_node, seg_pages in segments:
+            self._pool(seg_node.location).incref(seg_pages)
+        if res.cow is not None:
+            self._pool(res.cow[1].location).incref([res.cow[0]])
+
+        pool_t = self._pool(target)
+
+        def _fits(n: int) -> bool:
+            # best effort: evict/demote, then verify real free pages — the
+            # target pool may be held by live requests, in which case the
+            # match is truncated to what fits instead of faulting
+            if pool_t.free_pages < n:
+                self._make_room(target, n)
+            return pool_t.free_pages >= n
+
+        out_pages: List[int] = []
+        consumed = 0  # segments whose pins have been consumed/transferred
+        truncated = False
+        for seg_node, seg_pages in segments:
+            src_pool = self._pool(seg_node.location)
+            if seg_node.location != target:
+                # relocatable: the whole node is matched and carries exactly
+                # the tree's reference plus OUR fresh pin on every page
+                relocatable = (
+                    len(seg_pages) == seg_node.npages
+                    and all(src_pool.refcount(p) == 2 for p in seg_node.pages)
+                )
+                if not _fits(len(seg_pages)):
+                    truncated = True
+                    break
+                if relocatable:
+                    # promote/demote the node itself so the tree serves from
+                    # the target pool next time; our pin moves to the copies
+                    new_pages = self.transfer.copy_pages(
+                        seg_node.pages, seg_node.location, target)
+                    pool_t.incref(new_pages)  # the request's reference
+                    old = seg_node.pages
+                    seg_node.pages = new_pages
+                    seg_node.location = target
+                    src_pool.free(old)  # tree's reference
+                    src_pool.free(old)  # our pin
+                    self._count_move(
+                        "gpu" if src_pool.backend == "device" else "cpu",
+                        target, len(old))
+                    pages = new_pages
+                else:
+                    # pinned by a sibling in the other pool: private copy
+                    pages = self.transfer.copy_pages(
+                        seg_pages, seg_node.location, target)
+                    src_pool.free(seg_pages)  # release our pins on originals
+                    self._count_move(
+                        "gpu" if src_pool.backend == "device" else "cpu",
+                        target, len(pages))
+            else:
+                pages = seg_pages  # our pin IS the request's reference
+            consumed += 1
+            out_pages.extend(pages)
+
+        cow_page: Optional[int] = None
+        rem = 0
+        if res.cow is not None and not truncated:
+            src_page, cow_node, rem = res.cow
+            src_loc = cow_node.location
+            if _fits(1):
+                cow_page = self.transfer.copy_pages([src_page], src_loc, target)[0]
+                self.stats.cow_copies += 1
+                if src_loc != target:
+                    self._count_move(src_loc, target, 1)
+            else:
+                rem = 0
+        # release pins the match did not consume (truncation) + the COW source
+        for seg_node, seg_pages in segments[consumed:]:
+            self._pool(seg_node.location).free(seg_pages)
+        if res.cow is not None:
+            self._pool(res.cow[1].location).free([res.cow[0]])
+
+        cached_len = len(out_pages) * self.page + (rem if cow_page is not None else 0)
+        if cached_len > 0:
+            self.stats.hits += 1
+            self.stats.hit_tokens += cached_len
+        return out_pages, cow_page, cached_len
+
+    def _count_move(self, src: str, dst: str, n: int) -> None:
+        if src == "gpu" and dst == "cpu":
+            self.stats.demoted_pages += n
+        elif src == "cpu" and dst == "gpu":
+            self.stats.promoted_pages += n
+
+    def _relocate(self, node: RadixNode, target: str) -> Dict[int, int]:
+        """Move an unpinned node's pages to ``target``; returns old->new."""
+        self._make_room(target, node.npages, exclude=node)
+        new_pages = self.transfer.copy_pages(node.pages, node.location, target)
+        self._pool(node.location).free(node.pages)
+        mapping = dict(zip(node.pages, new_pages))
+        self._count_move(node.location, target, node.npages)
+        node.pages = new_pages
+        node.location = target
+        return mapping
+
+    # ------------------------------------------------------------------
+    # insert (engine thread, at request finish)
+    # ------------------------------------------------------------------
+    def insert(self, tokens: Sequence[int], pages: Sequence[int], location: str) -> int:
+        """Adopt a finished request's full KV pages into the tree.
+
+        ``tokens``/``pages`` must be page-aligned (callers drop the partial
+        tail).  The tree takes its own reference on every adopted page; runs
+        already present are skipped (the tree keeps its existing pages).
+        Returns the number of newly adopted pages.
+        """
+        page = self.page
+        npages = len(tokens) // page
+        assert len(pages) >= npages
+        now = self._tick()
+        cur = self.root
+        i = 0
+        adopted = 0
+        while i < npages:
+            key = tuple(tokens[i * page: (i + 1) * page])
+            child = cur.children.get(key)
+            if child is None:
+                rest_tokens = list(tokens[i * page: npages * page])
+                rest_pages = list(pages[i:npages])
+                self._pool(location).incref(rest_pages)
+                node = RadixNode(rest_tokens, rest_pages, location, cur)
+                node.last_access = now
+                cur.children[key] = node
+                adopted = len(rest_pages)
+                self.stats.inserted_pages += adopted
+                return adopted
+            m = _common_tokens(child.tokens, tokens[i * page:])
+            full_pages = m // page  # >= 1 (the key matched)
+            if full_pages < child.npages:
+                child = self._split(child, full_pages)
+            child.last_access = now
+            i += full_pages
+            cur = child
+        # fully covered by existing nodes: nothing adopted
+        return adopted
+
+    def insert_request(self, req) -> int:
+        """Insert a finished request's full pages (prompt + emitted tokens)."""
+        kv_tokens = req.all_tokens[: req.kv_len]
+        full = len(kv_tokens) // self.page
+        if full == 0:
+            return 0
+        return self.insert(kv_tokens[: full * self.page], req.pages[:full], req.location)
+
+    def _split(self, node: RadixNode, at_pages: int) -> RadixNode:
+        """Split ``node`` at a page boundary; returns the new parent half."""
+        page = self.page
+        head = RadixNode(node.tokens[: at_pages * page], node.pages[:at_pages],
+                         node.location, node.parent)
+        head.last_access = node.last_access
+        key = tuple(node.tokens[:page])
+        node.parent.children[key] = head
+        node.tokens = node.tokens[at_pages * page:]
+        node.pages = node.pages[at_pages:]
+        node.parent = head
+        head.children[tuple(node.tokens[:page])] = node
+        return head
+
+    # ------------------------------------------------------------------
+    # eviction (LRU; demote device pages to host before dropping)
+    # ------------------------------------------------------------------
+    def evictable_pages(self, location: str) -> int:
+        """Pages the cache could free in ``location`` under memory pressure —
+        added to the scheduler's PoolView so planning sees reclaimable space.
+
+        Conservative: counts only unpinned LEAF nodes plus interior nodes
+        that are demotable right now (host room exists).  Interior nodes
+        with a full host pool cannot be reclaimed in one pass (dropping them
+        would orphan children), so promising their pages would overcommit.
+        """
+        host_free = self.pool.host.free_pages
+        total = 0
+        for n in self._iter_nodes():
+            if n.location != location or not self._unpinned(n):
+                continue
+            if not n.children:
+                total += n.npages
+            elif location == "gpu" and host_free >= n.npages:
+                host_free -= n.npages
+                total += n.npages
+        return total
+
+    def make_room(self, location: str, n: int) -> None:
+        """Ensure ``n`` pages are allocatable in ``location``'s pool, evicting
+        LRU cache nodes as needed.  Device evictions demote to the host pool
+        through the TransferEngine when it has room; host evictions (and
+        device evictions with a full host pool) drop the pages outright."""
+        self._make_room(location, n)
+
+    def _make_room(self, location: str, n: int, exclude: Optional[RadixNode] = None) -> None:
+        pool = self._pool(location)
+        while pool.free_pages < n:
+            cands = [node for node in self._iter_nodes()
+                     if node.location == location and node is not exclude
+                     and self._unpinned(node)]
+            if not cands:
+                return  # nothing reclaimable; let the allocator raise
+            cands.sort(key=lambda nd: nd.last_access)
+            progressed = False
+            for victim in cands:
+                if location == "gpu" and self.pool.host.free_pages >= victim.npages:
+                    self._relocate(victim, "cpu")  # demote, keep in tree
+                    progressed = True
+                elif not victim.children:
+                    self._drop(victim)
+                    progressed = True
+                if progressed:
+                    break
+            if not progressed:
+                return
+        return
+
+    def _drop(self, node: RadixNode) -> None:
+        assert not node.children
+        self._pool(node.location).free(node.pages)
+        self.stats.evicted_pages += node.npages
+        if node.parent is not None:
+            key = tuple(node.tokens[: self.page])
+            node.parent.children.pop(key, None)
+        node.pages = []
+
+    # ------------------------------------------------------------------
+    # introspection (tests / debugging)
+    # ------------------------------------------------------------------
+    def num_nodes(self) -> int:
+        return sum(1 for _ in self._iter_nodes())
+
+    def total_pages(self, location: Optional[str] = None) -> int:
+        return sum(n.npages for n in self._iter_nodes()
+                   if location is None or n.location == location)
+
+
+def _segments(shared: List[Tuple[int, "RadixNode"]]):
+    """Group consecutive (page, node) pairs by owning node, order-preserving."""
+    out: List[Tuple[RadixNode, List[int]]] = []
+    for page, node in shared:
+        if out and out[-1][0] is node:
+            out[-1][1].append(page)
+        else:
+            out.append((node, [page]))
+    return out

@@ -26,6 +26,10 @@ class Request:
     location: str = "gpu"  # where the KV cache lives: "gpu" | "cpu"
     out_tokens: List[int] = field(default_factory=list)
     pages: List[int] = field(default_factory=list)  # page ids in current pool
+    # Prefix-cache hit length (tokens served from cached KV pages; set by
+    # NeoEngine.submit as a scheduler estimate, finalized at prefill
+    # dispatch).  0 when the cache is disabled or misses.
+    cached_len: int = 0
     # modality-frontend extras (precomputed patch/frame embeddings)
     extras: Optional[Dict[str, Any]] = None
     # consecutive iterations the scheduler skipped this (host) request —
@@ -74,6 +78,19 @@ class Request:
     @property
     def prefill_len(self) -> int:
         return len(self.prompt) + max(0, len(self.out_tokens) - 1)
+
+    # -- prefix cache --------------------------------------------------------
+    @property
+    def suffix_len(self) -> int:
+        """Prefill tokens actually computed (beyond the cached prefix)."""
+        return self.prefill_len - min(self.cached_len, max(self.prefill_len - 1, 0))
+
+    def new_prefill_pages(self, page_size: int) -> int:
+        """Pages to allocate for prefill beyond the shared cached full pages
+        (the copy-on-write page for a mid-page hit counts as new)."""
+        total = -(-self.prefill_len // page_size)
+        shared = min(self.cached_len, max(self.prefill_len - 1, 0)) // page_size
+        return total - shared
 
     def is_done(self) -> bool:
         if len(self.out_tokens) >= self.max_new_tokens:

@@ -96,7 +96,9 @@ class BatchPlan:
     # -- derived -----------------------------------------------------------
     @property
     def batch0_tokens(self) -> int:
-        return sum(r.prefill_len for r in self.prefill) + len(self.decode_gpu) + len(
+        # prefix-cache hits only compute (and pay linear-stage time for) the
+        # uncached suffix; suffix_len == prefill_len when the cache is off
+        return sum(r.suffix_len for r in self.prefill) + len(self.decode_gpu) + len(
             self.decode_cpu0
         )
 
@@ -170,7 +172,12 @@ class NeoScheduler:
         return sum(r.kv_len + 1 for r in reqs)
 
     def _prefill_sq(self, plan: BatchPlan) -> float:
-        return float(sum(r.prefill_len ** 2 for r in plan.prefill))
+        # Suffix prefill attends suffix x (prefix + suffix): cost scales as
+        # prefill^2 - cached^2 (= prefill^2 on a cache miss / cache off).
+        return float(sum(
+            r.prefill_len ** 2 - (r.prefill_len - r.suffix_len) ** 2
+            for r in plan.prefill
+        ))
 
     def _t_l0(self, plan: BatchPlan, extra_tokens: int = 0) -> float:
         """Batch-0 device stage per layer: linear + prefill self-attention."""
@@ -247,9 +254,9 @@ class NeoScheduler:
         budget = cfg.max_batch_tokens - plan.batch0_tokens
         while self.waitq and len(plan.prefill) + len(plan.decode_rows) < cfg.max_requests:
             nxt = self.waitq[0]
-            if nxt.prefill_len > budget:
+            if nxt.suffix_len > budget:
                 break
-            pages = -(-nxt.prefill_len // page)
+            pages = nxt.new_prefill_pages(page)  # cached full pages are shared
             if pools.device_take(pages):
                 plan.prefill.append(self.waitq.popleft())
             elif pools.host_take(pages):
@@ -258,7 +265,7 @@ class NeoScheduler:
                 plan.prefill_to_host.append(req)
             else:
                 break
-            budget -= nxt.prefill_len
+            budget -= nxt.suffix_len
 
         # ---- step 4: CPU decode requests -> batch-0 / batch-1 -------------
         in_plan = set(id(r) for r in plan.swap_in)
@@ -329,13 +336,15 @@ class NeoScheduler:
                 break  # CPU underfed: keep feeding it host-destined prefills
             without = self._t_l0(plan) - (
                 perf.t_linear(plan.batch0_tokens)
-                - perf.t_linear(plan.batch0_tokens - req.prompt_len)
-            ) - perf.t_prefill_attn(req.prompt_len ** 2)
+                - perf.t_linear(plan.batch0_tokens - req.suffix_len)
+            ) - perf.t_prefill_attn(
+                req.prefill_len ** 2 - (req.prefill_len - req.suffix_len) ** 2
+            )
             if perf.t_cpu_attn(kv1) <= without:
                 plan.prefill.remove(req)
                 plan.prefill_to_host.remove(req)
                 self.waitq.appendleft(req)
-                pools.host_free += -(-req.prefill_len // page)
+                pools.host_free += req.new_prefill_pages(page)
                 cpu_demand -= perf.t_cpu_attn(req.prompt_len)
 
         # ---- step 6: greedy decision vs the device-only plan --------------
@@ -398,11 +407,11 @@ class NeoScheduler:
         budget = self.engine_cfg.max_batch_tokens - plan.batch0_tokens
         while self.waitq and len(plan.prefill) + len(plan.decode_rows) < self.engine_cfg.max_requests:
             nxt = self.waitq[0]
-            pages = -(-nxt.prefill_len // page)
-            if nxt.prefill_len > budget or not pools.device_take(pages):
+            pages = nxt.new_prefill_pages(page)
+            if nxt.suffix_len > budget or not pools.device_take(pages):
                 break
             plan.prefill.append(self.waitq.popleft())
-            budget -= nxt.prefill_len
+            budget -= nxt.suffix_len
         self._estimate(plan)
         return plan
 
@@ -432,13 +441,13 @@ class NeoScheduler:
         budget = self.engine_cfg.max_batch_tokens
         while self.waitq and len(plan.prefill) + len(plan.decode_rows) < self.engine_cfg.max_requests:
             nxt = self.waitq[0]
-            pages = -(-nxt.prefill_len // page)
-            if nxt.prefill_len > budget or not pools.host_take(pages):
+            pages = nxt.new_prefill_pages(page)
+            if nxt.suffix_len > budget or not pools.host_take(pages):
                 break
             req = self.waitq.popleft()
             plan.prefill.append(req)
             plan.prefill_to_host.append(req)
-            budget -= nxt.prefill_len  # match the admission check (replayed
+            budget -= nxt.suffix_len  # match the admission check (replayed
             # prefills cover prompt + all-but-one emitted token)
         self._estimate(plan)
         return plan
@@ -456,7 +465,9 @@ class NeoScheduler:
             t_swap=perf.t_swap(
                 sum(r.kv_len for r in plan.swap_out)
                 + sum(r.kv_len for r in plan.swap_in)
-                + sum(r.prompt_len for r in plan.prefill_to_host)
+                # host-destined prefills only push the freshly computed
+                # suffix KV over PCIe; cached prefix pages are shared in place
+                + sum(r.suffix_len for r in plan.prefill_to_host)
             ),
         )
         plan.stages = st

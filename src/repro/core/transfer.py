@@ -225,6 +225,40 @@ class TransferEngine:
         return handle
 
     # ------------------------------------------------------------------
+    # page-granular copies (prefix cache: promote / demote / COW)
+    # ------------------------------------------------------------------
+    def copy_pages(self, pages: List[int], src: str, dst: str) -> List[int]:
+        """Copy ``pages`` from the ``src`` pool into freshly allocated pages
+        of the ``dst`` pool ("gpu" | "cpu"); returns the new page ids.
+
+        Runs synchronously on the caller's thread (device-pool writes must
+        stay on the engine thread) with the same PCIe byte accounting as the
+        async swap paths.  The source pages are left untouched — the prefix
+        cache releases them via refcounted ``free`` when appropriate.
+        """
+        src_pool = self.pool.pool(src)
+        dst_pool = self.pool.pool(dst)
+        if not pages:
+            return []
+        k_np, v_np = src_pool.read_pages(pages)
+        new_pages = dst_pool.alloc(len(pages))
+        if dst == "cpu":
+            k_np = np.asarray(k_np, dst_pool.k.dtype)
+            v_np = np.asarray(v_np, dst_pool.v.dtype)
+        dst_pool.put_pages(new_pages, k_np, v_np)
+        if src != dst:  # PCIe crossing: account at the host pool's byte width
+            host = self.pool.host
+            per_page = 2 * host.k[:, :1].nbytes
+            nbytes = per_page * len(pages)
+            with self._lock:
+                if dst == "cpu":
+                    self.stats.bytes_out += nbytes
+                else:
+                    self.stats.bytes_in += nbytes
+            self.pool.add_swap_bytes(nbytes)
+        return new_pages
+
+    # ------------------------------------------------------------------
     # join
     # ------------------------------------------------------------------
     def join(self, handles: Iterable[TransferHandle]) -> None:

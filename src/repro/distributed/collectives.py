@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.sharding import shard_map_nocheck
+
 Pytree = Any
 
 
@@ -64,11 +66,10 @@ def int8_allreduce_mean(
             s = jax.lax.psum(q.astype(jnp.int32), axes)
             return (s.astype(jnp.float32) * scale / n).astype(gl.dtype)
 
-        return jax.shard_map(
+        return shard_map_nocheck(
             body, mesh=mesh,
             in_specs=P(*[None] * g.ndim),
             out_specs=P(*[None] * g.ndim),
-            check_vma=False,
         )(g)
 
     return jax.tree.map(reduce_leaf, tree)

@@ -73,8 +73,19 @@ def run_trace(engine: NeoEngine, trace, *, vocab: int, seed: int = 0,
     metrics.bubble_fraction = engine.stats.bubble_fraction
     metrics.swap_hidden_bytes = engine.stats.swap_hidden_bytes
     metrics.swap_wait_time = engine.stats.swap_wait_time
+    metrics.prefill_tokens_computed = engine.stats.prefill_tokens
     if engine.pool is not None:
         metrics.swap_bytes = engine.pool.swap_bytes
+    if getattr(engine, "prefix_cache", None) is not None:
+        ps = engine.prefix_cache.stats
+        metrics.prefix_hit_rate = ps.hit_rate
+        metrics.prefix_hits = ps.hits
+        metrics.prefix_lookups = ps.lookups
+        metrics.prefix_hit_tokens = ps.hit_tokens
+        metrics.prefix_promoted_pages = ps.promoted_pages
+        metrics.prefix_demoted_pages = ps.demoted_pages
+        metrics.prefix_evicted_pages = ps.evicted_pages
+        metrics.prefix_cow_copies = ps.cow_copies
     return metrics
 
 
@@ -93,6 +104,11 @@ def main(argv=None) -> int:
     ap.add_argument("--max-batch-tokens", type=int, default=2048)
     ap.add_argument("--no-pipeline", action="store_true",
                     help="serial reference execution (no async swaps/overlap)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="two-tier radix prefix cache (COW KV page sharing)")
+    ap.add_argument("--require-hits", action="store_true",
+                    help="exit nonzero if the prefix-cache hit rate is 0 "
+                         "(CI smoke gate for shared-prefix traces)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -103,21 +119,28 @@ def main(argv=None) -> int:
         max_batch_tokens=args.max_batch_tokens,
         policy=args.policy,
         pipeline=not args.no_pipeline,
+        prefix_cache=args.prefix_cache,
         seed=args.seed,
     )
     print(f"[serve] arch={cfg.name} policy={args.policy} "
-          f"pipeline={not args.no_pipeline} "
+          f"pipeline={not args.no_pipeline} prefix_cache={args.prefix_cache} "
           f"pools=({args.device_pages},{args.host_pages})")
     engine = NeoEngine(cfg, ecfg)
     trace = get_trace(args.trace, args.n, args.rate, args.seed)
-    # clamp lengths to smoke scale
+    # clamp lengths to smoke scale (prefix-truncation keeps shared heads
+    # shared, so multiturn prompts stay cacheable)
     for t in trace:
         t.prompt_len = min(t.prompt_len, args.max_batch_tokens // 4)
+        if t.prompt is not None:
+            t.prompt = t.prompt[: t.prompt_len]
         t.output_len = min(t.output_len, 32)
     m = run_trace(engine, trace, vocab=cfg.vocab_size, seed=args.seed)
     engine.close()
     print(json.dumps(m.summary(), indent=1))
     print("scheduler modes:", m.mode_counts)
+    if args.require_hits and m.prefix_hit_rate <= 0.0:
+        print("[serve] FAIL: prefix-cache hit rate is 0 on a shared-prefix trace")
+        return 1
     return 0
 
 

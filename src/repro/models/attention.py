@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed import shard
-from repro.distributed.sharding import current_context
+from repro.distributed.sharding import current_context, shard_map_nocheck
 
 NEG_INF = -1e30
 
@@ -144,6 +144,48 @@ def decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# Suffix-prefill attention over a cached prefix (prefix cache partial prefill)
+# ---------------------------------------------------------------------------
+
+
+def prefix_attention(
+    q: jnp.ndarray,  # [B, S, H, hd] — suffix queries
+    k_pre: jnp.ndarray,  # [B, T, KV, hd] — cached prefix KV, padded to T
+    v_pre: jnp.ndarray,
+    prefix_lens: jnp.ndarray,  # [B] int32 — valid prefix tokens per row
+    k_new: jnp.ndarray,  # [B, S, KV, hd] — the suffix's own KV
+    v_new: jnp.ndarray,
+) -> jnp.ndarray:
+    """Attention for a partial prefill starting at a nonzero KV offset.
+
+    Query ``i`` of row ``b`` sits at absolute position ``prefix_lens[b] + i``
+    and attends over the row's valid cached prefix plus the suffix causally.
+    Prefix padding beyond ``prefix_lens`` (and jointly, via one softmax over
+    the concatenated score matrix) is masked out.  Returns [B, S, H, hd].
+    """
+    B, S, H, hd = q.shape
+    T = k_pre.shape[1]
+    q_per_kv = H // k_new.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+
+    kp = _repeat_kv(k_pre, q_per_kv)
+    vp = _repeat_kv(v_pre, q_per_kv)
+    kn = _repeat_kv(k_new, q_per_kv)
+    vn = _repeat_kv(v_new, q_per_kv)
+
+    s_pre = jnp.einsum("bqhd,bkhd->bqhk", q, kp).astype(jnp.float32) * scale
+    s_new = jnp.einsum("bqhd,bkhd->bqhk", q, kn).astype(jnp.float32) * scale
+    pre_valid = jnp.arange(T)[None, :] < prefix_lens[:, None]  # [B, T]
+    s_pre = jnp.where(pre_valid[:, None, None, :], s_pre, NEG_INF)
+    causal = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]  # [S, S]
+    s_new = jnp.where(causal[None, :, None, :], s_new, NEG_INF)
+    p = jax.nn.softmax(jnp.concatenate([s_pre, s_new], axis=-1), axis=-1)
+    o = jnp.einsum("bqhk,bkhd->bqhd", p[..., :T].astype(vp.dtype), vp)
+    o = o + jnp.einsum("bqhk,bkhd->bqhd", p[..., T:].astype(vn.dtype), vn)
+    return o
+
+
+# ---------------------------------------------------------------------------
 # Split-K decode attention, KV pages sharded over the "model" axis
 # ---------------------------------------------------------------------------
 
@@ -232,7 +274,7 @@ def decode_attention_blocksharded(
         out = (num / jnp.maximum(den, 1e-30)[..., None]).astype(q.dtype)
         return out, kc, vc
 
-    mapped = jax.shard_map(
+    mapped = shard_map_nocheck(
         kernel,
         mesh=mesh,
         in_specs=(
@@ -248,7 +290,6 @@ def decode_attention_blocksharded(
             P(bspec, "model", None, None),
             P(bspec, "model", None, None),
         ),
-        check_vma=False,
     )
     return mapped(q, k_cache, v_cache, k_new, v_new, lens)
 

@@ -508,6 +508,76 @@ class DenseLM:
         }
         return logits, cache
 
+    # -- serve: partial prefill over a cached prefix (prefix cache) ------------
+    def prefill_with_prefix(self, params: Params, tokens: jnp.ndarray,
+                            prefix_k: jnp.ndarray, prefix_v: jnp.ndarray,
+                            prefix_lens: jnp.ndarray, *,
+                            capacity: Optional[int] = None,
+                            true_lens: Optional[jnp.ndarray] = None):
+        """Prefill only the suffix ``tokens`` [B, S] of prompts whose first
+        ``prefix_lens[b]`` tokens already have cached KV.
+
+        ``prefix_k``/``prefix_v``: [L, B, T, KV, hd] gathered cached KV
+        (already roped at its original positions), padded to T and valid per
+        row up to ``prefix_lens``.  Suffix positions are offset by the prefix
+        length, and every layer attends over prefix + causal suffix.  Returns
+        (next-token logits [B, V], suffix k/v [L, B, capacity, KV, hd]).
+        """
+        cfg = self.cfg
+        B, S = tokens.shape
+        capacity = capacity or S
+        positions = prefix_lens[:, None] + jnp.arange(S)[None, :]
+        x = self._embed_tokens(params, tokens)
+
+        def layer(p: Params, kind: str, x, pk, pv):
+            h = rms_norm(x, p["ln1"], cfg.rms_eps)
+            q, k, v = project_qkv(p["attn"], cfg, h, positions)
+            o = attn_lib.prefix_attention(q, pk, pv, prefix_lens, k, v)
+            x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+            h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+            m, _ = self._mlp_apply(p, kind, h2)
+            return x + m, (k, v)
+
+        kvs: List[Tuple[jnp.ndarray, jnp.ndarray]] = []
+        P_ = len(self.prefix_kinds)
+        r = len(self.repeat_kinds)
+        for i, kind in enumerate(self.prefix_kinds):
+            x, kv = layer(params[f"prefix{i}"], kind, x, prefix_k[i], prefix_v[i])
+            kvs.append(kv)
+        g_pk = prefix_k[P_:].reshape((self.n_groups, r) + prefix_k.shape[1:])
+        g_pv = prefix_v[P_:].reshape((self.n_groups, r) + prefix_v.shape[1:])
+
+        def group_body(x, scanned):
+            gp, gpk, gpv = scanned
+            ks, vs = [], []
+            for j, kind in enumerate(self.repeat_kinds):
+                x, (k, v) = layer(gp[f"sub{j}"], kind, x, gpk[j], gpv[j])
+                ks.append(k)
+                vs.append(v)
+            return x, (jnp.stack(ks), jnp.stack(vs))
+
+        x, (g_k, g_v) = jax.lax.scan(group_body, x, (params["blocks"], g_pk, g_pv))
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        if true_lens is None:
+            last_h = x[:, -1]
+        else:
+            last_h = x[jnp.arange(B), jnp.clip(true_lens - 1, 0, S - 1)]
+        logits = logits_last(last_h, self._unembed(params))
+
+        pre_k = (
+            jnp.stack([kv[0] for kv in kvs])
+            if kvs
+            else jnp.zeros((0, B, S, cfg.num_kv_heads, cfg.head_dim), cfg.activation_dtype)
+        )
+        pre_v = jnp.stack([kv[1] for kv in kvs]) if kvs else pre_k
+        k_all = jnp.concatenate([pre_k, g_k.reshape((-1,) + g_k.shape[2:])], axis=0)
+        v_all = jnp.concatenate([pre_v, g_v.reshape((-1,) + g_v.shape[2:])], axis=0)
+        if capacity > S:
+            pad = [(0, 0), (0, 0), (0, capacity - S), (0, 0), (0, 0)]
+            k_all = jnp.pad(k_all, pad)
+            v_all = jnp.pad(v_all, pad)
+        return logits, k_all, v_all
+
     # -- serve: decode (int8 KV variant; §Perf "int8-kv") -----------------------
     def _decode_int8(self, params: Params, tokens: jnp.ndarray, cache, *, window: int = 0):
         cfg = self.cfg

@@ -51,6 +51,7 @@ _GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _OPNAME = re.compile(r"^\(?[\w\[\],{}\s\-]*?\)?\s*([a-z][\w\-]*)\(")
 _DOT_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _OPERANDS = re.compile(r"\(([^)]*)\)")
+_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
 
 
 def _shape_info(rhs: str) -> Tuple[int, int]:
@@ -173,10 +174,15 @@ class HloModule:
             operands: Tuple[str, ...] = ()
             call = _OPERANDS.search(rhs[rhs.find(op):] if op in rhs else rhs)
             if call:
-                operands = tuple(
-                    o.strip().split(" ")[-1].lstrip("%")
-                    for o in call.group(1).split(",") if o.strip()
-                )
+                # Operand names are the %-prefixed tokens; splitting the arg
+                # list on "," is wrong because shapes (f32[128,128]) embed
+                # commas and would shred the names.
+                operands = tuple(_OPERAND_NAME.findall(call.group(1)))
+                if not operands:  # HLO printed without % sigils
+                    operands = tuple(
+                        o.strip().split(" ")[-1]
+                        for o in call.group(1).split(",") if o.strip()
+                    )
             inst = Instruction(name, op, rhs, rbytes, shape, operands)
             cur.instrs.append(inst)
             if line.startswith("ROOT"):

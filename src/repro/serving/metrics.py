@@ -58,6 +58,16 @@ class ServeMetrics:
     bubble_fraction: float = 0.0
     swap_hidden_bytes: int = 0
     swap_wait_time: float = 0.0
+    # prefix cache (PrefixCacheStats mirror; zeros when the cache is off)
+    prefill_tokens_computed: int = 0
+    prefix_hit_rate: float = 0.0
+    prefix_hits: int = 0
+    prefix_lookups: int = 0
+    prefix_hit_tokens: int = 0
+    prefix_promoted_pages: int = 0
+    prefix_demoted_pages: int = 0
+    prefix_evicted_pages: int = 0
+    prefix_cow_copies: int = 0
 
     # ------------------------------------------------------------------
     @property
@@ -126,4 +136,14 @@ class ServeMetrics:
             "bubble_fraction": round(self.bubble_fraction, 3),
             "swap_hidden_MB": round(self.swap_hidden_bytes / 1e6, 3),
             "swap_wait_s": round(self.swap_wait_time, 3),
+            # two-tier prefix cache (all zeros when disabled)
+            "prefill_tokens_computed": self.prefill_tokens_computed,
+            "hit_rate": round(self.prefix_hit_rate, 3),
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_hits": self.prefix_hits,
+            "prefix_lookups": self.prefix_lookups,
+            "prefix_promoted_pages": self.prefix_promoted_pages,
+            "prefix_demoted_pages": self.prefix_demoted_pages,
+            "prefix_evicted_pages": self.prefix_evicted_pages,
+            "prefix_cow_copies": self.prefix_cow_copies,
         }

@@ -29,6 +29,7 @@ class TraceRequest:
     prompt_len: int
     output_len: int
     prompt: Optional[List[int]] = None  # token ids (real-engine runs)
+    conv: Optional[int] = None  # conversation id (multiturn traces)
 
     def materialise(self, rng: np.random.Generator, vocab: int) -> "TraceRequest":
         if self.prompt is None:
@@ -84,16 +85,65 @@ def synthetic_trace(
     return [TraceRequest(float(a), int(pi), int(oi)) for a, pi, oi in zip(arr, p, o)]
 
 
+def multiturn_trace(
+    n: int, rate: float, *, seed: int = 0,
+    turns: int = 4,
+    system_len: int = 192,
+    context_len: int = 64,
+    user_len_median: int = 48,
+    output_median: int = 24,
+    max_output: int = 128,
+    think_time: float = 1.0,
+    vocab: int = 500,
+) -> List[TraceRequest]:
+    """Shared-system-prompt multi-turn conversations (§5.1 style).
+
+    ``n`` requests across ``ceil(n / turns)`` conversations.  Every
+    conversation's prompts start with ONE fleet-wide system prompt
+    (``system_len`` tokens, identical across conversations), followed by a
+    per-conversation context block, and each turn appends that turn's user
+    message — so turn ``k``'s prompt is a strict prefix-extension of turn
+    ``k-1``'s.  Prompts are materialised here (token ids in [1, vocab)) so a
+    prefix cache sees real shared pages.  Conversation starts follow a
+    Poisson process at ``rate / turns`` conversations/s; turns within a
+    conversation are spaced by exponential think time.
+    """
+    rng = np.random.default_rng(seed)
+    n_conv = -(-n // turns)
+    system = list(map(int, rng.integers(1, vocab, size=system_len)))
+    starts = poisson_arrivals(n_conv, rate / max(turns, 1), rng)
+    out: List[TraceRequest] = []
+    for c in range(n_conv):
+        history = system + list(map(int, rng.integers(1, vocab, size=context_len)))
+        t = float(starts[c])
+        for _ in range(turns):
+            if len(out) >= n:
+                break
+            user = _lognormal_lengths(rng, 1, user_len_median, 0.5, 8, 4 * user_len_median)[0]
+            history = history + list(map(int, rng.integers(1, vocab, size=int(user))))
+            olen = _lognormal_lengths(rng, 1, output_median, 0.7, 4, max_output)[0]
+            out.append(TraceRequest(t, len(history), int(olen),
+                                    prompt=list(history), conv=c))
+            t += think_time + float(rng.exponential(think_time))
+    out.sort(key=lambda r: r.arrival_time)
+    return out
+
+
 TRACES = {
     "ac": azure_code_trace,
     "osc": osc_trace,
+    "multiturn": multiturn_trace,
 }
 
 
 def get_trace(name: str, n: int, rate: float, seed: int = 0) -> List[TraceRequest]:
     if name in TRACES:
         return TRACES[name](n, rate, seed=seed)
+    if name.startswith("multiturn:"):  # "multiturn:4" = 4 turns/conversation
+        return multiturn_trace(n, rate, seed=seed, turns=int(name.split(":")[1]))
     if name.startswith("syn:"):  # "syn:1000x100"
         li, lo = name[4:].split("x")
         return synthetic_trace(n, rate, int(li), int(lo), seed=seed)
-    raise KeyError(f"unknown trace {name!r} (have ac, osc, syn:<in>x<out>)")
+    raise KeyError(
+        f"unknown trace {name!r} (have ac, osc, multiturn[:turns], syn:<in>x<out>)"
+    )

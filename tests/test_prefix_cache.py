@@ -1,0 +1,282 @@
+"""Two-tier radix prefix cache: tree mechanics, COW, refcounts, eviction
+order, cross-pool promotion, and cached-vs-cold engine equality."""
+
+import numpy as np
+import pytest
+
+from repro.config import EngineConfig
+from repro.configs import get_smoke_config
+from repro.core.kv_cache import DualPool
+from repro.core.prefix_cache import PrefixCache
+from repro.core.transfer import TransferEngine
+
+
+@pytest.fixture()
+def cfg():
+    return get_smoke_config("qwen3-0.6b")
+
+
+def make_cache(cfg, device_pages=32, host_pages=32):
+    pool = DualPool(cfg, device_pages, host_pages)
+    transfer = TransferEngine(pool)
+    return PrefixCache(pool, transfer), pool, transfer
+
+
+def seed_node(cache, pool, tokens, location="gpu", fill=None):
+    """Simulate a finished request inserting `tokens` (page-aligned)."""
+    page = cache.page
+    n = len(tokens) // page
+    p = pool.pool(location)
+    pages = p.alloc(n)
+    if fill is not None:
+        L = p.num_layers
+        shape = (L, n, page, p.k.shape[3], p.k.shape[4])
+        data = np.full(shape, fill, np.float32)
+        p.put_pages(pages, data, data)
+    cache.insert(tokens, pages, location)
+    p.free(pages)  # request releases; the tree's reference keeps them
+    return pages
+
+
+# ---------------------------------------------------------------------------
+# radix mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_insert_match_page_granularity(cfg):
+    cache, pool, tr = make_cache(cfg)
+    page = cache.page
+    toks = list(range(4 * page))
+    seed_node(cache, pool, toks)
+    assert cache.num_nodes() == 1
+    assert cache.total_pages("gpu") == 4
+
+    # full-prefix query (longer prompt): all 4 pages match
+    assert cache.lookup(toks + [999]) == 4 * page
+    # the cap leaves >= 1 token to prefill: an exact-prompt query re-expresses
+    # the last token as a mid-page COW
+    assert cache.lookup(toks) == 4 * page - 1
+    # miss
+    assert cache.lookup([7777] * (2 * page)) == 0
+    tr.close()
+
+
+def test_insert_splits_at_page_boundary(cfg):
+    cache, pool, tr = make_cache(cfg)
+    page = cache.page
+    a = list(range(4 * page))
+    b = a[: 2 * page] + [9000 + i for i in range(2 * page)]
+    seed_node(cache, pool, a)
+    seed_node(cache, pool, b)
+    # split: shared 2-page parent + two 2-page children; b's duplicate of the
+    # shared prefix is NOT adopted (the tree keeps a's pages), so 6 pages
+    assert cache.num_nodes() == 3
+    assert cache.total_pages("gpu") == 6
+    assert cache.lookup(a + [1]) == 4 * page
+    assert cache.lookup(b + [1]) == 4 * page
+    # duplicate insert adopts nothing new
+    pages_before = cache.total_pages()
+    seed_node(cache, pool, a)
+    assert cache.total_pages() == pages_before
+    tr.close()
+
+
+def test_cow_on_mid_page_divergence(cfg):
+    cache, pool, tr = make_cache(cfg)
+    page = cache.page
+    a = list(range(2 * page))
+    seed_node(cache, pool, a, fill=3.0)
+    src_pages = [n for n in cache._iter_nodes()][0].pages
+
+    # diverges halfway into the second page
+    b = a[: page + page // 2] + [5555] * page
+    shared, cow, clen = cache.acquire(b, "gpu")
+    assert clen == page + page // 2
+    assert len(shared) == 1 and shared[0] == src_pages[0]
+    assert cow is not None and cow not in src_pages  # private copy
+    assert cache.stats.cow_copies == 1
+    # COW page carries the source page's data...
+    np.testing.assert_allclose(
+        np.asarray(pool.device.k[:, cow], np.float32), 3.0)
+    # ...and the source page is still tree-owned, refcount untouched
+    assert pool.device.refcount(src_pages[1]) == 1
+    # shared page is pinned (tree + this reader); cow page is private
+    assert pool.device.refcount(shared[0]) == 2
+    assert pool.device.refcount(cow) == 1
+    tr.close()
+
+
+# ---------------------------------------------------------------------------
+# refcounts: shared pages survive a sibling's release
+# ---------------------------------------------------------------------------
+
+
+def test_shared_page_survives_sibling_free(cfg):
+    cache, pool, tr = make_cache(cfg)
+    page = cache.page
+    toks = list(range(2 * page))
+    seed_node(cache, pool, toks)
+    shared, cow, clen = cache.acquire(toks + [1, 2, 3], "gpu")
+    assert len(shared) == 2 and cow is None and clen == 2 * page
+    free_before = pool.device.free_pages
+    # the "sibling request" is preempted/swapped: its refcounted free must NOT
+    # return tree-shared pages to the free list
+    pool.device.free(shared)
+    assert pool.device.free_pages == free_before
+    assert all(pool.device.refcount(p) == 1 for p in shared)
+    # releasing the tree's reference (eviction) actually frees them
+    cache.make_room("gpu", pool.device.num_pages)  # force full eviction
+    assert pool.device.free_pages == free_before + len(shared)
+    tr.close()
+
+
+# ---------------------------------------------------------------------------
+# eviction order: demote to host before dropping
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_demotes_before_drop(cfg):
+    cache, pool, tr = make_cache(cfg, device_pages=8, host_pages=8)
+    page = cache.page
+    seed_node(cache, pool, list(range(2 * page)), fill=1.0)
+    seed_node(cache, pool, [10_000 + i for i in range(2 * page)], fill=2.0)
+    assert pool.device.free_pages == 4
+
+    cache.make_room("gpu", 6)  # must reclaim 2 cached pages
+    # demoted (host had room), NOT dropped: both prefixes still match
+    assert cache.stats.demoted_pages == 2
+    assert cache.stats.evicted_pages == 0
+    assert cache.total_pages("cpu") == 2
+    assert pool.device.free_pages >= 6
+    assert cache.lookup(list(range(2 * page)) + [1]) == 2 * page
+
+    # exhaust the host pool; further device pressure must DROP, not demote
+    blocker = pool.host.alloc(pool.host.free_pages)
+    cache.make_room("gpu", 8)
+    assert cache.stats.evicted_pages == 2
+    assert pool.device.free_pages == 8
+    pool.host.free(blocker)
+    tr.close()
+
+
+def test_lru_evicts_coldest_first(cfg):
+    cache, pool, tr = make_cache(cfg, device_pages=8, host_pages=4)
+    page = cache.page
+    a = list(range(2 * page))
+    b = [20_000 + i for i in range(2 * page)]
+    seed_node(cache, pool, a)
+    seed_node(cache, pool, b)
+    # touch A (acquire + release) so B is the LRU victim
+    shared, _, _ = cache.acquire(a + [1], "gpu")
+    pool.device.free(shared)
+    cache.make_room("gpu", 6)  # forces 2 pages out (demoted to host)
+    assert cache.lookup(a + [1]) == 2 * page  # A still device-resident
+    [b_node] = [n for n in cache._iter_nodes() if n.tokens[0] == 20_000]
+    assert b_node.location == "cpu"
+    tr.close()
+
+
+# ---------------------------------------------------------------------------
+# two-tier promotion through the TransferEngine
+# ---------------------------------------------------------------------------
+
+
+def test_promotion_through_transfer_engine(cfg):
+    cache, pool, tr = make_cache(cfg)
+    page = cache.page
+    toks = list(range(2 * page))
+    seed_node(cache, pool, toks, location="cpu", fill=4.0)
+    assert cache.total_pages("cpu") == 2
+
+    bytes_in_before = tr.stats.bytes_in
+    shared, cow, clen = cache.acquire(toks + [1], "gpu")
+    assert clen == 2 * page
+    # the unpinned node itself was promoted: the tree now serves from HBM
+    assert cache.total_pages("gpu") == 2 and cache.total_pages("cpu") == 0
+    assert cache.stats.promoted_pages == 2
+    assert tr.stats.bytes_in > bytes_in_before  # crossed PCIe via the engine
+    np.testing.assert_allclose(
+        np.asarray(pool.device.k[:, shared], np.float32), 4.0, atol=0.01)
+    tr.close()
+
+
+def test_acquire_truncates_and_releases_pins_when_target_full(cfg):
+    """A cross-pool match that cannot fit the target pool is truncated, and
+    every pin taken during the attempt is released (no refcount leaks, no
+    eviction of the matched node mid-acquire)."""
+    cache, pool, tr = make_cache(cfg, device_pages=4, host_pages=16)
+    page = cache.page
+    toks = list(range(3 * page))
+    seed_node(cache, pool, toks, location="cpu")
+    [node] = list(cache._iter_nodes())
+    blocker = pool.device.alloc(pool.device.free_pages)  # device 100% busy
+
+    shared, cow, clen = cache.acquire(toks + [1], "gpu")
+    assert clen == 0 and shared == [] and cow is None
+    # the host node survived intact with only the tree's references
+    assert node.pages and all(pool.host.refcount(p) == 1 for p in node.pages)
+    assert cache.lookup(toks + [1]) == 3 * page
+    pool.device.free(blocker)
+    tr.close()
+
+
+def test_pinned_node_copied_not_relocated(cfg):
+    cache, pool, tr = make_cache(cfg)
+    page = cache.page
+    toks = list(range(2 * page))
+    seed_node(cache, pool, toks, location="cpu")
+    # first reader pins the node on the host side
+    host_shared, _, _ = cache.acquire(toks + [1], "cpu")
+    # a device-destined reader must get a private copy, not move the node
+    dev_shared, _, _ = cache.acquire(toks + [2], "gpu")
+    assert cache.total_pages("cpu") == 2  # node did not move
+    assert all(pool.device.refcount(p) == 1 for p in dev_shared)
+    tr.close()
+
+
+# ---------------------------------------------------------------------------
+# engine: cached vs cold prefill equality (greedy decode)
+# ---------------------------------------------------------------------------
+
+
+def _run_engine(cfg, prompts, prefix_cache, **ecfg_kw):
+    from repro.core.engine import NeoEngine
+
+    ecfg = EngineConfig(device_pool_pages=64, host_pool_pages=128,
+                        max_batch_tokens=512, policy="neo",
+                        prefix_cache=prefix_cache, **ecfg_kw)
+    eng = NeoEngine(cfg, ecfg)
+    out = {}
+    for p in prompts:  # sequential: earlier requests seed the tree
+        eng.submit(p, 6)
+        out.update(eng.run_until_done())
+    stats = eng.prefix_cache.stats if eng.prefix_cache else None
+    prefill_tokens = eng.stats.prefill_tokens
+    eng.close()
+    return out, stats, prefill_tokens
+
+
+def test_cached_prefill_matches_cold(cfg):
+    rng = np.random.default_rng(0)
+    shared = list(map(int, rng.integers(1, 500, size=40)))
+    prompts = [shared + list(map(int, rng.integers(1, 500, size=12)))
+               for _ in range(3)]
+    prompts.append(list(prompts[-1]))  # exact repeat: full-prompt hit + COW
+
+    cold, _, cold_tokens = _run_engine(cfg, prompts, prefix_cache=False)
+    warm, stats, warm_tokens = _run_engine(cfg, prompts, prefix_cache=True)
+
+    assert cold == warm  # greedy outputs identical, token for token
+    assert stats.hits >= 3 and stats.hit_tokens > 0
+    assert warm_tokens < cold_tokens  # suffix-only prefill actually happened
+
+
+def test_cache_off_default_unchanged(cfg):
+    """EngineConfig.prefix_cache defaults to False and the engine then has no
+    cache object at all — the compat path."""
+    from repro.core.engine import NeoEngine
+
+    eng = NeoEngine(cfg, EngineConfig(device_pool_pages=16, host_pool_pages=16))
+    assert EngineConfig().prefix_cache is False
+    assert eng.prefix_cache is None
+    eng.close()

@@ -5,7 +5,9 @@ request, and never starve one."""
 from collections import deque
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.config import EngineConfig
 from repro.configs import get_config
