@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -23,7 +24,8 @@ from repro.models.api import get_model
 from repro.serving.traces import get_trace
 
 
-def run(policy: str, n: int, seed: int = 0, pipeline: bool = True):
+def run(policy: str, n: int, seed: int = 0, pipeline: bool = True,
+        microbatch: bool = True):
     cfg = get_smoke_config("qwen3-0.6b")
     model = get_model(cfg)
     import jax
@@ -31,7 +33,7 @@ def run(policy: str, n: int, seed: int = 0, pipeline: bool = True):
     params = model.init(jax.random.key(seed))
     ecfg = EngineConfig(
         device_pool_pages=24, host_pool_pages=128, max_batch_tokens=1024,
-        policy=policy, pipeline=pipeline, seed=seed,
+        policy=policy, pipeline=pipeline, microbatch=microbatch, seed=seed,
     )
     eng = NeoEngine(cfg, ecfg, params=params)
     rng = np.random.default_rng(seed)
@@ -70,6 +72,7 @@ def run(policy: str, n: int, seed: int = 0, pipeline: bool = True):
     out = {
         "policy": policy,
         "pipeline": pipeline,
+        "microbatch": microbatch,
         "requests_done": done,
         "token_throughput": round(total_tokens / wall, 1),
         "wall_s": round(wall, 2),
@@ -83,33 +86,102 @@ def run(policy: str, n: int, seed: int = 0, pipeline: bool = True):
         "overlap_s": round(eng.stats.pipeline_overlap_time, 3),
         "bubble_fraction": round(eng.stats.bubble_fraction, 3),
         "swap_hidden_MB": round(eng.stats.swap_hidden_bytes / 1e6, 3),
+        "microbatched_steps": eng.stats.microbatched_steps,
+        "serial_b1_steps": eng.stats.serial_b1_steps,
+        "lane_busy_s": {k: round(v, 3)
+                        for k, v in sorted(eng.stats.lane_busy_time.items())},
     }
+    outputs = {i: list(eng.requests[rid].out_tokens)
+               for i, rid in enumerate(rids)}
     eng.close()
-    return out
+    return out, outputs
+
+
+def run_microbatch_section(n: int, on: Optional[Tuple[dict, dict]] = None
+                           ) -> Tuple[int, dict]:
+    """Batch-1-only overlap: fastdecode(+) decode iterations have no device
+    lane, so without micro-batching host attention runs fully serialized.
+    Compares microbatch off vs on and GATES: greedy outputs must be bitwise
+    identical and bubble_fraction must not regress (strictly improve, in
+    practice) on the iterations that were eligible.
+
+    ``on`` reuses the policy loop's fastdecode run (microbatch defaults on)
+    so the full benchmark doesn't execute the same configuration twice;
+    when absent, off runs first so warm compile caches don't bias against
+    the serialized path (gate-conservative either way).
+    """
+    results = {}
+    r_off, out_off = run("fastdecode", n, pipeline=True, microbatch=False)
+    r_on, out_on = on if on is not None else run(
+        "fastdecode", n, pipeline=True, microbatch=True)
+    results["fastdecode_mb_off"] = r_off
+    results["fastdecode_mb_on"] = r_on
+    rows = [[k, r["microbatched_steps"], r["serial_b1_steps"],
+             r["overlap_s"], r["bubble_fraction"], r["token_throughput"]]
+            for k, r in results.items()]
+    print("=== Micro-batched batch-1-only plans (fastdecode, smoke) ===")
+    print_table(["run", "mb steps", "serial b1", "overlap s", "bubble",
+                 "tok/s"], rows)
+    rc = 0
+    if out_on != out_off:
+        print("[engine_real] FAIL: microbatch on/off greedy outputs diverge")
+        rc = 1
+    if r_on["microbatched_steps"] == 0:
+        print("[engine_real] FAIL: no micro-batched steps on a fastdecode "
+              "trace (batch-1-only plans must split)")
+        rc = 1
+    if r_on["bubble_fraction"] > r_off["bubble_fraction"]:
+        print(f"[engine_real] FAIL: bubble_fraction regressed "
+              f"({r_on['bubble_fraction']} > {r_off['bubble_fraction']})")
+        rc = 1
+    print(f"[engine_real] microbatch gate: bubble {r_off['bubble_fraction']}"
+          f" -> {r_on['bubble_fraction']}, outputs "
+          f"{'identical' if out_on == out_off else 'DIVERGED'}")
+    return rc, results
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=24)
+    ap.add_argument("--microbatch-only", action="store_true",
+                    help="run only the micro-batch on/off gate (CI smoke)")
     args = ap.parse_args(argv)
     rows = []
     results = {}
-    # neo runs twice: serial reference first, then pipelined (the default) —
-    # the delta is the realized (not modelled) overlap win.  Serial runs
-    # first so the process-global op caches it warms don't bias against it.
-    for pol, pipe in (("gpu_only", True), ("neo", False), ("neo", True),
-                      ("fastdecode", True)):
-        r = run(pol, args.n, pipeline=pipe)
-        key = pol if pipe else pol + "_serial"
-        results[key] = r
-        rows.append([key, r["requests_done"], r["token_throughput"],
-                     r["iterations"], r["offloaded"], r["device"],
-                     r["swap_MB"], r["overlap_s"], r["bubble_fraction"]])
-    print("=== Real engine (smoke qwen3-0.6b, OSC burst, this host) ===")
-    print_table(["policy", "done", "tok/s", "iters", "offl dec", "dev dec",
-                 "swap MB", "overlap s", "bubble"], rows)
+    fastdecode_run = None
+    if not args.microbatch_only:
+        # neo runs twice: serial reference first, then pipelined (the
+        # default) — the delta is the realized (not modelled) overlap win.
+        # Serial runs first so the process-global op caches it warms don't
+        # bias against it.
+        for pol, pipe in (("gpu_only", True), ("neo", False), ("neo", True),
+                          ("fastdecode", True)):
+            r, outs = run(pol, args.n, pipeline=pipe)
+            key = pol if pipe else pol + "_serial"
+            results[key] = r
+            if key == "fastdecode":
+                fastdecode_run = (r, outs)
+            rows.append([key, r["requests_done"], r["token_throughput"],
+                         r["iterations"], r["offloaded"], r["device"],
+                         r["swap_MB"], r["overlap_s"], r["bubble_fraction"]])
+        print("=== Real engine (smoke qwen3-0.6b, OSC burst, this host) ===")
+        print_table(["policy", "done", "tok/s", "iters", "offl dec",
+                     "dev dec", "swap MB", "overlap s", "bubble"], rows)
+    rc, mb_results = run_microbatch_section(args.n, on=fastdecode_run)
+    if args.microbatch_only:
+        # merge into the existing figure JSON instead of clobbering the
+        # full policy comparison (this is the CI / local-gate entry point)
+        import json
+        import os
+
+        from benchmarks.common import FIG_DIR
+        path = os.path.join(FIG_DIR, "engine_real.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                results = json.load(f)
+    results.update(mb_results)
     save_json("engine_real.json", results)
-    return 0
+    return rc
 
 
 if __name__ == "__main__":

@@ -265,6 +265,12 @@ class EngineConfig:
     # Default for paged families; False forces the serial reference path.
     # "serial"-mode plans (policy="simple") always execute serially.
     pipeline: bool = True
+    # Micro-batched host attention for batch-1-only plans (FastDecode-style):
+    # when a plan has no batch-0 lane to hide CPU attention under, split the
+    # host rows into two alternating sub-batches so one sub-batch's host
+    # attention overlaps the other's linear stages.  Only acts when
+    # ``pipeline`` is on; False falls back to the inline serial batch-1 path.
+    microbatch: bool = True
     # Two-tier radix prefix cache (core/prefix_cache.py): finished requests'
     # KV pages are kept in a radix tree spanning both pools and shared
     # copy-on-write with later requests that repeat the prefix.  Off by

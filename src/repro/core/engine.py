@@ -12,7 +12,12 @@ One :meth:`step` = one inference iteration (Fig. 5), executed in explicit
   right before host attention reads the pages; swap-ins join on the engine
   thread right before the device graph consumes the pool); both lanes'
   logits join and new tokens are sampled in plan order, so greedy decode is
-  bitwise identical to the serial path (``pipeline=False``).
+  bitwise identical to the serial path (``pipeline=False``).  Batch-1-ONLY
+  plans (no device lane — the FastDecode+/full-offload regime) instead split
+  the host rows into two alternating micro-batch lanes when the plan is
+  annotated ``microbatch=True``: sub-batch A's host attention overlaps
+  sub-batch B's linear stages and vice versa, recovering overlap where the
+  asymmetric two-batch scheme has nothing to hide behind.
 
 :class:`EngineStats` records the *measured* overlap (pipeline bubble
 fraction, swap bytes hidden under compute, host-vs-device busy time), which
@@ -64,12 +69,21 @@ class EngineStats:
     # device_busy_time: wall time of prefill + batch-0 dispatches (the lane
     # batch-1 is supposed to hide under).
     device_busy_time: float = 0.0
-    # pipeline_overlap_time: measured intersection of the batch-0 and
-    # batch-1 dispatch windows; pipeline_ideal_time: the shorter lane's
-    # duration (perfect pipelining would hide all of it).
+    # pipeline_overlap_time: measured intersection of the two lanes'
+    # dispatch windows (batch-0 vs batch-1, or micro-batch A vs B);
+    # pipeline_ideal_time: the shorter lane's duration (perfect pipelining
+    # would hide all of it).  Serialized batch-1-only steps contribute
+    # ideal-but-no-overlap time (the hideable half of the lane ran
+    # unhidden), so bubble_fraction stays honest when one lane is empty.
     pipeline_overlap_time: float = 0.0
     pipeline_ideal_time: float = 0.0
     pipelined_steps: int = 0
+    # -- micro-batched batch-1-only lane (FastDecode-style) ----------------
+    microbatched_steps: int = 0  # steps that split batch-1 into two lanes
+    serial_b1_steps: int = 0  # batch-1-only steps that ran inline (no split)
+    # per-lane dispatch wall time: "prefill" / "batch0" / "batch1" /
+    # "micro_a" / "micro_b" / "serial" (the pipeline=False fused path)
+    lane_busy_time: Dict[str, float] = field(default_factory=dict)
     # -- transfer engine mirror (async swaps) ------------------------------
     swap_out_bytes: int = 0
     swap_in_bytes: int = 0
@@ -82,17 +96,30 @@ class EngineStats:
         if len(self.plans) < 1000:
             self.plans.append(plan.summary())
 
+    def lane_add(self, lane: str, dt: float) -> None:
+        self.lane_busy_time[lane] = self.lane_busy_time.get(lane, 0.0) + dt
+
     @property
     def bubble_fraction(self) -> float:
-        """1 - realized/ideal overlap across pipelined steps (0 = no bubble)."""
+        """1 - realized/ideal overlap (0 = no bubble).  NaN-free and
+        lane-aware: ideal time accumulates the shorter lane of every
+        two-lane step AND the hideable half of serialized batch-1-only
+        steps (where overlap was structurally possible but zero was
+        realized), so a fully serialized host-attention workload reports a
+        bubble near 1.0 rather than a misleading 0.0.  With no hideable
+        work at all there is nothing to pipeline: 0.0."""
         if self.pipeline_ideal_time <= 0:
             return 0.0
-        return max(0.0, 1.0 - self.pipeline_overlap_time / self.pipeline_ideal_time)
+        return min(1.0, max(
+            0.0, 1.0 - self.pipeline_overlap_time / self.pipeline_ideal_time))
 
     @property
     def host_device_busy_ratio(self) -> float:
+        """Host-attention busy time over device-lane busy time, NaN-free:
+        a host-only workload (empty device lane, e.g. batch-1-only plans)
+        reports +inf rather than a misleading 0.0; fully idle reports 0.0."""
         if self.device_busy_time <= 0:
-            return 0.0
+            return float("inf") if self.host_busy_time > 0 else 0.0
         return self.host_busy_time / self.device_busy_time
 
 
@@ -399,6 +426,13 @@ class NeoEngine:
             # allocation order below)
             _grow_decode_pages()
 
+        # Dispatch-time token budget: the scheduler admitted each prefill
+        # against its SUBMIT-time cached_len estimate; the authoritative
+        # acquire() below may shrink the match (tree changed since submit),
+        # growing suffix_len past max_batch_tokens for this one batch.  Page
+        # shortfalls already defer — token-budget shortfalls must too.
+        token_budget = (self.engine_cfg.max_batch_tokens
+                        - len(plan.decode_gpu) - len(plan.decode_cpu0))
         to_host: List[bool] = []
         deferred: List[Request] = []
         for r in plan.prefill:
@@ -414,6 +448,20 @@ class NeoEngine:
                 target = "cpu" if host else "gpu"
                 shared, cow, r.cached_len = self.prefix_cache.acquire(
                     r.prefill_tokens, target)
+                if r.suffix_len > token_budget:
+                    # the match shrank and the realized suffix no longer fits
+                    # this batch's token budget: release the pins and defer
+                    # to the next iteration (the retry re-runs acquire, so
+                    # drop this lookup from the hit-rate accounting)
+                    if shared:
+                        pool.free(shared)
+                    if cow is not None:
+                        pool.free([cow])
+                    self.prefix_cache.retract_hit(r.cached_len)
+                    self.prefix_cache.retract_lookup(len(r.prefill_tokens))
+                    r.cached_len = 0
+                    deferred.append(r)
+                    continue
                 total = -(-r.prefill_len // page)
                 fresh = total - len(shared) - (1 if cow is not None else 0)
                 self.prefix_cache.make_room(target, fresh)
@@ -428,6 +476,12 @@ class NeoEngine:
                         pool.free([cow])
                     self.prefix_cache.retract_hit(r.cached_len)
                     r.cached_len = 0
+                    if r.suffix_len > token_budget:
+                        # the cold suffix (== full prefill) busts the token
+                        # budget too: defer instead of overrunning the batch
+                        self.prefix_cache.retract_lookup(len(r.prefill_tokens))
+                        deferred.append(r)
+                        continue
                     self.prefix_cache.make_room(target, total)
                     if pool.free_pages < total:
                         # genuine overcommit (evictable pages got pinned by
@@ -452,6 +506,7 @@ class NeoEngine:
                         deferred.append(r)
                         continue
                 r.pages = pool.alloc(npages)
+            token_budget -= r.suffix_len
             to_host.append(host)
         for r in reversed(deferred):
             # unwind the commit: back to the head of the waitqueue, re-planned
@@ -474,15 +529,20 @@ class NeoEngine:
         # batch-1 (host rows) launches FIRST: its swap-out join + host
         # attention overlap the whole device lane (prefill is integrated
         # into batch-0 — Fig. 5's T_l0 covers it).  With no device lane to
-        # hide under, batch-1 runs inline — a future would only add thread
-        # handoff latency.
+        # hide under, the plan's micro-batch annotation splits batch-1 into
+        # two alternating sub-batch lanes (FastDecode-style); otherwise
+        # batch-1 runs inline — a future would only add thread handoff
+        # latency.
         b1_future = None
         b1_inline = False
+        b1_micro = False
         if pipelined and rows1:
             if plan.prefill or rows0:
                 pre_b1 = (lambda: self.transfer.join(out_handles)) \
                     if out_handles else None
                 b1_future = self.executor.submit_batch1(rows1, pre_b1=pre_b1)
+            elif plan.microbatch and len(rows1) >= 2:
+                b1_micro = True  # dispatched below, both lanes together
             else:
                 b1_inline = True
 
@@ -496,6 +556,7 @@ class NeoEngine:
             logits = self.executor.prefill(plan.prefill, to_host, self._extras_batch)
             dev_windows.append((t0, time.perf_counter()))
             self.stats.device_busy_time += dev_windows[-1][1] - t0
+            self.stats.lane_add("prefill", dev_windows[-1][1] - t0)
             # computed prefill tokens: prefix-cache hits skip the cached part
             self.stats.prefill_tokens += sum(r.suffix_len for r in plan.prefill)
             for i, r in enumerate(plan.prefill):
@@ -514,6 +575,7 @@ class NeoEngine:
                         rows0, host_flags[: len(rows0)])
                     dev_windows.append((t0, time.perf_counter()))
                     self.stats.device_busy_time += dev_windows[-1][1] - t0
+                    self.stats.lane_add("batch0", dev_windows[-1][1] - t0)
                 row_logits: List[np.ndarray] = []
                 if rows0:
                     row_logits.extend(np.asarray(logits0))
@@ -521,6 +583,7 @@ class NeoEngine:
                     logits1, (s1, e1) = b1_future.result()
                     b1_end = e1
                     row_logits.extend(np.asarray(logits1))
+                    self.stats.lane_add("batch1", e1 - s1)
                     if dev_windows:
                         self.stats.pipeline_overlap_time += sum(
                             max(0.0, min(e, e1) - max(s, s1))
@@ -528,16 +591,52 @@ class NeoEngine:
                         self.stats.pipeline_ideal_time += min(
                             sum(e - s for s, e in dev_windows), e1 - s1)
                         self.stats.pipelined_steps += 1
+                elif b1_micro:
+                    # micro-batched batch-1-only step: lane A on the batch-1
+                    # thread, lane B inline on the engine thread — A's host
+                    # attention overlaps B's linear stages and vice versa.
+                    # Swap-outs join first: both lanes read host pages.
+                    self.transfer.join(out_handles)
+                    k = min(max(plan.microbatch_split, 1), len(rows1) - 1)
+                    fut = self.executor.submit_batch1(rows1[:k], lane=1)
+                    t0b = time.perf_counter()
+                    logits_b = self.executor.decode_batch1(rows1[k:], lane=2)
+                    wb = (t0b, time.perf_counter())
+                    logits_a, wa = fut.result()
+                    row_logits.extend(np.asarray(logits_a))
+                    row_logits.extend(np.asarray(logits_b))
+                    b1_end = max(wa[1], wb[1])
+                    self.stats.lane_add("micro_a", wa[1] - wa[0])
+                    self.stats.lane_add("micro_b", wb[1] - wb[0])
+                    self.stats.pipeline_overlap_time += max(
+                        0.0, min(wa[1], wb[1]) - max(wa[0], wb[0]))
+                    self.stats.pipeline_ideal_time += min(
+                        wa[1] - wa[0], wb[1] - wb[0])
+                    self.stats.pipelined_steps += 1
+                    self.stats.microbatched_steps += 1
                 elif b1_inline:
                     self.transfer.join(out_handles)
+                    hb0 = self.host_attn.busy_time
+                    t0b = time.perf_counter()
                     row_logits.extend(np.asarray(
                         self.executor.decode_batch1(rows1)))
                     b1_end = time.perf_counter()
+                    lane = b1_end - t0b
+                    hb = self.host_attn.busy_time - hb0
+                    self.stats.lane_add("batch1", lane)
+                    # fully serialized batch-1-only step: the hideable half
+                    # (the shorter of host attention vs the linear
+                    # remainder) counts as ideal-but-unrealized overlap so
+                    # bubble_fraction reflects the missing lane
+                    self.stats.pipeline_ideal_time += max(
+                        0.0, min(hb, lane - hb))
+                    self.stats.serial_b1_steps += 1
             else:
                 t0 = time.perf_counter()
                 logits = self.executor.decode(rows, host_flags)
                 dev_windows.append((t0, time.perf_counter()))
                 self.stats.device_busy_time += dev_windows[-1][1] - t0
+                self.stats.lane_add("serial", dev_windows[-1][1] - t0)
                 row_logits = list(logits)
 
             self.stats.offloaded_decodes += sum(host_flags)

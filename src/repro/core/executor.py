@@ -12,12 +12,20 @@ Two executors:
     JAX-native analogue of the paper's TrQKV → CPU-attn → TrO pipeline).
     Python kernel-launch overhead is paid once per iteration (the paper's §4
     launch-overhead fix, achieved with XLA fusion instead of CUDA C++).
-  - **batch-1** (host rows only): a per-layer loop driven from a dedicated
-    dispatch thread — small jitted linear stages plus direct
-    :meth:`HostAttention.run_layer` calls on its thread pool.  Because it
-    never touches the device KV pool, it runs **concurrently** with batch-0's
-    jitted dispatch; :meth:`submit_batch1` hands the result back through a
-    future (Fig. 5's asymmetric overlap, realized rather than modelled).
+  - **batch-1** (host rows only): a fused host-only graph dispatched from a
+    dedicated thread — small jitted linear stages plus
+    :meth:`HostAttention.run_layer` through its own ordered io_callback
+    chain.  Because it never touches the device KV pool, it runs
+    **concurrently** with batch-0's jitted dispatch; :meth:`submit_batch1`
+    hands the result back through a future (Fig. 5's asymmetric overlap,
+    realized rather than modelled).
+  - **micro-batched batch-1** (batch-1-only plans): with no batch-0 lane to
+    hide under, the engine splits the host rows into two alternating
+    sub-batches on independent lanes (lane 1 on the dispatch thread, lane 2
+    inline on the engine thread) — sub-batch A's host attention overlaps
+    sub-batch B's linear stages, FastDecode-style.  Each lane owns its own
+    io_callback/state/graph triple, so the two fused graphs execute
+    concurrently without sharing mutable state.
 
   The serial :meth:`decode` path (all rows in one fused graph) is kept for
   ``pipeline=False`` and as the bitwise-equality oracle for the pipelined
@@ -77,13 +85,18 @@ class PagedExecutor:
         self._cb_state: Dict[str, np.ndarray] = {}
         self._decode_fns: Dict[Tuple[int, int], Any] = {}
         self._prefill_fns: Dict[Tuple[int, int], Any] = {}
-        # batch-1 lane: dedicated dispatch thread + its own fused host-only
-        # graph per row bucket, with a SEPARATE io_callback/state pair so the
-        # two graphs can execute concurrently without sharing mutable state
+        # batch-1 lanes: a dedicated dispatch thread plus per-lane fused
+        # host-only graphs, each with a SEPARATE io_callback/state pair so
+        # concurrent graphs never share mutable state.  Lane 1 is the
+        # classic batch-1 lane (dispatched on the thread, overlapping
+        # batch-0); lane 2 exists for micro-batched batch-1-only plans —
+        # the engine runs sub-batch A on the thread (lane 1) and sub-batch
+        # B inline on its own thread (lane 2), so A's host attention
+        # overlaps B's linear stages FastDecode-style.
         self._b1_pool = ThreadPoolExecutor(max_workers=1,
                                            thread_name_prefix="neo-batch1")
-        self._cb_state1: Dict[str, np.ndarray] = {}
-        self._b1_fn: Optional[Any] = None
+        self._cb_lane_state: Dict[int, Dict[str, np.ndarray]] = {1: {}, 2: {}}
+        self._b1_fns: Dict[int, Any] = {}
 
     # ------------------------------------------------------------------
     # host attention callback (one per layer, ordered)
@@ -269,8 +282,8 @@ class PagedExecutor:
     # ------------------------------------------------------------------
     # batch-1 lane (host rows only; runs off the engine thread)
     # ------------------------------------------------------------------
-    def _host_cb1(self, layer, q, k_new, v_new):
-        st = self._cb_state1
+    def _host_cb_lane(self, lane, layer, q, k_new, v_new):
+        st = self._cb_lane_state[lane]
         layer = int(layer)
         if st["host_rows"].size == 0:
             return np.zeros(q.shape, np.float32)
@@ -287,18 +300,20 @@ class PagedExecutor:
             window=int(st["window"][0]) if "window" in st else 0,
         )
 
-    def _build_decode_b1(self):
+    def _build_decode_b1(self, lane: int):
         """Fused decode graph for an all-host-rows batch: the per-layer pre
         and post halves are shared with the batch-0 graph; attention is the
         ordered host callback only — no device pool access, no donation, so
-        the graph can execute concurrently with batch-0's.  One jit object;
-        jax retraces per row bucket."""
+        the graph can execute concurrently with batch-0's (or, across lanes,
+        with the other micro-batch's graph).  One jit object per lane; jax
+        retraces per row bucket."""
         model, cfg = self.model, self.cfg
+        cb = functools.partial(self._host_cb_lane, lane)
 
         def layer(p: Params, kind: str, lidx, x, positions):
             q, k, v = self._layer_pre(p, x, positions)
             host_out = io_callback(
-                self._host_cb1,
+                cb,
                 jax.ShapeDtypeStruct(q.shape, jnp.float32),
                 lidx, q, k, v,
                 ordered=True,
@@ -329,12 +344,13 @@ class PagedExecutor:
 
         return jax.jit(step)
 
-    def decode_b1_fn(self):
-        if self._b1_fn is None:
-            self._b1_fn = self._build_decode_b1()
-        return self._b1_fn
+    def decode_b1_fn(self, lane: int = 1):
+        if lane not in self._b1_fns:
+            self._b1_fns[lane] = self._build_decode_b1(lane)
+        return self._b1_fns[lane]
 
-    def decode_batch1(self, rows: List[Request], window: int = 0) -> np.ndarray:
+    def decode_batch1(self, rows: List[Request], window: int = 0,
+                      *, lane: int = 1) -> np.ndarray:
         """One decode iteration over host-resident ``rows`` (batch-1).
 
         One fused jitted dispatch whose per-layer host attention (append new
@@ -342,7 +358,10 @@ class PagedExecutor:
         callback chain on :class:`HostAttention`.  Never touches the device
         KV pool, so it is safe to run concurrently with
         :meth:`decode_batch0` — that concurrency is the
-        batch-1-hides-under-batch-0 overlap of Fig. 5.
+        batch-1-hides-under-batch-0 overlap of Fig. 5.  ``lane`` selects an
+        independent callback/state/graph triple: micro-batched plans run
+        lane 1 on the batch-1 thread and lane 2 on the engine thread
+        concurrently (each caller thread must use a distinct lane).
         """
         n = len(rows)
         D = _bucket(n)
@@ -362,7 +381,7 @@ class PagedExecutor:
             lens[i] = pos
             pids[i] = r.pages[pos // page]
             offs[i] = pos % page
-        self._cb_state1 = {
+        self._cb_lane_state[lane] = {
             "host_rows": np.arange(n, dtype=np.int64),
             "tables": tables,
             "lens": lens,
@@ -370,7 +389,7 @@ class PagedExecutor:
             "offsets": offs,
             "window": np.asarray([window], np.int32),
         }
-        logits = self.decode_b1_fn()(self.params, tokens, positions)
+        logits = self.decode_b1_fn(lane)(self.params, tokens, positions)
         return np.asarray(logits[:n])
 
     # ------------------------------------------------------------------
@@ -382,6 +401,7 @@ class PagedExecutor:
         window: int = 0,
         *,
         pre_b1: Optional[Callable[[], None]] = None,
+        lane: int = 1,
     ) -> Future:
         """Launch batch-1 on its dispatch thread; the future resolves to
         ``(logits [n,V], (start, end))`` perf_counter stamps.
@@ -395,7 +415,7 @@ class PagedExecutor:
             t0 = time.perf_counter()
             if pre_b1 is not None:
                 pre_b1()
-            out = self.decode_batch1(rows, window)
+            out = self.decode_batch1(rows, window, lane=lane)
             return out, (t0, time.perf_counter())
 
         return self._b1_pool.submit(run_b1)

@@ -11,7 +11,7 @@ Free-page accounting is host-side (Python) exactly like vLLM's block manager.
 from __future__ import annotations
 
 import threading
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +56,14 @@ class PagePool:
         # the free list only when its LAST reader releases it.  Unshared pages
         # keep the historical alloc/free semantics (ref 1 -> 0).
         self._ref: List[int] = [0] * num_pages
+        # Optional refcount-transition listener ``fn(page, old, new)``: the
+        # prefix cache registers one to maintain its incremental evictability
+        # counters — pin/unpin events (1<->2 crossings) on tree-owned pages
+        # happen through engine-side incref/free calls the cache never sees.
+        self._ref_listener: Optional[Callable[[int, int, int], None]] = None
+
+    def set_ref_listener(self, fn: Optional[Callable[[int, int, int], None]]) -> None:
+        self._ref_listener = fn
 
     # -- accounting ------------------------------------------------------------
     @property
@@ -85,6 +93,8 @@ class PagePool:
             if self._ref[p] <= 0:
                 raise ValueError(f"incref of free page {p}")
             self._ref[p] += 1
+            if self._ref_listener is not None:
+                self._ref_listener(p, self._ref[p] - 1, self._ref[p])
 
     def refcount(self, page: int) -> int:
         return self._ref[page]
@@ -102,6 +112,8 @@ class PagePool:
             self._ref[p] -= 1
             if self._ref[p] == 0:
                 self._free.append(p)
+            if self._ref_listener is not None:
+                self._ref_listener(p, self._ref[p] + 1, self._ref[p])
 
     # -- device pool writes (jit'd) --------------------------------------------
     def write_decode_tokens(self, layer_kv: Tuple[jnp.ndarray, jnp.ndarray],

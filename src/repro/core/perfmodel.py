@@ -156,6 +156,24 @@ class PerfModel:
         half2 = max(t_l1 + t_ga0, t_ca0, t_sw)
         return L * (half1 + half2)
 
+    def microbatch_time(self, n_a: int, kv_a: int, n_b: int, kv_b: int) -> float:
+        """Per-layer time of two alternating batch-1 micro-batches (the
+        FastDecode sub-batch pipeline, §5.3 baseline lineage).
+
+        Each lane serializes linear → host-attention within itself; across
+        lanes the linear stages share the device and the attention shares the
+        host cores, so the steady-state per-layer period is bounded below by
+        every resource's total demand and by each lane's own serial chain::
+
+            max(T_l(A)+T_l(B), T_ca(A)+T_ca(B), T_l(A)+T_ca(A), T_l(B)+T_ca(B))
+
+        All four terms are EWMA-calibrated through ``t_linear``/``t_cpu_attn``,
+        so the predicted overlap tracks measured lane times.
+        """
+        t_la, t_lb = self.t_linear(n_a), self.t_linear(n_b)
+        t_ca, t_cb = self.t_cpu_attn(kv_a), self.t_cpu_attn(kv_b)
+        return max(t_la + t_lb, t_ca + t_cb, t_la + t_ca, t_lb + t_cb)
+
     def gpu_only_time(self, *, batch_tokens: int, gpu_kv_tokens: int,
                       prefill_sq_sum: float = 0.0) -> float:
         L = self.cfg.num_layers
@@ -196,6 +214,11 @@ class PerfModel:
         the batch-1 stages (t_l1, t_ca1) run on another lane and are NOT in
         the window — the prediction mirrors that composition so the EWMA
         "linear" scale tracks the device lane rather than a mismatched sum.
+
+        Micro-batched batch-1-only iterations report ``device_busy == 0``
+        (both lanes are host-attention graphs; their windows are tracked in
+        ``EngineStats.lane_busy_time`` instead), so they refresh the
+        ``cpu_attn`` scale only — exactly the stage they exercise.
         """
         L = max(self.cfg.num_layers, 1)
         if host_busy > 0:

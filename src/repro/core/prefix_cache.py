@@ -30,6 +30,7 @@ Invariants (see ROADMAP architecture note):
 
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -59,7 +60,8 @@ class PrefixCacheStats:
 class RadixNode:
     """One path-compressed edge: a run of full pages in a single pool."""
 
-    __slots__ = ("tokens", "pages", "location", "parent", "children", "last_access")
+    __slots__ = ("tokens", "pages", "location", "parent", "children",
+                 "last_access", "_pinned", "_contrib", "_heap_seq")
 
     def __init__(self, tokens: List[int], pages: List[int], location: str,
                  parent: Optional["RadixNode"]):
@@ -70,6 +72,14 @@ class RadixNode:
         # children keyed by their first page-aligned token block
         self.children: Dict[Tuple[int, ...], "RadixNode"] = {}
         self.last_access = 0
+        # incremental evictability bookkeeping (PrefixCache-maintained):
+        # number of this node's pages pinned by readers (refcount > 1), the
+        # counter bucket the node currently contributes to ("leaf" /
+        # "interior" / None when pinned or unregistered), and the sequence
+        # number of its newest LRU-heap entry (older entries are stale)
+        self._pinned = 0
+        self._contrib: Optional[str] = None
+        self._heap_seq = -1
 
     @property
     def npages(self) -> int:
@@ -104,6 +114,25 @@ class PrefixCache:
         self.root = RadixNode([], [], "gpu", None)
         self.stats = PrefixCacheStats()
         self._clock = 0
+        # -- incremental evictability index (O(log n) PoolView + eviction) --
+        # Per-location page counters split by node kind: unpinned LEAF pages
+        # are droppable outright; unpinned INTERIOR pages are reclaimable
+        # only by demotion (gpu -> host).  A lazy-deletion LRU heap per
+        # location orders eviction victims by last_access; entries are
+        # invalidated by a per-node sequence number instead of being removed.
+        # Pin/unpin events on tree pages reach us through the PagePool
+        # refcount listener — engine-side incref/free on shared pages (swap,
+        # preempt, request finish) would otherwise be invisible here.
+        self._evict_leaf: Dict[str, int] = {"gpu": 0, "cpu": 0}
+        self._evict_interior: Dict[str, int] = {"gpu": 0, "cpu": 0}
+        self._heaps: Dict[str, List[Tuple[int, int, RadixNode]]] = {
+            "gpu": [], "cpu": []}
+        self._heap_seq = 0
+        self._page_node: Dict[Tuple[str, int], RadixNode] = {}
+        pool.device.set_ref_listener(
+            lambda p, old, new: self._on_ref("gpu", p, old, new))
+        pool.host.set_ref_listener(
+            lambda p, old, new: self._on_ref("cpu", p, old, new))
 
     # ------------------------------------------------------------------
     # helpers
@@ -125,6 +154,93 @@ class PrefixCache:
     def _unpinned(self, node: RadixNode) -> bool:
         pool = self._pool(node.location)
         return all(pool.refcount(p) == 1 for p in node.pages)
+
+    # ------------------------------------------------------------------
+    # incremental evictability index
+    # ------------------------------------------------------------------
+    # Every mutation of node.pages / node.location goes through
+    # _unregister -> mutate -> _register; leaf<->interior transitions call
+    # _refresh on the affected node.  The PagePool refcount listener keeps
+    # node._pinned current for incref/free calls the cache never issues.
+    def _heap_entry_live(self, location: str, seq: int, node: RadixNode) -> bool:
+        return (seq == node._heap_seq and node._contrib is not None
+                and node.location == location and bool(node.pages))
+
+    def _heap_push(self, node: RadixNode) -> None:
+        if node._contrib is None or not node.pages:
+            return
+        heap = self._heaps[node.location]
+        # Touch-pushes leave stale entries behind, and _make_room only pops
+        # under memory pressure — a hit-heavy workload with pool headroom
+        # would grow the heap forever.  Compact (drop stale, re-heapify)
+        # once the heap exceeds 4x an O(1) upper bound on live entries
+        # (every live node owns >= 1 mapped page); each compaction shrinks
+        # the heap to <= that bound, so the O(heap) sweep amortizes to O(1)
+        # per push.
+        bound = max(128, 4 * len(self._page_node))
+        if len(heap) > bound:
+            loc = node.location
+            heap[:] = [(la, sq, nd) for la, sq, nd in heap
+                       if self._heap_entry_live(loc, sq, nd)]
+            heapq.heapify(heap)
+        self._heap_seq += 1
+        node._heap_seq = self._heap_seq
+        heapq.heappush(heap, (node.last_access, self._heap_seq, node))
+
+    def _add_contrib(self, node: RadixNode) -> None:
+        if node._pinned == 0 and node.pages:
+            kind = "interior" if node.children else "leaf"
+            node._contrib = kind
+            bucket = self._evict_interior if kind == "interior" else self._evict_leaf
+            bucket[node.location] += node.npages
+            self._heap_push(node)
+        else:
+            node._contrib = None
+
+    def _remove_contrib(self, node: RadixNode) -> None:
+        if node._contrib == "leaf":
+            self._evict_leaf[node.location] -= node.npages
+        elif node._contrib == "interior":
+            self._evict_interior[node.location] -= node.npages
+        node._contrib = None  # stale heap entries invalidate lazily
+
+    def _refresh(self, node: RadixNode) -> None:
+        """Recompute a node's counter bucket after a leaf<->interior flip."""
+        if node is self.root:
+            return
+        self._remove_contrib(node)
+        self._add_contrib(node)
+
+    def _register(self, node: RadixNode) -> None:
+        """Map the node's pages and (re)compute its pin count/contribution."""
+        pool = self._pool(node.location)
+        for p in node.pages:
+            self._page_node[(node.location, p)] = node
+        node._pinned = sum(1 for p in node.pages if pool.refcount(p) > 1)
+        self._add_contrib(node)
+
+    def _unregister(self, node: RadixNode) -> None:
+        self._remove_contrib(node)
+        for p in node.pages:
+            self._page_node.pop((node.location, p), None)
+
+    def _on_ref(self, location: str, page: int, old: int, new: int) -> None:
+        """PagePool refcount-transition hook: track pin (1->2) and unpin
+        (2->1) crossings on tree-owned pages, wherever they originate."""
+        node = self._page_node.get((location, page))
+        if node is None:
+            return
+        if new == 0:  # defensive: a mapped page must be unmapped before its
+            self._page_node.pop((location, page), None)  # tree ref drops
+            return
+        if old == 1 and new == 2:
+            if node._pinned == 0:
+                self._remove_contrib(node)
+            node._pinned += 1
+        elif old == 2 and new == 1:
+            node._pinned -= 1
+            if node._pinned == 0:
+                self._add_contrib(node)
 
     # ------------------------------------------------------------------
     # match / lookup
@@ -215,6 +331,7 @@ class PrefixCache:
         now = self._tick()
         for node in res.nodes:
             node.last_access = now
+            self._heap_push(node)  # refresh LRU position (stale entry lingers)
 
         # PIN FIRST: take the request's reference on every matched page (and
         # the COW source) before any make_room below runs — a pinned page's
@@ -258,10 +375,12 @@ class PrefixCache:
                         seg_node.pages, seg_node.location, target)
                     pool_t.incref(new_pages)  # the request's reference
                     old = seg_node.pages
+                    self._unregister(seg_node)
                     seg_node.pages = new_pages
                     seg_node.location = target
                     src_pool.free(old)  # tree's reference
                     src_pool.free(old)  # our pin
+                    self._register(seg_node)
                     self._count_move(
                         "gpu" if src_pool.backend == "device" else "cpu",
                         target, len(old))
@@ -313,11 +432,13 @@ class PrefixCache:
         """Move an unpinned node's pages to ``target``; returns old->new."""
         self._make_room(target, node.npages, exclude=node)
         new_pages = self.transfer.copy_pages(node.pages, node.location, target)
+        self._unregister(node)
         self._pool(node.location).free(node.pages)
         mapping = dict(zip(node.pages, new_pages))
         self._count_move(node.location, target, node.npages)
         node.pages = new_pages
         node.location = target
+        self._register(node)
         return mapping
 
     # ------------------------------------------------------------------
@@ -347,7 +468,11 @@ class PrefixCache:
                 self._pool(location).incref(rest_pages)
                 node = RadixNode(rest_tokens, rest_pages, location, cur)
                 node.last_access = now
+                was_leaf = not cur.children
                 cur.children[key] = node
+                self._register(node)
+                if was_leaf:
+                    self._refresh(cur)  # leaf -> interior bucket flip
                 adopted = len(rest_pages)
                 self.stats.inserted_pages += adopted
                 return adopted
@@ -356,6 +481,7 @@ class PrefixCache:
             if full_pages < child.npages:
                 child = self._split(child, full_pages)
             child.last_access = now
+            self._heap_push(child)
             i += full_pages
             cur = child
         # fully covered by existing nodes: nothing adopted
@@ -372,6 +498,7 @@ class PrefixCache:
     def _split(self, node: RadixNode, at_pages: int) -> RadixNode:
         """Split ``node`` at a page boundary; returns the new parent half."""
         page = self.page
+        self._unregister(node)
         head = RadixNode(node.tokens[: at_pages * page], node.pages[:at_pages],
                          node.location, node.parent)
         head.last_access = node.last_access
@@ -381,6 +508,8 @@ class PrefixCache:
         node.pages = node.pages[at_pages:]
         node.parent = head
         head.children[tuple(node.tokens[:page])] = node
+        self._register(head)
+        self._register(node)
         return head
 
     # ------------------------------------------------------------------
@@ -390,21 +519,18 @@ class PrefixCache:
         """Pages the cache could free in ``location`` under memory pressure —
         added to the scheduler's PoolView so planning sees reclaimable space.
 
-        Conservative: counts only unpinned LEAF nodes plus interior nodes
-        that are demotable right now (host room exists).  Interior nodes
-        with a full host pool cannot be reclaimed in one pass (dropping them
-        would orphan children), so promising their pages would overcommit.
+        O(1) from the incrementally maintained counters: unpinned LEAF pages
+        (droppable outright) plus, for the device pool, unpinned INTERIOR
+        pages up to the host pool's current free room (interior nodes are
+        reclaimable only by demotion — dropping them would orphan children).
+        The host-room cap is page-granular where the old full-tree rescan was
+        node-granular: marginally more optimistic when a large interior node
+        cannot demote whole, which the engine's dispatch-time deferral paths
+        already absorb.
         """
-        host_free = self.pool.host.free_pages
-        total = 0
-        for n in self._iter_nodes():
-            if n.location != location or not self._unpinned(n):
-                continue
-            if not n.children:
-                total += n.npages
-            elif location == "gpu" and host_free >= n.npages:
-                host_free -= n.npages
-                total += n.npages
+        total = self._evict_leaf[location]
+        if location == "gpu":
+            total += min(self._evict_interior["gpu"], self.pool.host.free_pages)
         return total
 
     def make_room(self, location: str, n: int) -> None:
@@ -415,35 +541,47 @@ class PrefixCache:
         self._make_room(location, n)
 
     def _make_room(self, location: str, n: int, exclude: Optional[RadixNode] = None) -> None:
+        # Victims pop off the per-location LRU heap (lazy deletion: an entry
+        # is live only while its seq matches the node's newest push and the
+        # node still contributes for this location).  Nodes that cannot be
+        # reclaimed right now — the excluded node, interior nodes with no
+        # host room — are re-pushed after the pass so later calls see them.
         pool = self._pool(location)
+        heap = self._heaps[location]
+        skipped: List[RadixNode] = []
         while pool.free_pages < n:
-            cands = [node for node in self._iter_nodes()
-                     if node.location == location and node is not exclude
-                     and self._unpinned(node)]
-            if not cands:
-                return  # nothing reclaimable; let the allocator raise
-            cands.sort(key=lambda nd: nd.last_access)
-            progressed = False
-            for victim in cands:
-                if location == "gpu" and self.pool.host.free_pages >= victim.npages:
-                    self._relocate(victim, "cpu")  # demote, keep in tree
-                    progressed = True
-                elif not victim.children:
-                    self._drop(victim)
-                    progressed = True
-                if progressed:
-                    break
-            if not progressed:
-                return
-        return
+            victim: Optional[RadixNode] = None
+            while heap:
+                _, seq, node = heapq.heappop(heap)
+                if not self._heap_entry_live(location, seq, node):
+                    continue  # stale entry
+                victim = node
+                break
+            if victim is None:
+                break  # nothing reclaimable; let the allocator raise
+            if victim is exclude:
+                skipped.append(victim)
+                continue
+            if location == "gpu" and self.pool.host.free_pages >= victim.npages:
+                self._relocate(victim, "cpu")  # demote, keep in tree
+            elif not victim.children:
+                self._drop(victim)
+            else:
+                skipped.append(victim)  # interior, no host room: not now
+        for node in skipped:
+            self._heap_push(node)
 
     def _drop(self, node: RadixNode) -> None:
         assert not node.children
+        self._unregister(node)
         self._pool(node.location).free(node.pages)
         self.stats.evicted_pages += node.npages
-        if node.parent is not None:
+        parent = node.parent
+        if parent is not None:
             key = tuple(node.tokens[: self.page])
-            node.parent.children.pop(key, None)
+            parent.children.pop(key, None)
+            if not parent.children:
+                self._refresh(parent)  # interior -> leaf bucket flip
         node.pages = []
 
     # ------------------------------------------------------------------

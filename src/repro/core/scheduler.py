@@ -88,6 +88,13 @@ class BatchPlan:
     # recompute preemption: KV dropped entirely, request returns to the
     # waitqueue for prefill-replay (both pools were full)
     preempt: List[Request] = field(default_factory=list)
+    # micro-batched batch-1 (FastDecode-style): set when the plan has NO
+    # batch-0 lane to hide host attention under and >= 2 host rows; the
+    # engine then splits decode_cpu1 at ``microbatch_split`` into two
+    # alternating sub-batches so one's host attention overlaps the other's
+    # linear stages
+    microbatch: bool = False
+    microbatch_split: int = 0  # decode_cpu1[:k] -> lane A, [k:] -> lane B
     # estimates
     est_iter_time: float = 0.0
     est_tokens: int = 0
@@ -125,6 +132,7 @@ class BatchPlan:
             f"dec_cpu0={len(self.decode_cpu0)} dec_cpu1={len(self.decode_cpu1)} "
             f"swap_out={len(self.swap_out)} swap_in={len(self.swap_in)} "
             f"preempt={len(self.preempt)} "
+            f"mb={self.microbatch_split if self.microbatch else 0} "
             f"est={self.est_iter_time * 1e3:.2f}ms/{self.est_tokens}tok"
         )
 
@@ -190,10 +198,55 @@ class NeoScheduler:
     def plan(self, pools: PoolView) -> BatchPlan:
         self._admission_control(pools)
         if self.policy == "gpu_only":
-            return self._plan_gpu_only(pools)
-        if self.policy in ("fastdecode", "simple"):
-            return self._plan_full_offload(pools)
-        return self._plan_neo(pools)
+            plan = self._plan_gpu_only(pools)
+        elif self.policy in ("fastdecode", "simple"):
+            plan = self._plan_full_offload(pools)
+        else:
+            plan = self._plan_neo(pools)
+        self._annotate_microbatch(plan)
+        return plan
+
+    def _annotate_microbatch(self, plan: BatchPlan) -> None:
+        """Mark batch-1-only plans for micro-batched execution.
+
+        NEO's asymmetric overlap needs a batch-0 device lane to hide CPU
+        attention behind; a plan with ONLY batch-1 host rows (common under
+        ``fastdecode`` / full offload) runs host attention fully serialized.
+        Split decode_cpu1 into two alternating sub-batches — A's host
+        attention overlaps B's linear stages and vice versa — choosing the
+        split point that minimizes :meth:`PerfModel.microbatch_time` (i.e.
+        balancing ``t_cpu_attn`` of one lane against ``t_linear`` + residual
+        of the other).  ``microbatch=False`` plans execute exactly as before.
+        """
+        plan.microbatch = False
+        plan.microbatch_split = 0
+        if not (self.engine_cfg.microbatch and self.engine_cfg.pipeline):
+            return
+        if plan.mode == "serial":
+            return  # strawman #1 must stay overlap-free by definition
+        if plan.prefill or plan.decode_gpu or plan.decode_cpu0:
+            return  # a batch-0 lane exists: the two-batch overlap handles it
+        rows = plan.decode_cpu1
+        if len(rows) < 2:
+            return
+        # Eligibility is structural (no batch-0 lane, >= 2 host rows); the
+        # EWMA-calibrated perf model balances the SPLIT POINT — one lane's
+        # host attention against the other lane's linear + attention chain.
+        perf = self.perf
+        kv = [r.kv_len + 1 for r in rows]
+        total_kv = sum(kv)
+        n = len(rows)
+        best_k, best_t = 1, None
+        kv_a = 0
+        for k in range(1, n):
+            kv_a += kv[k - 1]
+            t = perf.microbatch_time(k, kv_a, n - k, total_kv - kv_a)
+            if best_t is None or t < best_t:
+                best_k, best_t = k, t
+        plan.microbatch = True
+        plan.microbatch_split = best_k
+        plan.est_iter_time = self.cfg.num_layers * max(
+            best_t, plan.stages.t_swap)
 
     def _admission_control(self, pools: PoolView) -> None:
         """Reject queued prompts that can never fit any pool."""

@@ -73,6 +73,9 @@ def run_trace(engine: NeoEngine, trace, *, vocab: int, seed: int = 0,
     metrics.bubble_fraction = engine.stats.bubble_fraction
     metrics.swap_hidden_bytes = engine.stats.swap_hidden_bytes
     metrics.swap_wait_time = engine.stats.swap_wait_time
+    metrics.microbatched_steps = engine.stats.microbatched_steps
+    metrics.serial_b1_steps = engine.stats.serial_b1_steps
+    metrics.lane_busy = dict(engine.stats.lane_busy_time)
     metrics.prefill_tokens_computed = engine.stats.prefill_tokens
     if engine.pool is not None:
         metrics.swap_bytes = engine.pool.swap_bytes
@@ -104,6 +107,9 @@ def main(argv=None) -> int:
     ap.add_argument("--max-batch-tokens", type=int, default=2048)
     ap.add_argument("--no-pipeline", action="store_true",
                     help="serial reference execution (no async swaps/overlap)")
+    ap.add_argument("--no-microbatch", action="store_true",
+                    help="disable the micro-batched batch-1-only lane "
+                         "(inline serial host attention, the pre-split path)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="two-tier radix prefix cache (COW KV page sharing)")
     ap.add_argument("--require-hits", action="store_true",
@@ -119,11 +125,14 @@ def main(argv=None) -> int:
         max_batch_tokens=args.max_batch_tokens,
         policy=args.policy,
         pipeline=not args.no_pipeline,
+        microbatch=not args.no_microbatch,
         prefix_cache=args.prefix_cache,
         seed=args.seed,
     )
     print(f"[serve] arch={cfg.name} policy={args.policy} "
-          f"pipeline={not args.no_pipeline} prefix_cache={args.prefix_cache} "
+          f"pipeline={not args.no_pipeline} "
+          f"microbatch={not args.no_microbatch} "
+          f"prefix_cache={args.prefix_cache} "
           f"pools=({args.device_pages},{args.host_pages})")
     engine = NeoEngine(cfg, ecfg)
     trace = get_trace(args.trace, args.n, args.rate, args.seed)

@@ -58,6 +58,10 @@ class ServeMetrics:
     bubble_fraction: float = 0.0
     swap_hidden_bytes: int = 0
     swap_wait_time: float = 0.0
+    # micro-batched batch-1-only lane (FastDecode-style split)
+    microbatched_steps: int = 0
+    serial_b1_steps: int = 0
+    lane_busy: Dict[str, float] = field(default_factory=dict)
     # prefix cache (PrefixCacheStats mirror; zeros when the cache is off)
     prefill_tokens_computed: int = 0
     prefix_hit_rate: float = 0.0
@@ -136,6 +140,10 @@ class ServeMetrics:
             "bubble_fraction": round(self.bubble_fraction, 3),
             "swap_hidden_MB": round(self.swap_hidden_bytes / 1e6, 3),
             "swap_wait_s": round(self.swap_wait_time, 3),
+            # micro-batched batch-1-only lanes (0 when nothing was eligible)
+            "microbatched_steps": self.microbatched_steps,
+            "serial_b1_steps": self.serial_b1_steps,
+            "lane_busy_s": {k: round(v, 3) for k, v in sorted(self.lane_busy.items())},
             # two-tier prefix cache (all zeros when disabled)
             "prefill_tokens_computed": self.prefill_tokens_computed,
             "hit_rate": round(self.prefix_hit_rate, 3),

@@ -1,0 +1,145 @@
+"""Micro-batched batch-1-only execution: greedy decode must be bitwise
+identical with the micro-batch lane on, off, and against the fully serial
+reference — across full-offload (fastdecode) plans, mixed NEO plans, and
+mid-stream preemption — while the on-path actually overlaps (measured, not
+modelled).  Also covers the NaN-free lane-aware stats of EngineStats."""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import EngineConfig
+from repro.configs import get_smoke_config
+from repro.core.engine import EngineStats, NeoEngine
+from repro.core.request import RequestState
+from repro.models.api import get_model
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_smoke_config("qwen3-0.6b")
+    model = get_model(cfg)
+    params = model.init(jax.random.key(7))
+    return cfg, model, params
+
+
+def _run(cfg, params, prompts, *, policy, pipeline, microbatch, n_out=8,
+         device_pages=8, host_pages=128, **kw):
+    ecfg = EngineConfig(device_pool_pages=device_pages,
+                        host_pool_pages=host_pages,
+                        max_batch_tokens=256, policy=policy,
+                        pipeline=pipeline, microbatch=microbatch, **kw)
+    eng = NeoEngine(cfg, ecfg, params=params)
+    rids = [eng.submit(p, n_out) for p in prompts]
+    done = eng.run_until_done(500)
+    out = {r: done[r] for r in rids}
+    stats = eng.stats
+    states = {r: eng.requests[r].state for r in rids}
+    eng.close()
+    return out, stats, states
+
+
+def test_fastdecode_microbatch_bitwise_identical(dense_setup, rng):
+    """fastdecode(+) decode iterations are batch-1-only: the micro-batch
+    split must change nothing about greedy outputs while realizing overlap
+    the inline path cannot."""
+    cfg, _, params = dense_setup
+    prompts = [list(map(int, rng.integers(1, 500, size=n)))
+               for n in (20, 33, 27, 18)]
+    ref, _, _ = _run(cfg, params, prompts, policy="fastdecode",
+                     pipeline=False, microbatch=False)
+    off, off_stats, _ = _run(cfg, params, prompts, policy="fastdecode",
+                             pipeline=True, microbatch=False)
+    on, on_stats, _ = _run(cfg, params, prompts, policy="fastdecode",
+                           pipeline=True, microbatch=True)
+    assert on == off == ref
+    assert on_stats.microbatched_steps > 0
+    assert off_stats.microbatched_steps == 0
+    assert off_stats.serial_b1_steps > 0
+    # the on-path realized overlap where the off-path had pure bubble
+    assert on_stats.pipeline_overlap_time > 0
+    assert off_stats.pipeline_overlap_time == 0
+    assert on_stats.bubble_fraction < off_stats.bubble_fraction
+    # both micro lanes actually dispatched
+    assert on_stats.lane_busy_time.get("micro_a", 0) > 0
+    assert on_stats.lane_busy_time.get("micro_b", 0) > 0
+
+
+def test_mixed_neo_plans_identical(dense_setup, rng):
+    """NEO mixed plans (device + host rows, swaps) with the micro-batch knob
+    on/off: identical greedy outputs; micro-batching only ever engages on
+    batch-1-only iterations."""
+    cfg, _, params = dense_setup
+    prompts = [list(map(int, rng.integers(1, 500, size=n)))
+               for n in (24, 30, 18, 22)]
+    outs = {}
+    for key, (pipe, mb) in {"serial": (False, False), "off": (True, False),
+                            "on": (True, True)}.items():
+        outs[key], _, _ = _run(cfg, params, prompts, policy="neo",
+                               pipeline=pipe, microbatch=mb,
+                               device_pages=7)
+    assert outs["on"] == outs["off"] == outs["serial"]
+
+
+def test_preemption_midstream_identical(dense_setup, rng):
+    """Recompute preemption mid-stream (tiny host pool + low starvation
+    limit forces drop-and-replay) with micro-batching on/off: preempted rows
+    must vanish from the split without disturbing greedy outputs."""
+    cfg, _, params = dense_setup
+    prompts = [list(map(int, rng.integers(1, 500, size=n)))
+               for n in (22, 26, 24)]
+    results = {}
+    mb_steps = {}
+    for mb in (False, True):
+        out, stats, states = _run(cfg, params, prompts, policy="fastdecode",
+                                  pipeline=True, microbatch=mb, n_out=10,
+                                  device_pages=8, host_pages=6,
+                                  starvation_limit=2)
+        preempts = sum(int(s.split("preempt=")[1].split()[0])
+                       for s in stats.plans)
+        results[mb] = (out, preempts, states)
+        mb_steps[mb] = stats.microbatched_steps
+    out_off, pre_off, st_off = results[False]
+    out_on, pre_on, st_on = results[True]
+    assert out_on == out_off
+    assert pre_off > 0 and pre_on > 0, "scenario must actually preempt"
+    assert mb_steps[True] > 0, "the on-run must micro-batch around preemption"
+    assert all(s == RequestState.FINISHED for s in st_on.values())
+
+
+def test_stats_empty_lane_nan_free():
+    """EngineStats must never report NaN and must stay honest when one lane
+    is empty (batch-1-only serialization, host-only busy time)."""
+    s = EngineStats()
+    assert s.bubble_fraction == 0.0  # nothing pipelined, nothing hideable
+    assert s.host_device_busy_ratio == 0.0  # fully idle
+    # host-only workload: device lane empty is +inf, not a misleading 0.0
+    s.host_busy_time = 1.5
+    assert s.host_device_busy_ratio == float("inf")
+    assert not math.isnan(s.host_device_busy_ratio)
+    s.device_busy_time = 3.0
+    assert s.host_device_busy_ratio == 0.5
+    # serialized batch-1-only steps: ideal accrues with zero overlap -> all
+    # bubble, clamped to [0, 1]
+    s.pipeline_ideal_time = 2.0
+    s.pipeline_overlap_time = 0.0
+    assert s.bubble_fraction == 1.0
+    s.pipeline_overlap_time = 5.0  # measurement jitter past ideal clamps at 0
+    assert s.bubble_fraction == 0.0
+    for v in (s.bubble_fraction, s.host_device_busy_ratio):
+        assert not math.isnan(v)
+
+
+def test_lane_busy_accounting(dense_setup, rng):
+    """Per-lane busy time covers every dispatch path it claims to."""
+    cfg, _, params = dense_setup
+    prompts = [list(map(int, rng.integers(1, 500, size=n))) for n in (20, 25)]
+    _, st_serial, _ = _run(cfg, params, prompts, policy="neo",
+                           pipeline=False, microbatch=False, device_pages=16)
+    assert st_serial.lane_busy_time.get("prefill", 0) > 0
+    assert st_serial.lane_busy_time.get("serial", 0) > 0
+    _, st_pipe, _ = _run(cfg, params, prompts, policy="neo",
+                         pipeline=True, microbatch=True, device_pages=16)
+    assert st_pipe.lane_busy_time.get("batch0", 0) > 0

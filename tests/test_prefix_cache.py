@@ -271,6 +271,166 @@ def test_cached_prefill_matches_cold(cfg):
     assert warm_tokens < cold_tokens  # suffix-only prefill actually happened
 
 
+def _rescan_counters(cache, loc):
+    """Full-tree oracle for the incremental evictability index: unpinned
+    leaf / interior page counts from live refcounts."""
+    leaf = interior = 0
+    for n in cache._iter_nodes():
+        if n.location != loc or not cache._unpinned(n):
+            continue
+        if n.children:
+            interior += n.npages
+        else:
+            leaf += n.npages
+    return leaf, interior
+
+
+def _check_counters(cache, pool):
+    for loc in ("gpu", "cpu"):
+        leaf, interior = _rescan_counters(cache, loc)
+        assert cache._evict_leaf[loc] == leaf, loc
+        assert cache._evict_interior[loc] == interior, loc
+        expect = leaf + (min(interior, pool.host.free_pages)
+                         if loc == "gpu" else 0)
+        assert cache.evictable_pages(loc) == expect, loc
+
+
+def test_evictable_counters_match_rescan_property(cfg):
+    """Property test: under random acquire/release/insert/evict sequences,
+    the incremental per-location evictable counters always equal a full-tree
+    rescan (the pre-optimization O(tree) computation)."""
+    rng = np.random.default_rng(1234)
+    cache, pool, tr = make_cache(cfg, device_pages=24, host_pages=24)
+    page = cache.page
+    # shared prefixes force splits / interior nodes; divergent tails force
+    # sibling leaves
+    bases = [list(range(k, k + 4 * page)) for k in (0, 10_000, 20_000)]
+    held = []  # (location, shared_pages, cow_page)
+    for step in range(300):
+        op = int(rng.integers(0, 5))
+        if op == 0:  # insert (possibly diverging mid-way, possibly cross-pool)
+            base = bases[int(rng.integers(0, len(bases)))]
+            n_pages = int(rng.integers(1, 5))
+            toks = list(base[: n_pages * page])
+            if n_pages > 1 and rng.random() < 0.5:
+                tail = int(rng.integers(30_000, 40_000))
+                toks = toks[: (n_pages - 1) * page] + \
+                    [tail + i for i in range(page)]
+            loc = "gpu" if rng.random() < 0.7 else "cpu"
+            p = pool.pool(loc)
+            if p.free_pages >= n_pages:
+                pages = p.alloc(n_pages)
+                cache.insert(toks, pages, loc)
+                p.free(pages)  # the "request" releases; tree ref remains
+        elif op == 1:  # acquire: pins pages, may promote/demote/copy/COW
+            base = bases[int(rng.integers(0, len(bases)))]
+            cut = int(rng.integers(1, len(base))) if rng.random() < 0.5 else len(base)
+            tgt = "gpu" if rng.random() < 0.5 else "cpu"
+            shared, cow, clen = cache.acquire(base[:cut] + [77], tgt)
+            if shared or cow is not None:
+                held.append((tgt, shared, cow))
+        elif op == 2 and held:  # release a reader's pins
+            tgt, shared, cow = held.pop(int(rng.integers(0, len(held))))
+            if shared:
+                pool.pool(tgt).free(shared)
+            if cow is not None:
+                pool.pool(tgt).free([cow])
+        elif op == 3:  # eviction pressure
+            loc = "gpu" if rng.random() < 0.5 else "cpu"
+            cache.make_room(loc, int(rng.integers(1, 10)))
+        # op == 4: no-op mutation round (still re-check)
+        _check_counters(cache, pool)
+    # drain the held pins and re-check once more
+    for tgt, shared, cow in held:
+        if shared:
+            pool.pool(tgt).free(shared)
+        if cow is not None:
+            pool.pool(tgt).free([cow])
+    _check_counters(cache, pool)
+    tr.close()
+
+
+def test_make_room_uses_lru_heap_order(cfg):
+    """After many touches, make_room must still evict coldest-first (the
+    lazy-deletion heap must honor refreshed last_access stamps)."""
+    cache, pool, tr = make_cache(cfg, device_pages=12, host_pages=2)
+    page = cache.page
+    seqs = [[k + i for i in range(2 * page)] for k in (0, 10_000, 20_000)]
+    for s in seqs:
+        seed_node(cache, pool, s)
+    # touch in reverse order: seqs[2] hottest, seqs[0] coldest
+    for s in (seqs[0], seqs[1], seqs[2]):
+        shared, cow, _ = cache.acquire(s + [1], "gpu")
+        pool.device.free(shared)
+        if cow is not None:
+            pool.device.free([cow])
+    cache.make_room("gpu", pool.device.free_pages + 2)  # evict exactly one node
+    by_first = {n.tokens[0]: n for n in cache._iter_nodes()}
+    assert by_first[0].location == "cpu"  # coldest demoted (host had room)
+    assert by_first[10_000].location == "gpu"
+    assert by_first[20_000].location == "gpu"  # hottest untouched
+    tr.close()
+
+
+# ---------------------------------------------------------------------------
+# scheduler token budget: dispatch-time match shrink must defer, not overrun
+# ---------------------------------------------------------------------------
+
+
+def test_shrunken_match_defers_instead_of_token_overrun(cfg):
+    """A prefill whose prefix match shrinks between submit and dispatch must
+    be deferred when its realized suffix busts max_batch_tokens — previously
+    it overran the batch's token budget (page shortfalls deferred, token
+    shortfalls did not)."""
+    from repro.core.engine import NeoEngine
+    from repro.core.request import RequestState
+
+    page = cfg.kv_block_size
+    max_bt = 3 * page  # tight token budget
+    ecfg = EngineConfig(device_pool_pages=64, host_pool_pages=64,
+                        max_batch_tokens=max_bt, policy="neo",
+                        prefix_cache=True)
+    eng = NeoEngine(cfg, ecfg)
+    rng = np.random.default_rng(5)
+    shared = list(map(int, rng.integers(1, 500, size=2 * page)))
+
+    # seed the tree with the shared prefix
+    eng.submit(shared, 4)
+    eng.run_until_done()
+
+    # A repeats the prefix (submit-time estimate: ~2 pages cached, tiny
+    # suffix); B is an independent cold prefill
+    pa = shared + list(map(int, rng.integers(1, 500, size=page - 4)))
+    pb = list(map(int, rng.integers(1, 500, size=page)))
+    ra = eng.submit(pa, 4)
+    rb = eng.submit(pb, 4)
+    assert eng.requests[ra].cached_len >= 2 * page - 1  # estimate saw the hit
+
+    # the tree changes between submit and dispatch: drop every node
+    cache = eng.prefix_cache
+    while cache.num_nodes():
+        leaves = [n for n in cache._iter_nodes() if not n.children]
+        for n in leaves:
+            cache._drop(n)
+
+    # instrument the executor to observe realized per-batch prefill tokens
+    batches = []
+    orig = eng.executor.prefill
+
+    def recording_prefill(reqs, to_host, extras_fn=None):
+        batches.append(sum(r.suffix_len for r in reqs))
+        return orig(reqs, to_host, extras_fn)
+
+    eng.executor.prefill = recording_prefill
+    out = eng.run_until_done(200)
+    # no executed prefill batch may exceed the token budget...
+    assert batches and max(batches) <= max_bt, batches
+    # ...and both requests still complete (the deferred one retried)
+    assert eng.requests[ra].state == RequestState.FINISHED
+    assert eng.requests[rb].state == RequestState.FINISHED
+    eng.close()
+
+
 def test_cache_off_default_unchanged(cfg):
     """EngineConfig.prefix_cache defaults to False and the engine then has no
     cache object at all — the compat path."""
