@@ -1,0 +1,149 @@
+"""Bench-trend gate: run the engine + prefix-cache smokes, write the
+schema'd ``BENCH_engine.json`` summary at the REPO ROOT, and fail on a
+perf-trajectory regression vs the checked-in baseline.
+
+This is the CI ``bench-trend`` job's entry point (the summary file is
+uploaded as a build artifact, so the trajectory is inspectable per commit).
+Schema (``neo-bench-trend/v1``; documented in ``benchmarks/README.md``):
+
+* ``engine.*_tok_s``      — smoke token throughputs (RECORDED, not gated:
+  they are wall-times of whatever machine ran the job);
+* ``engine.bubble_fraction`` — measured pipeline bubble of the
+  micro-batched fastdecode smoke (GATED: must not regress past the
+  checked-in baseline + tolerance — the structural-overlap headline);
+* ``engine.microbatched_steps`` / ``engine.borrowed_lane_steps`` — unified
+  lane-plan counters (GATED > 0: the splits must actually fire);
+* ``prefix_cache.hit_rate`` / ``prefill_reduction`` — multiturn cache
+  smoke (hit_rate GATED against baseline - tolerance).
+
+``--write-baseline`` refreshes ``benchmarks/BENCH_baseline.json`` (commit
+the result deliberately — that is the trajectory being gated).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.common import FIG_DIR, HERE
+
+SCHEMA = "neo-bench-trend/v1"
+REPO_ROOT = os.path.dirname(HERE)
+BASELINE_PATH = os.path.join(HERE, "BENCH_baseline.json")
+SUMMARY_PATH = os.path.join(REPO_ROOT, "BENCH_engine.json")
+
+# Gate tolerances: bubble_fraction is a structural ratio (stable across
+# machines), throughputs are not — only ratios/counters are gated.
+BUBBLE_TOL = 0.05
+HIT_RATE_TOL = 0.05
+
+
+def _load(name: str) -> dict:
+    with open(os.path.join(FIG_DIR, name)) as f:
+        return json.load(f)
+
+
+def collect(n: int) -> tuple[int, dict]:
+    """Run the smokes (micro-batch, mixed-lane, prefix-cache) and collate
+    their figure JSONs into the trend summary.  Returns (rc, summary)."""
+    from benchmarks import engine_real, prefix_cache
+
+    rc = 0
+    rc |= engine_real.main(["--microbatch-only", "--n", str(n)])
+    rc |= engine_real.main(["--mixed-lane-only"])
+    rc |= prefix_cache.main(["--quick"])
+
+    er = _load("engine_real.json")
+    pc = _load("prefix_cache.json")
+    mb_on = er["fastdecode_mb_on"]
+    mb_off = er["fastdecode_mb_off"]
+    mixed = er["mixed_pipelined"]
+    summary = {
+        "schema": SCHEMA,
+        "arch": "qwen3-0.6b (smoke)",
+        "engine": {
+            "fastdecode_mb_on_tok_s": mb_on["token_throughput"],
+            "fastdecode_mb_off_tok_s": mb_off["token_throughput"],
+            "mixed_pipelined_tok_s": mixed["token_throughput"],
+            "bubble_fraction": mb_on["bubble_fraction"],
+            "bubble_fraction_serialized": mb_off["bubble_fraction"],
+            "microbatched_steps": mb_on["microbatched_steps"],
+            "borrowed_lane_steps": mixed["borrowed_lane_steps"],
+            "lane_count_steps": mixed["lane_count_steps"],
+        },
+        "prefix_cache": {
+            "hit_rate": pc["cache_on"]["hit_rate"],
+            "prefill_reduction": pc["prefill_reduction"],
+            "cache_on_tok_s": pc["cache_on"]["token_throughput"],
+        },
+    }
+    return rc, summary
+
+
+def gate(summary: dict, baseline: dict) -> int:
+    """Compare the fresh summary against the checked-in baseline; returns
+    the number of regressions (0 == green)."""
+    fails = 0
+    b_eng, s_eng = baseline["engine"], summary["engine"]
+    if s_eng["bubble_fraction"] > b_eng["bubble_fraction"] + BUBBLE_TOL:
+        print(f"[bench_trend] FAIL: bubble_fraction regressed "
+              f"{b_eng['bubble_fraction']} -> {s_eng['bubble_fraction']} "
+              f"(tol {BUBBLE_TOL})")
+        fails += 1
+    if s_eng["microbatched_steps"] == 0:
+        print("[bench_trend] FAIL: no micro-batched steps in the fastdecode "
+              "smoke")
+        fails += 1
+    if s_eng["borrowed_lane_steps"] == 0:
+        print("[bench_trend] FAIL: no borrowed-lane steps in the mixed-plan "
+              "smoke")
+        fails += 1
+    b_pc, s_pc = baseline["prefix_cache"], summary["prefix_cache"]
+    if s_pc["hit_rate"] < b_pc["hit_rate"] - HIT_RATE_TOL:
+        print(f"[bench_trend] FAIL: prefix-cache hit_rate regressed "
+              f"{b_pc['hit_rate']} -> {s_pc['hit_rate']} (tol {HIT_RATE_TOL})")
+        fails += 1
+    if not fails:
+        print(f"[bench_trend] OK: bubble {s_eng['bubble_fraction']} "
+              f"(baseline {b_eng['bubble_fraction']}), hit_rate "
+              f"{s_pc['hit_rate']} (baseline {b_pc['hit_rate']})")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=12,
+                    help="requests per engine smoke run")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="refresh benchmarks/BENCH_baseline.json instead of "
+                         "gating against it")
+    ap.add_argument("--baseline", default=BASELINE_PATH)
+    args = ap.parse_args(argv)
+
+    rc, summary = collect(args.n)
+    with open(SUMMARY_PATH, "w") as f:
+        json.dump(summary, f, indent=1)
+        f.write("\n")
+    print(f"[bench_trend] wrote {SUMMARY_PATH}")
+    if rc:
+        print("[bench_trend] FAIL: a smoke gate failed (see above)")
+        return rc
+    if args.write_baseline:
+        with open(args.baseline, "w") as f:
+            json.dump(summary, f, indent=1)
+            f.write("\n")
+        print(f"[bench_trend] baseline refreshed: {args.baseline}")
+        return 0
+    if not os.path.exists(args.baseline):
+        print(f"[bench_trend] FAIL: no baseline at {args.baseline} "
+              f"(run with --write-baseline and commit it)")
+        return 1
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    return 1 if gate(summary, baseline) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

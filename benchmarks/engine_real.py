@@ -88,6 +88,9 @@ def run(policy: str, n: int, seed: int = 0, pipeline: bool = True,
         "swap_hidden_MB": round(eng.stats.swap_hidden_bytes / 1e6, 3),
         "microbatched_steps": eng.stats.microbatched_steps,
         "serial_b1_steps": eng.stats.serial_b1_steps,
+        "borrowed_lane_steps": eng.stats.borrowed_lane_steps,
+        "lane_count_steps": {str(k): v
+                             for k, v in sorted(eng.stats.lane_counts.items())},
         "lane_busy_s": {k: round(v, 3)
                         for k, v in sorted(eng.stats.lane_busy_time.items())},
     }
@@ -140,15 +143,115 @@ def run_microbatch_section(n: int, on: Optional[Tuple[dict, dict]] = None
     return rc, results
 
 
+def run_lockstep(policy: str, n: int, seed: int = 0, *, pipeline: bool = True,
+                 prompt_len: int = 30, n_out: int = 24, device_pages: int = 11,
+                 host_pages: int = 128):
+    """Uniform-length lockstep decode under device-pool pressure: every row
+    crosses a page boundary on the same iteration, so the scheduler must
+    swap out several victims at once while survivors keep decoding on the
+    device — a mixed decode-only plan (SHORT device lane, no prefill) whose
+    surplus host rows are exactly the lane-borrowing shape.
+    """
+    cfg = get_smoke_config("qwen3-0.6b")
+    model = get_model(cfg)
+    import jax
+
+    params = model.init(jax.random.key(seed))
+    ecfg = EngineConfig(
+        device_pool_pages=device_pages, host_pool_pages=host_pages,
+        max_batch_tokens=1024, policy=policy, pipeline=pipeline, seed=seed,
+    )
+    eng = NeoEngine(cfg, ecfg, params=params)
+    rng = np.random.default_rng(seed)
+    prompts = [list(map(int, rng.integers(1, cfg.vocab_size, size=prompt_len)))
+               for _ in range(n)]
+    rids = [eng.submit(p, n_out) for p in prompts]
+    t0 = time.perf_counter()
+    eng.run_until_done(max_iters=2000)
+    wall = time.perf_counter() - t0
+    out = {
+        "policy": policy,
+        "pipeline": pipeline,
+        "token_throughput": round(n * (prompt_len + n_out) / wall, 1),
+        "iterations": eng.stats.iterations,
+        "offloaded": eng.stats.offloaded_decodes,
+        "borrowed_lane_steps": eng.stats.borrowed_lane_steps,
+        "microbatched_steps": eng.stats.microbatched_steps,
+        "lane_count_steps": {str(k): v
+                             for k, v in sorted(eng.stats.lane_counts.items())},
+        "bubble_fraction": round(eng.stats.bubble_fraction, 3),
+        "overlap_s": round(eng.stats.pipeline_overlap_time, 3),
+    }
+    outputs = {i: list(eng.requests[rid].out_tokens)
+               for i, rid in enumerate(rids)}
+    eng.close()
+    return out, outputs
+
+
+def run_mixed_lane_section(n: int = 6) -> Tuple[int, dict]:
+    """Mixed-plan lane borrowing: a decode-only plan with a SHORT device
+    lane and >= 2 surplus host rows (swap-out burst victims) must execute
+    micro-batched — borrowed host lanes overlapping the device dispatch —
+    with bitwise-identical greedy outputs vs the serial reference.
+    GATES: outputs identical AND borrowed_lane_steps > 0.
+    """
+    r_ser, out_ser = run_lockstep("neo", n, pipeline=False)
+    r_pipe, out_pipe = run_lockstep("neo", n, pipeline=True)
+    results = {"mixed_serial": r_ser, "mixed_pipelined": r_pipe}
+    rows = [[k, r["iterations"], r["offloaded"], r["borrowed_lane_steps"],
+             r["microbatched_steps"], r["lane_count_steps"],
+             r["bubble_fraction"], r["token_throughput"]]
+            for k, r in results.items()]
+    print("=== Mixed-plan lane borrowing (neo lockstep, smoke) ===")
+    print_table(["run", "iters", "offl dec", "borrowed", "mb steps",
+                 "lanes", "bubble", "tok/s"], rows)
+    rc = 0
+    if out_pipe != out_ser:
+        print("[engine_real] FAIL: lane-borrowing greedy outputs diverge "
+              "from the serial path")
+        rc = 1
+    if r_pipe["borrowed_lane_steps"] == 0:
+        print("[engine_real] FAIL: no borrowed-lane steps on a swap-burst "
+              "trace (mixed short-device-lane plans must split batch-1)")
+        rc = 1
+    print(f"[engine_real] mixed-lane gate: borrowed_lane_steps="
+          f"{r_pipe['borrowed_lane_steps']}, outputs "
+          f"{'identical' if out_pipe == out_ser else 'DIVERGED'}")
+    return rc, results
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=24)
     ap.add_argument("--microbatch-only", action="store_true",
                     help="run only the micro-batch on/off gate (CI smoke)")
+    ap.add_argument("--mixed-lane-only", action="store_true",
+                    help="run only the mixed-plan lane-borrowing gate "
+                         "(CI smoke)")
     args = ap.parse_args(argv)
+
+    def merge_save(new_results: dict) -> None:
+        # merge into the existing figure JSON instead of clobbering the
+        # full policy comparison (the CI / local gates update one section)
+        import json
+        import os
+
+        from benchmarks.common import FIG_DIR
+        merged = {}
+        path = os.path.join(FIG_DIR, "engine_real.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                merged = json.load(f)
+        merged.update(new_results)
+        save_json("engine_real.json", merged)
+
     rows = []
     results = {}
     fastdecode_run = None
+    if args.mixed_lane_only:
+        rc, ml_results = run_mixed_lane_section()
+        merge_save(ml_results)
+        return rc
     if not args.microbatch_only:
         # neo runs twice: serial reference first, then pipelined (the
         # default) — the delta is the realized (not modelled) overlap win.
@@ -168,19 +271,11 @@ def main(argv=None) -> int:
         print_table(["policy", "done", "tok/s", "iters", "offl dec",
                      "dev dec", "swap MB", "overlap s", "bubble"], rows)
     rc, mb_results = run_microbatch_section(args.n, on=fastdecode_run)
-    if args.microbatch_only:
-        # merge into the existing figure JSON instead of clobbering the
-        # full policy comparison (this is the CI / local-gate entry point)
-        import json
-        import os
-
-        from benchmarks.common import FIG_DIR
-        path = os.path.join(FIG_DIR, "engine_real.json")
-        if os.path.exists(path):
-            with open(path) as f:
-                results = json.load(f)
-    results.update(mb_results)
-    save_json("engine_real.json", results)
+    if not args.microbatch_only:
+        rc2, ml_results = run_mixed_lane_section()
+        mb_results = {**mb_results, **ml_results}
+        rc = rc or rc2
+    merge_save({**results, **mb_results})
     return rc
 
 

@@ -265,12 +265,20 @@ class EngineConfig:
     # Default for paged families; False forces the serial reference path.
     # "serial"-mode plans (policy="simple") always execute serially.
     pipeline: bool = True
-    # Micro-batched host attention for batch-1-only plans (FastDecode-style):
-    # when a plan has no batch-0 lane to hide CPU attention under, split the
-    # host rows into two alternating sub-batches so one sub-batch's host
-    # attention overlaps the other's linear stages.  Only acts when
-    # ``pipeline`` is on; False falls back to the inline serial batch-1 path.
+    # Multi-lane host attention (unified lane plans): when a plan's batch-1
+    # host rows have no LONG device lane to hide under — either no batch-0 at
+    # all (FastDecode-style batch-1-only plans) or a decode-only batch-0 with
+    # no prefill (a SHORT device lane) — split them into K alternating host
+    # lanes so one lane's host attention overlaps the other lanes' linear
+    # stages (and the device lane, when present).  Eligibility is structural;
+    # the perf model picks K and the per-lane row split by minimizing
+    # ``PerfModel.lane_plan_time``.  Only acts when ``pipeline`` is on; False
+    # falls back to the single-lane (K=1) batch-1 path.
     microbatch: bool = True
+    # Upper bound on K, the number of concurrent host lanes a plan may split
+    # batch-1 into (>= 2 to allow any split; the executor keeps one dispatch
+    # thread per lane).  2 reproduces the PR-3 two-lane micro-batch exactly.
+    max_host_lanes: int = 4
     # Two-tier radix prefix cache (core/prefix_cache.py): finished requests'
     # KV pages are kept in a radix tree spanning both pools and shared
     # copy-on-write with later requests that repeat the prefix.  Off by

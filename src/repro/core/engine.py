@@ -7,17 +7,21 @@ One :meth:`step` = one inference iteration (Fig. 5), executed in explicit
 * **launch** — KV swaps start on the :class:`TransferEngine`'s background
   worker (page-granular, layer-wise); queue moves commit; the prefill
   sub-batch dispatches while those copies are in flight.
-* **join** — batch-1's host attention runs on its own thread concurrently
-  with batch-0's jitted device dispatch (swap-outs join on the batch-1 thread
-  right before host attention reads the pages; swap-ins join on the engine
-  thread right before the device graph consumes the pool); both lanes'
-  logits join and new tokens are sampled in plan order, so greedy decode is
-  bitwise identical to the serial path (``pipeline=False``).  Batch-1-ONLY
-  plans (no device lane — the FastDecode+/full-offload regime) instead split
-  the host rows into two alternating micro-batch lanes when the plan is
-  annotated ``microbatch=True``: sub-batch A's host attention overlaps
-  sub-batch B's linear stages and vice versa, recovering overlap where the
-  asymmetric two-batch scheme has nothing to hide behind.
+* **join** — the plan executes as a **unified lane plan**: one optional
+  device lane (prefill + batch-0's fused graph, engine thread) plus K >= 0
+  host lanes (fused host-only graphs on the executor's lane threads), where
+  the scheduler's ``lane_splits`` partition batch-1.  Swap-outs join
+  lane-scoped on the lane that decodes them, right before its host
+  attention reads the pages; swap-ins join on the engine thread right
+  before the device graph consumes the pool.  All lanes' logits join and
+  new tokens are sampled in plan order, so greedy decode is bitwise
+  identical to the serial path (``pipeline=False``).  K=1 under a
+  prefill-long device lane is the classic asymmetric two-batch overlap;
+  batch-1-ONLY plans (no device lane — the FastDecode+/full-offload regime)
+  split into K >= 2 alternating lanes so one lane's host attention overlaps
+  the others' linear stages; and mixed decode-only plans with a SHORT
+  device lane **borrow** those lanes for their surplus host rows instead of
+  serializing them behind the short device dispatch.
 
 :class:`EngineStats` records the *measured* overlap (pipeline bubble
 fraction, swap bytes hidden under compute, host-vs-device busy time), which
@@ -78,11 +82,17 @@ class EngineStats:
     pipeline_overlap_time: float = 0.0
     pipeline_ideal_time: float = 0.0
     pipelined_steps: int = 0
-    # -- micro-batched batch-1-only lane (FastDecode-style) ----------------
-    microbatched_steps: int = 0  # steps that split batch-1 into two lanes
+    # -- unified lane plans (K host lanes + optional device lane) ----------
+    microbatched_steps: int = 0  # batch-1-only steps split into >= 2 lanes
     serial_b1_steps: int = 0  # batch-1-only steps that ran inline (no split)
-    # per-lane dispatch wall time: "prefill" / "batch0" / "batch1" /
-    # "micro_a" / "micro_b" / "serial" (the pipeline=False fused path)
+    # mixed plans (short decode-only device lane) that BORROWED >= 2 host
+    # lanes for their surplus batch-1 rows instead of serializing them
+    borrowed_lane_steps: int = 0
+    # histogram: number of host lanes K -> steps executed with that K
+    lane_counts: Dict[int, int] = field(default_factory=dict)
+    # per-lane dispatch wall time: "prefill" / "batch0" (device lane),
+    # "host0".."hostK-1" (host lanes; "host0" is the classic batch-1 lane)
+    # and "serial" (the pipeline=False fused path)
     lane_busy_time: Dict[str, float] = field(default_factory=dict)
     # -- transfer engine mirror (async swaps) ------------------------------
     swap_out_bytes: int = 0
@@ -149,7 +159,8 @@ class NeoEngine:
                 cfg, self.pool.host.k, self.pool.host.v, threads=engine_cfg.host_threads
             )
             self.executor = PagedExecutor(
-                self.model, params, self.pool, self.host_attn, impl=kernel_impl
+                self.model, params, self.pool, self.host_attn,
+                impl=kernel_impl, host_lanes=engine_cfg.max_host_lanes,
             )
             self.transfer = TransferEngine(self.pool)
             self._page = cfg.kv_block_size
@@ -524,27 +535,39 @@ class NeoEngine:
 
         if self.prefix_cache is None:
             _grow_decode_pages()  # historical order: prefill pages first
-        b1_end: Optional[float] = None
 
-        # batch-1 (host rows) launches FIRST: its swap-out join + host
-        # attention overlap the whole device lane (prefill is integrated
-        # into batch-0 — Fig. 5's T_l0 covers it).  With no device lane to
-        # hide under, the plan's micro-batch annotation splits batch-1 into
-        # two alternating sub-batch lanes (FastDecode-style); otherwise
-        # batch-1 runs inline — a future would only add thread handoff
-        # latency.
-        b1_future = None
-        b1_inline = False
-        b1_micro = False
-        if pipelined and rows1:
-            if plan.prefill or rows0:
-                pre_b1 = (lambda: self.transfer.join(out_handles)) \
-                    if out_handles else None
-                b1_future = self.executor.submit_batch1(rows1, pre_b1=pre_b1)
-            elif plan.microbatch and len(rows1) >= 2:
-                b1_micro = True  # dispatched below, both lanes together
-            else:
-                b1_inline = True
+        # ---- unified lane plan -------------------------------------------
+        # One optional DEVICE lane (prefill + batch-0's fused graph, engine
+        # thread) plus K >= 0 HOST lanes.  The scheduler's ``lane_splits``
+        # partition batch-1; preempted rows are filtered per lane
+        # (row-independent per-row compute keeps greedy decode bitwise
+        # identical under ANY partition — the same padding-bucket invariance
+        # the two-batch split relies on).  Host lanes launch FIRST on the
+        # executor's lane threads so their lane-scoped swap-out joins + host
+        # attention overlap the whole device lane; with no device lane the
+        # LAST host lane runs inline on the engine thread (K=1 inline is the
+        # serial batch-1 path; K=2 no-device is the PR-3 micro-batch; K>=2
+        # WITH a device lane is lane borrowing for mixed plans).
+        rows1_ids = set(id(r) for r in rows1)
+        lane_rows = [[r for r in lane if id(r) in rows1_ids]
+                     for lane in plan.host_lanes()]
+        lane_rows = [l for l in lane_rows if l]
+        has_dev_lane = bool(plan.prefill or rows0)
+        n_lanes = len(lane_rows)
+        lane_windows: List[Tuple[float, float]] = []
+        futures: List[Tuple[int, Any]] = []
+        inline_idx: Optional[int] = None
+        if pipelined and lane_rows:
+            def _pre(rws: List[Request]):
+                # lane-scoped join: the PCIe swap-outs a lane depends on
+                # complete right before ITS host attention reads the pages
+                return lambda: self.transfer.join_requests(rws, kind="out")
+            thread_lanes = lane_rows if has_dev_lane else lane_rows[:-1]
+            for li, rws in enumerate(thread_lanes):
+                futures.append((li, self.executor.submit_host_lane(
+                    rws, pre=_pre(rws), lane=li + 1)))
+            if not has_dev_lane:
+                inline_idx = n_lanes - 1
 
         # device lane: prefill sub-batch, then batch-0's fused decode graph.
         # Each dispatch's (start, end) window is kept separately so overlap
@@ -566,7 +589,8 @@ class NeoEngine:
         if rows:
             if pipelined:
                 # swap-ins join here, before batch-0's graph consumes (and
-                # donates) the pool; swap-outs join on the batch-1 thread
+                # donates) the pool; swap-outs join lane-scoped on the lane
+                # threads
                 self.transfer.join(in_handles)
                 logits0 = None
                 if rows0:
@@ -576,61 +600,72 @@ class NeoEngine:
                     dev_windows.append((t0, time.perf_counter()))
                     self.stats.device_busy_time += dev_windows[-1][1] - t0
                     self.stats.lane_add("batch0", dev_windows[-1][1] - t0)
+                lane_windows = [(0.0, 0.0)] * n_lanes
+                lane_logits: List[Optional[np.ndarray]] = [None] * n_lanes
+                inline_hb = 0.0
+                if inline_idx is not None:
+                    # engine-thread lane (no device lane to run instead)
+                    rws = lane_rows[inline_idx]
+                    self.transfer.join_requests(rws, kind="out")
+                    hb0 = self.host_attn.busy_time
+                    t0b = time.perf_counter()
+                    lane_logits[inline_idx] = self.executor.decode_host_lane(
+                        rws, lane=inline_idx + 1)
+                    lane_windows[inline_idx] = (t0b, time.perf_counter())
+                    inline_hb = self.host_attn.busy_time - hb0
+                for li, fut in futures:
+                    lane_logits[li], lane_windows[li] = fut.result()
                 row_logits: List[np.ndarray] = []
                 if rows0:
                     row_logits.extend(np.asarray(logits0))
-                if b1_future is not None:
-                    logits1, (s1, e1) = b1_future.result()
-                    b1_end = e1
-                    row_logits.extend(np.asarray(logits1))
-                    self.stats.lane_add("batch1", e1 - s1)
-                    if dev_windows:
-                        self.stats.pipeline_overlap_time += sum(
-                            max(0.0, min(e, e1) - max(s, s1))
-                            for s, e in dev_windows)
-                        self.stats.pipeline_ideal_time += min(
-                            sum(e - s for s, e in dev_windows), e1 - s1)
-                        self.stats.pipelined_steps += 1
-                elif b1_micro:
-                    # micro-batched batch-1-only step: lane A on the batch-1
-                    # thread, lane B inline on the engine thread — A's host
-                    # attention overlaps B's linear stages and vice versa.
-                    # Swap-outs join first: both lanes read host pages.
-                    self.transfer.join(out_handles)
-                    k = min(max(plan.microbatch_split, 1), len(rows1) - 1)
-                    fut = self.executor.submit_batch1(rows1[:k], lane=1)
-                    t0b = time.perf_counter()
-                    logits_b = self.executor.decode_batch1(rows1[k:], lane=2)
-                    wb = (t0b, time.perf_counter())
-                    logits_a, wa = fut.result()
-                    row_logits.extend(np.asarray(logits_a))
-                    row_logits.extend(np.asarray(logits_b))
-                    b1_end = max(wa[1], wb[1])
-                    self.stats.lane_add("micro_a", wa[1] - wa[0])
-                    self.stats.lane_add("micro_b", wb[1] - wb[0])
-                    self.stats.pipeline_overlap_time += max(
-                        0.0, min(wa[1], wb[1]) - max(wa[0], wb[0]))
-                    self.stats.pipeline_ideal_time += min(
-                        wa[1] - wa[0], wb[1] - wb[0])
+                for lg in lane_logits:
+                    row_logits.extend(np.asarray(lg))
+                # ---- measured overlap, generalized to N lanes ------------
+                # Each lane contributes its dispatch window(s); realized
+                # overlap is the lane-busy time beyond the union span, ideal
+                # is everything but the longest lane (perfect packing hides
+                # all of it).  For one device lane + one host lane this
+                # reduces exactly to the pairwise window intersection.
+                for li, w in enumerate(lane_windows):
+                    self.stats.lane_add(f"host{li}", w[1] - w[0])
+                interval_lanes: List[List[Tuple[float, float]]] = []
+                if dev_windows:
+                    interval_lanes.append(list(dev_windows))
+                interval_lanes += [[w] for w in lane_windows]
+                busy = [sum(e - s for s, e in lw) for lw in interval_lanes]
+                if len(interval_lanes) >= 2:
+                    merged = sorted(w for lw in interval_lanes for w in lw)
+                    union = 0.0
+                    cur_s, cur_e = merged[0]
+                    for s, e in merged[1:]:
+                        if s > cur_e:
+                            union += cur_e - cur_s
+                            cur_s, cur_e = s, e
+                        else:
+                            cur_e = max(cur_e, e)
+                    union += cur_e - cur_s
+                    total = sum(busy)
+                    self.stats.pipeline_overlap_time += max(0.0, total - union)
+                    self.stats.pipeline_ideal_time += max(
+                        0.0, total - max(busy))
                     self.stats.pipelined_steps += 1
-                    self.stats.microbatched_steps += 1
-                elif b1_inline:
-                    self.transfer.join(out_handles)
-                    hb0 = self.host_attn.busy_time
-                    t0b = time.perf_counter()
-                    row_logits.extend(np.asarray(
-                        self.executor.decode_batch1(rows1)))
-                    b1_end = time.perf_counter()
-                    lane = b1_end - t0b
-                    hb = self.host_attn.busy_time - hb0
-                    self.stats.lane_add("batch1", lane)
+                    if n_lanes >= 2:
+                        if has_dev_lane:
+                            self.stats.borrowed_lane_steps += 1
+                        else:
+                            self.stats.microbatched_steps += 1
+                elif inline_idx is not None:
                     # fully serialized batch-1-only step: the hideable half
                     # (the shorter of host attention vs the linear
                     # remainder) counts as ideal-but-unrealized overlap so
                     # bubble_fraction reflects the missing lane
+                    lane_t = busy[0]
                     self.stats.pipeline_ideal_time += max(
-                        0.0, min(hb, lane - hb))
+                        0.0, min(inline_hb, lane_t - inline_hb))
                     self.stats.serial_b1_steps += 1
+                if n_lanes:
+                    self.stats.lane_counts[n_lanes] = (
+                        self.stats.lane_counts.get(n_lanes, 0) + 1)
             else:
                 t0 = time.perf_counter()
                 logits = self.executor.decode(rows, host_flags)
@@ -654,7 +689,8 @@ class NeoEngine:
             # step's dispatch window (page-table building + prefill + both
             # decode lanes)
             dev_end = dev_windows[-1][1] if dev_windows else None
-            win_end = max(filter(None, (dev_end, b1_end)), default=None)
+            lanes_end = max((w[1] for w in lane_windows), default=None)
+            win_end = max(filter(None, (dev_end, lanes_end)), default=None)
             if win_end is not None:
                 for h in out_handles + in_handles:
                     self.stats.swap_hidden_bytes += int(

@@ -12,20 +12,19 @@ Two executors:
     JAX-native analogue of the paper's TrQKV → CPU-attn → TrO pipeline).
     Python kernel-launch overhead is paid once per iteration (the paper's §4
     launch-overhead fix, achieved with XLA fusion instead of CUDA C++).
-  - **batch-1** (host rows only): a fused host-only graph dispatched from a
-    dedicated thread — small jitted linear stages plus
-    :meth:`HostAttention.run_layer` through its own ordered io_callback
-    chain.  Because it never touches the device KV pool, it runs
-    **concurrently** with batch-0's jitted dispatch; :meth:`submit_batch1`
-    hands the result back through a future (Fig. 5's asymmetric overlap,
-    realized rather than modelled).
-  - **micro-batched batch-1** (batch-1-only plans): with no batch-0 lane to
-    hide under, the engine splits the host rows into two alternating
-    sub-batches on independent lanes (lane 1 on the dispatch thread, lane 2
-    inline on the engine thread) — sub-batch A's host attention overlaps
-    sub-batch B's linear stages, FastDecode-style.  Each lane owns its own
-    io_callback/state/graph triple, so the two fused graphs execute
-    concurrently without sharing mutable state.
+  - **host lanes** (batch-1 rows): fused host-only graphs — small jitted
+    linear stages plus :meth:`HostAttention.run_layer` through a per-lane
+    ordered io_callback chain.  Because they never touch the device KV
+    pool, any number of lanes run **concurrently** with each other and with
+    batch-0's jitted dispatch; :meth:`submit_host_lane` hands each lane's
+    result back through a future (Fig. 5's asymmetric overlap, realized
+    rather than modelled).  The engine maps the scheduler's unified lane
+    plan onto them: K=1 is the classic batch-1 hiding under batch-0, K>=2
+    with no batch-0 is the FastDecode-style micro-batch split, and K>=2
+    WITH a (short, decode-only) batch-0 is lane borrowing — the surplus
+    host rows overlap the device lane AND each other.  Each lane owns its
+    own io_callback/state/fused-graph triple, so concurrent graphs never
+    share mutable state.
 
   The serial :meth:`decode` path (all rows in one fused graph) is kept for
   ``pipeline=False`` and as the bitwise-equality oracle for the pipelined
@@ -72,7 +71,8 @@ class PagedExecutor:
     """Paged decode + bucketed prefill for decoder-only attention families."""
 
     def __init__(self, model: DenseLM, params: Params, pool: DualPool,
-                 host_attn: HostAttention, *, impl: str = "ref", interpret: bool = True):
+                 host_attn: HostAttention, *, impl: str = "ref",
+                 interpret: bool = True, host_lanes: int = 2):
         self.model = model
         self.cfg: ArchConfig = model.cfg
         self.params = params
@@ -85,18 +85,18 @@ class PagedExecutor:
         self._cb_state: Dict[str, np.ndarray] = {}
         self._decode_fns: Dict[Tuple[int, int], Any] = {}
         self._prefill_fns: Dict[Tuple[int, int], Any] = {}
-        # batch-1 lanes: a dedicated dispatch thread plus per-lane fused
-        # host-only graphs, each with a SEPARATE io_callback/state pair so
-        # concurrent graphs never share mutable state.  Lane 1 is the
-        # classic batch-1 lane (dispatched on the thread, overlapping
-        # batch-0); lane 2 exists for micro-batched batch-1-only plans —
-        # the engine runs sub-batch A on the thread (lane 1) and sub-batch
-        # B inline on its own thread (lane 2), so A's host attention
-        # overlaps B's linear stages FastDecode-style.
-        self._b1_pool = ThreadPoolExecutor(max_workers=1,
-                                           thread_name_prefix="neo-batch1")
-        self._cb_lane_state: Dict[int, Dict[str, np.ndarray]] = {1: {}, 2: {}}
-        self._b1_fns: Dict[int, Any] = {}
+        # Host lanes: up to ``host_lanes`` dispatch threads plus per-lane
+        # fused host-only graphs, each with a SEPARATE io_callback/state
+        # pair so concurrent graphs never share mutable state.  Lane ids are
+        # small ints assigned by the engine per step; lane 1 doubles as the
+        # classic batch-1 lane (K=1 plans), and for batch-1-only plans the
+        # engine runs the LAST lane inline on its own thread (the engine
+        # thread would otherwise idle) while the rest dispatch here.
+        self.host_lanes = max(1, host_lanes)
+        self._lane_pool = ThreadPoolExecutor(max_workers=self.host_lanes,
+                                             thread_name_prefix="neo-hostlane")
+        self._cb_lane_state: Dict[int, Dict[str, np.ndarray]] = {}
+        self._lane_fns: Dict[int, Any] = {}
 
     # ------------------------------------------------------------------
     # host attention callback (one per layer, ordered)
@@ -280,7 +280,7 @@ class PagedExecutor:
     decode_batch0 = decode
 
     # ------------------------------------------------------------------
-    # batch-1 lane (host rows only; runs off the engine thread)
+    # host lanes (host rows only; run off the engine thread)
     # ------------------------------------------------------------------
     def _host_cb_lane(self, lane, layer, q, k_new, v_new):
         st = self._cb_lane_state[lane]
@@ -300,13 +300,13 @@ class PagedExecutor:
             window=int(st["window"][0]) if "window" in st else 0,
         )
 
-    def _build_decode_b1(self, lane: int):
-        """Fused decode graph for an all-host-rows batch: the per-layer pre
+    def _build_decode_lane(self, lane: int):
+        """Fused decode graph for an all-host-rows lane: the per-layer pre
         and post halves are shared with the batch-0 graph; attention is the
         ordered host callback only — no device pool access, no donation, so
-        the graph can execute concurrently with batch-0's (or, across lanes,
-        with the other micro-batch's graph).  One jit object per lane; jax
-        retraces per row bucket."""
+        the graph can execute concurrently with batch-0's and with every
+        other lane's graph.  One jit object per lane; jax retraces per row
+        bucket."""
         model, cfg = self.model, self.cfg
         cb = functools.partial(self._host_cb_lane, lane)
 
@@ -344,24 +344,23 @@ class PagedExecutor:
 
         return jax.jit(step)
 
-    def decode_b1_fn(self, lane: int = 1):
-        if lane not in self._b1_fns:
-            self._b1_fns[lane] = self._build_decode_b1(lane)
-        return self._b1_fns[lane]
+    def decode_lane_fn(self, lane: int = 1):
+        if lane not in self._lane_fns:
+            self._lane_fns[lane] = self._build_decode_lane(lane)
+        return self._lane_fns[lane]
 
-    def decode_batch1(self, rows: List[Request], window: int = 0,
-                      *, lane: int = 1) -> np.ndarray:
-        """One decode iteration over host-resident ``rows`` (batch-1).
+    def decode_host_lane(self, rows: List[Request], window: int = 0,
+                         *, lane: int = 1) -> np.ndarray:
+        """One decode iteration over host-resident ``rows`` (one host lane).
 
         One fused jitted dispatch whose per-layer host attention (append new
         KV token + attend over the host pool) runs through its OWN ordered
         callback chain on :class:`HostAttention`.  Never touches the device
         KV pool, so it is safe to run concurrently with
-        :meth:`decode_batch0` — that concurrency is the
-        batch-1-hides-under-batch-0 overlap of Fig. 5.  ``lane`` selects an
-        independent callback/state/graph triple: micro-batched plans run
-        lane 1 on the batch-1 thread and lane 2 on the engine thread
-        concurrently (each caller thread must use a distinct lane).
+        :meth:`decode_batch0` and with any other host lane — that
+        concurrency is the lane overlap of Fig. 5, generalized to N lanes.
+        ``lane`` selects an independent callback/state/graph triple; each
+        concurrently dispatching caller thread must use a distinct lane id.
         """
         n = len(rows)
         D = _bucket(n)
@@ -389,39 +388,40 @@ class PagedExecutor:
             "offsets": offs,
             "window": np.asarray([window], np.int32),
         }
-        logits = self.decode_b1_fn(lane)(self.params, tokens, positions)
+        logits = self.decode_lane_fn(lane)(self.params, tokens, positions)
         return np.asarray(logits[:n])
 
     # ------------------------------------------------------------------
     # pipelined dispatch (futures-based handoff)
     # ------------------------------------------------------------------
-    def submit_batch1(
+    def submit_host_lane(
         self,
         rows: List[Request],
         window: int = 0,
         *,
-        pre_b1: Optional[Callable[[], None]] = None,
+        pre: Optional[Callable[[], None]] = None,
         lane: int = 1,
     ) -> Future:
-        """Launch batch-1 on its dispatch thread; the future resolves to
+        """Launch one host lane on a dispatch thread; the future resolves to
         ``(logits [n,V], (start, end))`` perf_counter stamps.
 
-        ``pre_b1`` runs on the batch-1 thread before any page is read — the
-        engine passes the swap-out join there, so PCIe transfers complete
-        exactly when (and only when) the dependent host attention needs them.
+        ``pre`` runs on the lane thread before any page is read — the
+        engine passes the lane-scoped swap-out join there, so PCIe
+        transfers complete exactly when (and only when) the dependent host
+        attention needs them.
         """
 
-        def run_b1() -> Tuple[np.ndarray, Tuple[float, float]]:
+        def run_lane() -> Tuple[np.ndarray, Tuple[float, float]]:
             t0 = time.perf_counter()
-            if pre_b1 is not None:
-                pre_b1()
-            out = self.decode_batch1(rows, window, lane=lane)
+            if pre is not None:
+                pre()
+            out = self.decode_host_lane(rows, window, lane=lane)
             return out, (t0, time.perf_counter())
 
-        return self._b1_pool.submit(run_b1)
+        return self._lane_pool.submit(run_lane)
 
     def close(self) -> None:
-        self._b1_pool.shutdown(wait=True)
+        self._lane_pool.shutdown(wait=True)
 
     # ------------------------------------------------------------------
     # prefill

@@ -156,23 +156,51 @@ class PerfModel:
         half2 = max(t_l1 + t_ga0, t_ca0, t_sw)
         return L * (half1 + half2)
 
-    def microbatch_time(self, n_a: int, kv_a: int, n_b: int, kv_b: int) -> float:
-        """Per-layer time of two alternating batch-1 micro-batches (the
+    def lane_plan_time(
+        self,
+        lanes: "list[tuple[int, int]]",
+        *,
+        device_compute: float = 0.0,
+        device_host_attn: float = 0.0,
+    ) -> float:
+        """Per-layer steady-state time of a generalized lane plan: one
+        optional device lane plus K host lanes (the unified form of the
         FastDecode sub-batch pipeline, §5.3 baseline lineage).
 
-        Each lane serializes linear → host-attention within itself; across
-        lanes the linear stages share the device and the attention shares the
-        host cores, so the steady-state per-layer period is bounded below by
-        every resource's total demand and by each lane's own serial chain::
+        ``lanes`` is ``[(n_tokens, kv_tokens), ...]`` — one entry per host
+        lane.  ``device_compute`` is the device lane's per-layer compute
+        (t_l0 + t_ga0) and ``device_host_attn`` its embedded batch-0 host
+        attention (t_ca0, which blocks inside the device graph's ordered
+        callback); both are 0 for batch-1-only plans.
 
-            max(T_l(A)+T_l(B), T_ca(A)+T_ca(B), T_l(A)+T_ca(A), T_l(B)+T_ca(B))
+        Each host lane serializes linear → host-attention within itself;
+        across lanes every linear stage shares the device and every host
+        attention shares the host cores, so the steady-state per-layer
+        period is bounded below by each resource's TOTAL demand and by each
+        lane's own serial chain::
 
-        All four terms are EWMA-calibrated through ``t_linear``/``t_cpu_attn``,
-        so the predicted overlap tracks measured lane times.
+            max( dev + Σ T_l(i),          # device: all linear stages + lane-0
+                 T_ca0 + Σ T_ca(i),       # host cores: all host attention
+                 dev + T_ca0,             # the device lane's own chain
+                 T_l(i) + T_ca(i) ... )   # each host lane's own chain
+
+        All terms are EWMA-calibrated through ``t_linear``/``t_cpu_attn``,
+        so the predicted overlap tracks measured lane times.  With K = 2 and
+        no device lane this reduces exactly to the PR-3 micro-batch model.
         """
-        t_la, t_lb = self.t_linear(n_a), self.t_linear(n_b)
-        t_ca, t_cb = self.t_cpu_attn(kv_a), self.t_cpu_attn(kv_b)
-        return max(t_la + t_lb, t_ca + t_cb, t_la + t_ca, t_lb + t_cb)
+        t_lin = [self.t_linear(n) for n, _ in lanes]
+        t_att = [self.t_cpu_attn(kv) for _, kv in lanes]
+        device_total = device_compute + sum(t_lin)
+        host_total = device_host_attn + sum(t_att)
+        chains = [device_compute + device_host_attn]
+        chains += [tl + ta for tl, ta in zip(t_lin, t_att)]
+        return max(device_total, host_total, *chains)
+
+    def microbatch_time(self, n_a: int, kv_a: int, n_b: int, kv_b: int) -> float:
+        """Two alternating batch-1 micro-batches — the K=2, no-device-lane
+        degenerate case of :meth:`lane_plan_time` (kept as the historical
+        entry point)."""
+        return self.lane_plan_time([(n_a, kv_a), (n_b, kv_b)])
 
     def gpu_only_time(self, *, batch_tokens: int, gpu_kv_tokens: int,
                       prefill_sq_sum: float = 0.0) -> float:

@@ -88,13 +88,15 @@ class BatchPlan:
     # recompute preemption: KV dropped entirely, request returns to the
     # waitqueue for prefill-replay (both pools were full)
     preempt: List[Request] = field(default_factory=list)
-    # micro-batched batch-1 (FastDecode-style): set when the plan has NO
-    # batch-0 lane to hide host attention under and >= 2 host rows; the
-    # engine then splits decode_cpu1 at ``microbatch_split`` into two
-    # alternating sub-batches so one's host attention overlaps the other's
-    # linear stages
-    microbatch: bool = False
-    microbatch_split: int = 0  # decode_cpu1[:k] -> lane A, [k:] -> lane B
+    # Unified lane plan: interior boundaries that partition ``decode_cpu1``
+    # into K = len(lane_splits)+1 contiguous host lanes, e.g. [2, 5] splits
+    # rows [0:2] / [2:5] / [5:].  Empty = one lane (the classic batch-1).
+    # Set by :meth:`NeoScheduler._annotate_lanes` when the plan has no LONG
+    # device lane (no prefill) and >= 2 host rows: batch-1-only plans split
+    # FastDecode-style (the PR-3 micro-batch is the K=2 case), and mixed
+    # decode-only plans BORROW the lanes so their surplus host rows overlap
+    # the short device lane instead of serializing behind it.
+    lane_splits: List[int] = field(default_factory=list)
     # estimates
     est_iter_time: float = 0.0
     est_tokens: int = 0
@@ -121,6 +123,33 @@ class BatchPlan:
     def host_rows(self) -> List[Request]:
         return self.decode_cpu0 + self.decode_cpu1
 
+    # -- lane plan ---------------------------------------------------------
+    @property
+    def num_host_lanes(self) -> int:
+        if not self.decode_cpu1:
+            return 0
+        return len(self.lane_splits) + 1
+
+    def host_lanes(self) -> List[List[Request]]:
+        """``decode_cpu1`` partitioned into the plan's contiguous host lanes
+        (one lane when ``lane_splits`` is empty)."""
+        if not self.decode_cpu1:
+            return []
+        bounds = [0] + list(self.lane_splits) + [len(self.decode_cpu1)]
+        return [self.decode_cpu1[a:b] for a, b in zip(bounds, bounds[1:])]
+
+    @property
+    def microbatch(self) -> bool:
+        """PR-3 compatibility view: a batch-1-only plan split into >= 2
+        lanes (mixed plans that merely *borrow* lanes are not micro-batched
+        in the historical sense)."""
+        return bool(self.lane_splits) and not (
+            self.prefill or self.decode_gpu or self.decode_cpu0)
+
+    @property
+    def microbatch_split(self) -> int:
+        return self.lane_splits[0] if self.microbatch else 0
+
     def is_empty(self) -> bool:
         return not (self.prefill or self.decode_rows or self.swap_in
                     or self.swap_out or self.preempt)
@@ -132,7 +161,7 @@ class BatchPlan:
             f"dec_cpu0={len(self.decode_cpu0)} dec_cpu1={len(self.decode_cpu1)} "
             f"swap_out={len(self.swap_out)} swap_in={len(self.swap_in)} "
             f"preempt={len(self.preempt)} "
-            f"mb={self.microbatch_split if self.microbatch else 0} "
+            f"lanes={self.num_host_lanes} "
             f"est={self.est_iter_time * 1e3:.2f}ms/{self.est_tokens}tok"
         )
 
@@ -203,50 +232,122 @@ class NeoScheduler:
             plan = self._plan_full_offload(pools)
         else:
             plan = self._plan_neo(pools)
-        self._annotate_microbatch(plan)
+        self._annotate_lanes(plan)
         return plan
 
-    def _annotate_microbatch(self, plan: BatchPlan) -> None:
-        """Mark batch-1-only plans for micro-batched execution.
+    # ------------------------------------------------------------------
+    # unified lane-plan annotation
+    # ------------------------------------------------------------------
+    def _annotate_lanes(self, plan: BatchPlan) -> None:
+        """Split batch-1 into K >= 2 contiguous host lanes when nothing LONG
+        hides it.
 
-        NEO's asymmetric overlap needs a batch-0 device lane to hide CPU
-        attention behind; a plan with ONLY batch-1 host rows (common under
-        ``fastdecode`` / full offload) runs host attention fully serialized.
-        Split decode_cpu1 into two alternating sub-batches — A's host
-        attention overlaps B's linear stages and vice versa — choosing the
-        split point that minimizes :meth:`PerfModel.microbatch_time` (i.e.
-        balancing ``t_cpu_attn`` of one lane against ``t_linear`` + residual
-        of the other).  ``microbatch=False`` plans execute exactly as before.
+        NEO's asymmetric overlap needs a long batch-0 device lane to hide
+        host attention behind.  Two plan shapes lack one:
+
+        * **batch-1-only** (no batch-0 at all — ``fastdecode`` / full
+          offload): host attention runs fully serialized (the PR-3
+          micro-batch case);
+        * **mixed decode-only** (batch-0 has decode rows but NO prefill —
+          a structurally SHORT device lane, e.g. a swap-out burst whose
+          victims decode on the host while the survivors decode on device):
+          the surplus host rows in batch-1 serialize behind the short
+          device dispatch.
+
+        Both now share one mechanism: partition ``decode_cpu1`` into K
+        alternating lanes so each lane's host attention overlaps the other
+        lanes' linear stages (and the device lane, when present).
+
+        Eligibility is STRUCTURAL (>= 2 host rows, no prefill — at smoke
+        scale a model-gated on/off decision would never fire); the
+        EWMA-calibrated perf model chooses only K and the lane boundaries,
+        minimizing :meth:`PerfModel.lane_plan_time`.  Plans with prefill
+        keep the single classic batch-1 lane (K=1, the PR-1 shape — the
+        prefill-integrated device lane is long by construction), and
+        ``lane_splits == []`` plans execute exactly as before.
         """
-        plan.microbatch = False
-        plan.microbatch_split = 0
-        if not (self.engine_cfg.microbatch and self.engine_cfg.pipeline):
+        plan.lane_splits = []
+        cfg = self.engine_cfg
+        if not (cfg.microbatch and cfg.pipeline):
             return
         if plan.mode == "serial":
             return  # strawman #1 must stay overlap-free by definition
-        if plan.prefill or plan.decode_gpu or plan.decode_cpu0:
-            return  # a batch-0 lane exists: the two-batch overlap handles it
+        if plan.prefill:
+            return  # long device lane: the two-batch overlap handles it
         rows = plan.decode_cpu1
-        if len(rows) < 2:
+        k_max = min(cfg.max_host_lanes, len(rows))
+        if k_max < 2:
             return
-        # Eligibility is structural (no batch-0 lane, >= 2 host rows); the
-        # EWMA-calibrated perf model balances the SPLIT POINT — one lane's
-        # host attention against the other lane's linear + attention chain.
         perf = self.perf
+        # device-lane per-layer terms (0 for batch-1-only plans): compute =
+        # batch-0 linear + device attention; its embedded cpu0 host attention
+        # shares the host cores with the borrowed lanes.
+        dev_compute = dev_attn = 0.0
+        if plan.decode_gpu or plan.decode_cpu0:
+            dev_compute = self._t_l0(plan) + perf.t_gpu_attn(
+                self._kv_tokens(plan.decode_gpu))
+            dev_attn = perf.t_cpu_attn(self._kv_tokens(plan.decode_cpu0))
         kv = [r.kv_len + 1 for r in rows]
-        total_kv = sum(kv)
-        n = len(rows)
-        best_k, best_t = 1, None
-        kv_a = 0
-        for k in range(1, n):
-            kv_a += kv[k - 1]
-            t = perf.microbatch_time(k, kv_a, n - k, total_kv - kv_a)
+        best_t, best_splits = None, None
+        for k_lanes in range(2, k_max + 1):
+            splits = self._lane_boundaries(kv, k_lanes, dev_compute, dev_attn)
+            lanes = self._lane_loads(kv, splits)
+            t = perf.lane_plan_time(lanes, device_compute=dev_compute,
+                                    device_host_attn=dev_attn)
             if best_t is None or t < best_t:
-                best_k, best_t = k, t
-        plan.microbatch = True
-        plan.microbatch_split = best_k
+                best_t, best_splits = t, splits
+        plan.lane_splits = best_splits
         plan.est_iter_time = self.cfg.num_layers * max(
             best_t, plan.stages.t_swap)
+
+    @staticmethod
+    def _lane_loads(kv: List[int], splits: List[int]) -> List[Tuple[int, int]]:
+        """[(n_rows, kv_tokens)] per lane for boundaries ``splits``."""
+        bounds = [0] + list(splits) + [len(kv)]
+        return [(b - a, sum(kv[a:b])) for a, b in zip(bounds, bounds[1:])]
+
+    def _lane_boundaries(self, kv: List[int], k_lanes: int,
+                         dev_compute: float, dev_attn: float) -> List[int]:
+        """Contiguous lane boundaries for ``k_lanes`` lanes over rows with
+        per-row KV loads ``kv``.
+
+        K=2 scans every split point for the exact ``lane_plan_time`` argmin
+        (bit-compatible with the PR-3 micro-batch split); K>2 uses a
+        balanced-KV partition via prefix sums — attention is the
+        bandwidth-bound stage worth balancing (the linear term is one
+        dispatch per lane regardless of where the boundaries sit).
+        """
+        n = len(kv)
+        if k_lanes == 2:
+            perf = self.perf
+            total_kv = sum(kv)
+            best_k, best_t = 1, None
+            kv_a = 0
+            for k in range(1, n):
+                kv_a += kv[k - 1]
+                t = perf.lane_plan_time(
+                    [(k, kv_a), (n - k, total_kv - kv_a)],
+                    device_compute=dev_compute, device_host_attn=dev_attn)
+                if best_t is None or t < best_t:
+                    best_k, best_t = k, t
+            return [best_k]
+        total = sum(kv)
+        bounds: List[int] = []
+        acc = 0
+        for i in range(n):
+            acc += kv[i]
+            lanes_left = k_lanes - 1 - len(bounds)
+            if lanes_left <= 0:
+                break
+            # place the next boundary once this lane holds its KV share, but
+            # always leave >= 1 row per remaining lane
+            if acc >= total * (len(bounds) + 1) / k_lanes and i + 1 <= n - lanes_left:
+                bounds.append(i + 1)
+        while len(bounds) < k_lanes - 1:  # force non-empty tail lanes
+            prev = bounds[-1] if bounds else 0
+            hi = n - (k_lanes - 1 - len(bounds) - 1)  # room for later lanes
+            bounds.append(min(prev + 1, hi))
+        return bounds
 
     def _admission_control(self, pools: PoolView) -> None:
         """Reject queued prompts that can never fit any pool."""

@@ -12,14 +12,21 @@ with a **launch → join** protocol:
   view stays identical to the serial path — and enqueue the actual data
   movement on a background worker.
 * The returned :class:`TransferHandle` is joined immediately **before the
-  pages are touched**: the batch-1 dispatch thread joins swap-outs before
-  host attention reads the pages; the engine joins swap-ins before the
-  device decode graph consumes the pool.
+  pages are touched**, and joins are LANE-SCOPED: each host-lane dispatch
+  thread joins only the swap-outs whose request it decodes
+  (:meth:`join_requests`), and the engine joins swap-ins before the device
+  decode graph consumes the pool.  Transfers nobody consumes this step join
+  at the end-of-step :meth:`drain`.
 
-Copies are page-granular and layer-wise (the worker streams ``[layer,
-pages]`` chunks), with per-job byte and wall-time accounting so the engine
-can report measured PCIe bandwidth and how many bytes were hidden under
-compute.
+Copies run on **per-direction streams** — one background worker per PCIe
+direction (device→host and host→device), modelling the full-duplex DMA
+engines of real hardware — so a swap-out burst never queues behind swap-ins
+(or vice versa).  ``per_direction=False`` restores the single shared worker
+(the PR-1 behavior) for A/B measurement; byte accounting is identical in
+both modes.  Copies are page-granular and layer-wise (each worker streams
+``[layer, pages]`` chunks), with per-job byte and wall-time accounting so
+the engine can report measured PCIe bandwidth and how many bytes were
+hidden under compute.
 
 Thread-safety contract:
 
@@ -38,8 +45,8 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from dataclasses import dataclass
-from typing import Callable, Iterable, List, Optional
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional
 
 import numpy as np
 
@@ -54,7 +61,11 @@ class TransferStats:
     jobs: int = 0
     bytes_out: int = 0  # device -> host
     bytes_in: int = 0  # host -> device
-    busy_time: float = 0.0  # worker wall time spent copying
+    busy_time: float = 0.0  # summed worker wall time spent copying
+    # per-stream copy time ("out" / "in"; one "all" key in single-worker
+    # mode) — with per-direction streams the two can overlap, so their sum
+    # (== busy_time) may exceed the wall-clock copy window
+    busy_by_stream: Dict[str, float] = field(default_factory=dict)
     wait_time: float = 0.0  # time join() callers spent blocked
 
     @property
@@ -106,26 +117,43 @@ class _Job:
 
 
 class TransferEngine:
-    """Background worker that executes page-granular, layer-wise KV moves."""
+    """Background copy streams executing page-granular, layer-wise KV moves.
 
-    def __init__(self, pool: DualPool):
+    One worker per PCIe direction by default (``per_direction=True``);
+    ``per_direction=False`` runs every job on a single shared worker — the
+    legacy mode, kept for A/B measurement and the byte-accounting parity
+    test.
+    """
+
+    def __init__(self, pool: DualPool, *, per_direction: bool = True):
         self.pool = pool
         self.stats = TransferStats()
         self._lock = threading.Lock()
-        self._q: "queue.Queue[Optional[_Job]]" = queue.Queue()
+        self.per_direction = per_direction
+        streams = ("out", "in") if per_direction else ("all",)
+        self._queues: Dict[str, "queue.Queue[Optional[_Job]]"] = {
+            s: queue.Queue() for s in streams
+        }
         self._pending: List[TransferHandle] = []
-        self._worker = threading.Thread(
-            target=self._run, name="neo-transfer", daemon=True
-        )
-        self._worker.start()
+        self._workers = {
+            s: threading.Thread(target=self._run, args=(s,),
+                                name=f"neo-transfer-{s}", daemon=True)
+            for s in streams
+        }
+        for w in self._workers.values():
+            w.start()
         self._closed = False
 
+    def _stream(self, kind: str) -> str:
+        return kind if self.per_direction else "all"
+
     # ------------------------------------------------------------------
-    # worker
+    # workers (one per copy stream)
     # ------------------------------------------------------------------
-    def _run(self) -> None:
+    def _run(self, stream: str) -> None:
+        q = self._queues[stream]
         while True:
-            job = self._q.get()
+            job = q.get()
             if job is None:
                 return
             t0 = time.perf_counter()
@@ -139,6 +167,8 @@ class TransferEngine:
             with self._lock:
                 self.stats.jobs += 1
                 self.stats.busy_time += t1 - t0
+                self.stats.busy_by_stream[stream] = (
+                    self.stats.busy_by_stream.get(stream, 0.0) + (t1 - t0))
             job.handle._event.set()
 
     # ------------------------------------------------------------------
@@ -179,7 +209,7 @@ class TransferEngine:
                 self.stats.bytes_out += nbytes
             self.pool.add_swap_bytes(nbytes)
 
-        self._q.put(_Job(handle, copy))
+        self._queues[self._stream("out")].put(_Job(handle, copy))
         with self._lock:
             self._pending.append(handle)
         return handle
@@ -219,7 +249,7 @@ class TransferEngine:
             dev.put_pages(new_pages, staged["k"], staged["v"])
 
         handle._apply = apply
-        self._q.put(_Job(handle, gather))
+        self._queues[self._stream("in")].put(_Job(handle, gather))
         with self._lock:
             self._pending.append(handle)
         return handle
@@ -285,6 +315,24 @@ class TransferEngine:
                 self.stats.wait_time += time.perf_counter() - t0
                 self._pending = [p for p in self._pending if not p._joined]
 
+    def join_requests(self, reqs: Iterable[Request],
+                      kind: Optional[str] = None) -> None:
+        """Lane-scoped join point: block until every pending transfer whose
+        request is in ``reqs`` (optionally restricted to ``kind`` "out" /
+        "in") is complete.
+
+        This is what each host-lane dispatch thread calls right before its
+        host attention reads the lane's pages — swap-outs join against the
+        lane that consumes them rather than one global barrier.  Only call
+        with ``kind="in"`` (or ``kind=None`` over swap-ins) from the engine
+        thread: swap-in joins apply a staged device write.
+        """
+        rids = {r.rid for r in reqs}
+        with self._lock:
+            hs = [h for h in self._pending
+                  if h.req.rid in rids and (kind is None or h.kind == kind)]
+        self.join(hs)
+
     def drain(self) -> None:
         """Join every outstanding transfer (step barrier / shutdown)."""
         self.join(list(self._pending))
@@ -294,5 +342,7 @@ class TransferEngine:
             return
         self._closed = True
         self.drain()
-        self._q.put(None)
-        self._worker.join(timeout=5.0)
+        for q in self._queues.values():
+            q.put(None)
+        for w in self._workers.values():
+            w.join(timeout=5.0)

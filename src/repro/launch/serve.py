@@ -75,6 +75,8 @@ def run_trace(engine: NeoEngine, trace, *, vocab: int, seed: int = 0,
     metrics.swap_wait_time = engine.stats.swap_wait_time
     metrics.microbatched_steps = engine.stats.microbatched_steps
     metrics.serial_b1_steps = engine.stats.serial_b1_steps
+    metrics.borrowed_lane_steps = engine.stats.borrowed_lane_steps
+    metrics.lane_count_steps = dict(engine.stats.lane_counts)
     metrics.lane_busy = dict(engine.stats.lane_busy_time)
     metrics.prefill_tokens_computed = engine.stats.prefill_tokens
     if engine.pool is not None:
@@ -108,8 +110,11 @@ def main(argv=None) -> int:
     ap.add_argument("--no-pipeline", action="store_true",
                     help="serial reference execution (no async swaps/overlap)")
     ap.add_argument("--no-microbatch", action="store_true",
-                    help="disable the micro-batched batch-1-only lane "
-                         "(inline serial host attention, the pre-split path)")
+                    help="disable multi-lane batch-1 splitting (inline "
+                         "serial host attention / single classic lane)")
+    ap.add_argument("--max-host-lanes", type=int,
+                    default=EngineConfig.max_host_lanes,
+                    help="upper bound K on concurrent host lanes per plan")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="two-tier radix prefix cache (COW KV page sharing)")
     ap.add_argument("--require-hits", action="store_true",
@@ -126,6 +131,7 @@ def main(argv=None) -> int:
         policy=args.policy,
         pipeline=not args.no_pipeline,
         microbatch=not args.no_microbatch,
+        max_host_lanes=args.max_host_lanes,
         prefix_cache=args.prefix_cache,
         seed=args.seed,
     )

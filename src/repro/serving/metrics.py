@@ -58,9 +58,12 @@ class ServeMetrics:
     bubble_fraction: float = 0.0
     swap_hidden_bytes: int = 0
     swap_wait_time: float = 0.0
-    # micro-batched batch-1-only lane (FastDecode-style split)
+    # unified lane plans: batch-1-only micro-batch splits, mixed-plan lane
+    # borrowing, and the per-K step histogram (EngineStats mirror)
     microbatched_steps: int = 0
     serial_b1_steps: int = 0
+    borrowed_lane_steps: int = 0
+    lane_count_steps: Dict[int, int] = field(default_factory=dict)
     lane_busy: Dict[str, float] = field(default_factory=dict)
     # prefix cache (PrefixCacheStats mirror; zeros when the cache is off)
     prefill_tokens_computed: int = 0
@@ -140,9 +143,12 @@ class ServeMetrics:
             "bubble_fraction": round(self.bubble_fraction, 3),
             "swap_hidden_MB": round(self.swap_hidden_bytes / 1e6, 3),
             "swap_wait_s": round(self.swap_wait_time, 3),
-            # micro-batched batch-1-only lanes (0 when nothing was eligible)
+            # unified lane plans (0 when nothing was eligible)
             "microbatched_steps": self.microbatched_steps,
             "serial_b1_steps": self.serial_b1_steps,
+            "borrowed_lane_steps": self.borrowed_lane_steps,
+            "lane_count_steps": {str(k): v for k, v in
+                                 sorted(self.lane_count_steps.items())},
             "lane_busy_s": {k: round(v, 3) for k, v in sorted(self.lane_busy.items())},
             # two-tier prefix cache (all zeros when disabled)
             "prefill_tokens_computed": self.prefill_tokens_computed,

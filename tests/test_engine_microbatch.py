@@ -62,9 +62,11 @@ def test_fastdecode_microbatch_bitwise_identical(dense_setup, rng):
     assert on_stats.pipeline_overlap_time > 0
     assert off_stats.pipeline_overlap_time == 0
     assert on_stats.bubble_fraction < off_stats.bubble_fraction
-    # both micro lanes actually dispatched
-    assert on_stats.lane_busy_time.get("micro_a", 0) > 0
-    assert on_stats.lane_busy_time.get("micro_b", 0) > 0
+    # both host lanes actually dispatched
+    assert on_stats.lane_busy_time.get("host0", 0) > 0
+    assert on_stats.lane_busy_time.get("host1", 0) > 0
+    # batch-1-only splits are micro-batched steps, not borrowed ones
+    assert on_stats.borrowed_lane_steps == 0
 
 
 def test_mixed_neo_plans_identical(dense_setup, rng):

@@ -1,0 +1,325 @@
+"""Unified lane-plan execution: ANY lane plan (random K, random row splits,
+mid-stream preemption) must produce bitwise-identical greedy outputs vs the
+serial path, mixed plans with a SHORT device lane must actually borrow host
+lanes, and the scheduler's lane annotation must always emit a valid
+partition.  (Satellites of the N-lane refactor; the PR-3-era two-lane tests
+live in test_engine_microbatch.py.)"""
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+from repro.config import EngineConfig
+from repro.configs import get_config, get_smoke_config
+from repro.core.engine import NeoEngine
+from repro.core.perfmodel import PerfModel
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import BatchPlan, NeoScheduler, PoolView
+
+
+CFG = get_config("qwen3-0.6b")
+PAGE = CFG.kv_block_size
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_smoke_config("qwen3-0.6b")
+    from repro.models.api import get_model
+
+    params = get_model(cfg).init(jax.random.key(7))
+    return cfg, params
+
+
+def _make_engine(cfg, params, *, policy, pipeline, device_pages=8,
+                 host_pages=128, **kw):
+    ecfg = EngineConfig(device_pool_pages=device_pages,
+                        host_pool_pages=host_pages, max_batch_tokens=256,
+                        policy=policy, pipeline=pipeline, **kw)
+    return NeoEngine(cfg, ecfg, params=params)
+
+
+def _patch_random_lanes(eng: NeoEngine, seed: int) -> None:
+    """Replace the model-tuned lane annotation with RANDOM lane plans:
+    random K in [1, max_host_lanes], random contiguous boundaries — the
+    executor must produce identical greedy outputs for every one of them
+    (row-independent per-row compute)."""
+    t_rng = np.random.default_rng(seed)
+    kmax = eng.engine_cfg.max_host_lanes
+
+    def random_annotate(plan: BatchPlan) -> None:
+        plan.lane_splits = []
+        n = len(plan.decode_cpu1)
+        if n < 2:
+            return  # K=1 (the PR-1 single-lane shape) is covered elsewhere
+        k = int(t_rng.integers(2, min(kmax, n) + 1))
+        bounds = t_rng.choice(np.arange(1, n), size=k - 1, replace=False)
+        plan.lane_splits = sorted(int(b) for b in bounds)
+
+    eng.scheduler._annotate_lanes = random_annotate
+
+
+def _run(eng, prompts, n_out, max_iters=500):
+    rids = [eng.submit(p, n_out) for p in prompts]
+    done = eng.run_until_done(max_iters)
+    out = [done[r] for r in rids]
+    stats = eng.stats
+    states = [eng.requests[r].state for r in rids]
+    eng.close()
+    return out, stats, states
+
+
+# ---------------------------------------------------------------------------
+# property: random lane plans are bitwise identical to serial
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy,seed", [("fastdecode", 0), ("neo", 1)])
+def test_random_lane_plans_bitwise_identical(dense_setup, policy, seed):
+    """Random K / random row splits injected into every plan: greedy decode
+    must match the serial reference bitwise, and multi-lane steps must
+    actually run (lane_counts sees K >= 2, up to max_host_lanes)."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(seed)
+    if policy == "neo":
+        # uniform lockstep lengths under device pressure: swap-out bursts
+        # put >= 2 rows in batch-1 so the random splits have work
+        prompts = [list(map(int, rng.integers(1, 500, size=30)))
+                   for _ in range(5)]
+        pages = dict(device_pages=11)
+    else:
+        prompts = [list(map(int, rng.integers(1, 500, size=n)))
+                   for n in (20, 33, 27, 18, 25)]
+        pages = dict(device_pages=8)
+    ref = _make_engine(cfg, params, policy=policy, pipeline=False, **pages)
+    out_ref, _, _ = _run(ref, prompts, 8)
+    eng = _make_engine(cfg, params, policy=policy, pipeline=True, **pages)
+    _patch_random_lanes(eng, seed + 100)
+    out, stats, _ = _run(eng, prompts, 8)
+    assert out == out_ref
+    assert any(k >= 2 for k in stats.lane_counts), \
+        "random lane plans never produced a multi-lane step"
+
+
+def test_random_lane_plans_with_preemption(dense_setup):
+    """Mid-stream recompute preemption (tiny host pool, low starvation
+    limit) under random lane plans: preempted rows vanish from their lane
+    without disturbing greedy outputs, and every request still finishes."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(5)
+    prompts = [list(map(int, rng.integers(1, 500, size=n)))
+               for n in (22, 26, 24)]
+    ref = _make_engine(cfg, params, policy="fastdecode", pipeline=False,
+                       host_pages=6, starvation_limit=2)
+    out_ref, ref_stats, _ = _run(ref, prompts, 10)
+    eng = _make_engine(cfg, params, policy="fastdecode", pipeline=True,
+                       host_pages=6, starvation_limit=2)
+    _patch_random_lanes(eng, 42)
+    out, stats, states = _run(eng, prompts, 10)
+    preempts = sum(int(s.split("preempt=")[1].split()[0])
+                   for s in stats.plans)
+    assert preempts > 0, "scenario must actually preempt"
+    assert out == out_ref
+    assert all(s == RequestState.FINISHED for s in states)
+
+
+def test_three_lane_plan_executes(dense_setup):
+    """A forced K=3 split must dispatch three concurrent host lanes (the
+    >2-lane generalization the PR-3 engine could not express)."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(9)
+    prompts = [list(map(int, rng.integers(1, 500, size=n)))
+               for n in (20, 24, 28, 18, 22, 26)]
+    ref = _make_engine(cfg, params, policy="fastdecode", pipeline=False)
+    out_ref, _, _ = _run(ref, prompts, 8)
+    eng = _make_engine(cfg, params, policy="fastdecode", pipeline=True)
+
+    def three_lanes(plan: BatchPlan) -> None:
+        plan.lane_splits = []
+        n = len(plan.decode_cpu1)
+        if n >= 3:
+            a = max(1, n // 3)
+            plan.lane_splits = [a, max(a + 1, 2 * n // 3)]
+
+    eng.scheduler._annotate_lanes = three_lanes
+    out, stats, _ = _run(eng, prompts, 8)
+    assert out == out_ref
+    assert stats.lane_counts.get(3, 0) > 0
+    for lane in ("host0", "host1", "host2"):
+        assert stats.lane_busy_time.get(lane, 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# regression: short-device-lane mixed plans borrow host lanes
+# ---------------------------------------------------------------------------
+
+
+def test_short_device_lane_borrows_lanes(dense_setup):
+    """Lockstep uniform-length decode under device pressure: the swap-out
+    burst yields a mixed decode-only plan (device survivors + >= 2 host
+    victims, no prefill).  Its surplus host rows must execute micro-batched
+    (borrowed_lane_steps > 0) with bitwise-identical greedy outputs."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(3)
+    prompts = [list(map(int, rng.integers(1, 500, size=30)))
+               for _ in range(5)]
+    ref = _make_engine(cfg, params, policy="neo", pipeline=False,
+                       device_pages=11)
+    out_ref, ref_stats, _ = _run(ref, prompts, 8)
+    eng = _make_engine(cfg, params, policy="neo", pipeline=True,
+                       device_pages=11)
+    out, stats, _ = _run(eng, prompts, 8)
+    assert out == out_ref
+    assert stats.borrowed_lane_steps > 0, \
+        "mixed short-device-lane plan never borrowed host lanes"
+    assert ref_stats.borrowed_lane_steps == 0  # serial path never splits
+    # the borrowed step ran a device lane AND >= 2 host lanes
+    assert stats.lane_busy_time.get("batch0", 0) > 0
+    assert stats.lane_busy_time.get("host1", 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler annotation: structural eligibility + valid partitions
+# ---------------------------------------------------------------------------
+
+
+def _scheduler(policy="neo", **kw):
+    ecfg = EngineConfig(device_pool_pages=64, host_pool_pages=256,
+                        max_batch_tokens=2048, policy=policy, **kw)
+    return NeoScheduler(CFG, ecfg, PerfModel.for_arch(CFG, "tpu_v5e"))
+
+
+def _host_row(rid, kv_tokens):
+    r = Request(rid=rid, prompt=[1] * kv_tokens, max_new_tokens=16,
+                arrival_time=float(rid))
+    r.state = RequestState.RUNNING
+    r.location = "cpu"
+    r.out_tokens = [0]
+    r.pages = [0] * (-(-(r.kv_len + 1) // PAGE))
+    return r
+
+
+def _gpu_row(rid, kv_tokens):
+    """Device-resident row sitting exactly AT a page boundary: its next
+    token needs a fresh page, so a tight pool forces a swap-out burst."""
+    r = Request(rid=rid, prompt=[1] * kv_tokens, max_new_tokens=16,
+                arrival_time=float(rid))
+    r.state = RequestState.RUNNING
+    r.location = "gpu"
+    r.out_tokens = [0]
+    r.pages = [0] * (r.kv_len // PAGE)
+    return r
+
+
+def _assert_valid_splits(plan: BatchPlan) -> None:
+    n = len(plan.decode_cpu1)
+    splits = plan.lane_splits
+    assert splits == sorted(splits)
+    assert len(set(splits)) == len(splits)
+    assert all(0 < s < n for s in splits)
+    lanes = plan.host_lanes()
+    assert sum(len(l) for l in lanes) == n
+    assert all(lanes), "empty host lane"
+    # lanes are contiguous, in plan order
+    assert [r.rid for l in lanes for r in l] == [r.rid for r in plan.decode_cpu1]
+
+
+def test_mixed_decode_only_plan_borrows():
+    """decode_gpu rows + >= 2 swap-out victims in batch-1, no prefill: the
+    plan must carry lane splits (borrowing), bounded by max_host_lanes."""
+    s = _scheduler("neo", max_host_lanes=3)
+    # 4 gpu rows at a page boundary, no free device pages: the planner must
+    # swap two victims out into batch-1 while the survivors decode on device
+    for i in range(4):
+        s.gpu_runq.append(_gpu_row(i, PAGE))
+    plan = s.plan(PoolView(PAGE, 0, 256, device_total=64, host_total=256))
+    assert not plan.prefill
+    assert plan.decode_gpu and len(plan.decode_cpu1) >= 2
+    assert plan.lane_splits, "mixed short-device-lane plan did not split"
+    assert plan.num_host_lanes <= 3
+    assert not plan.microbatch  # borrowing is not the batch-1-only shape
+    _assert_valid_splits(plan)
+
+
+def test_prefill_plans_keep_single_lane():
+    """A prefill makes the device lane structurally LONG: batch-1 stays one
+    classic lane (the PR-1 shape)."""
+    s = _scheduler("fastdecode")
+    for i in range(3):
+        s.cpu_runq.append(_host_row(100 + i, 40))
+    s.add_request(Request(rid=0, prompt=[1] * 40, max_new_tokens=4))
+    plan = s.plan(PoolView(PAGE, 64, 256))
+    assert plan.prefill
+    assert plan.lane_splits == []
+    assert plan.num_host_lanes <= 1
+
+
+def test_max_host_lanes_two_reproduces_pr3_split():
+    """max_host_lanes=2 must produce the exact PR-3 two-lane split: one
+    boundary at the microbatch_time argmin."""
+    s2 = _scheduler("fastdecode", max_host_lanes=2)
+    s_any = _scheduler("fastdecode")  # default cap (4)
+    kvs = [40, 200, 80, 120, 60]
+    for sched in (s2, s_any):
+        for i, kv in enumerate(kvs):
+            sched.cpu_runq.append(_host_row(100 + i, kv))
+    plan2 = s2.plan(PoolView(PAGE, 64, 1 << 20))
+    plan_any = s_any.plan(PoolView(PAGE, 64, 1 << 20))
+    assert len(plan2.lane_splits) == 1
+    perf = s2.perf
+    kv = [r.kv_len + 1 for r in plan2.decode_cpu1]
+    n, total = len(kv), sum(kv)
+    best_k, best_t = 1, None
+    acc = 0
+    for k in range(1, n):
+        acc += kv[k - 1]
+        t = perf.microbatch_time(k, acc, n - k, total - acc)
+        if best_t is None or t < best_t:
+            best_k, best_t = k, t
+    assert plan2.lane_splits == [best_k]
+    assert plan2.microbatch and plan2.microbatch_split == best_k
+    _assert_valid_splits(plan_any)
+
+
+def test_lane_boundaries_valid_partition():
+    """_lane_boundaries must always return a strictly increasing interior
+    partition with non-empty lanes, for any KV distribution and K."""
+    s = _scheduler("neo")
+    rng = np.random.default_rng(0)
+    cases = [[1] * 2, [1] * 7, [1000, 1, 1, 1], [1, 1, 1, 1000]]
+    cases += [list(map(int, rng.integers(1, 500, size=n)))
+              for n in (2, 3, 5, 9, 17)]
+    for kv in cases:
+        for k in range(2, min(6, len(kv)) + 1):
+            b = s._lane_boundaries(kv, k, 0.0, 0.0)
+            assert len(b) == k - 1
+            assert b == sorted(b) and len(set(b)) == len(b)
+            assert all(0 < x < len(kv) for x in b)
+            loads = s._lane_loads(kv, b)
+            assert all(n_rows >= 1 for n_rows, _ in loads)
+            assert sum(n for n, _ in loads) == len(kv)
+            assert sum(t for _, t in loads) == sum(kv)
+
+
+if HAS_HYPOTHESIS:
+
+    @given(st.lists(st.integers(1, 5000), min_size=2, max_size=32),
+           st.integers(2, 6))
+    @settings(max_examples=100, deadline=None)
+    def test_lane_boundaries_property(kv, k):
+        s = _scheduler("neo")
+        k = min(k, len(kv))
+        if k < 2:
+            return
+        b = s._lane_boundaries(kv, k, 0.0, 0.0)
+        assert len(b) == k - 1
+        assert b == sorted(b) and len(set(b)) == len(b)
+        assert all(0 < x < len(kv) for x in b)
+        loads = s._lane_loads(kv, b)
+        assert all(n_rows >= 1 for n_rows, _ in loads)
+        assert sum(n for n, _ in loads) == len(kv)

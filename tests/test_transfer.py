@@ -105,6 +105,113 @@ def test_transfer_empty_request(dense_setup):
     te.close()
 
 
+def _fill_pages(cfg, pool, req, seed=0, location="gpu"):
+    rng = np.random.default_rng(seed)
+    shape = (cfg.num_attention_layers, len(req.pages), cfg.kv_block_size,
+             cfg.num_kv_heads, cfg.head_dim)
+    k = rng.normal(size=shape).astype(np.float32)
+    v = rng.normal(size=shape).astype(np.float32)
+    src = pool.device if location == "gpu" else pool.host
+    src.put_pages(req.pages, k, v)
+    return k, v
+
+
+def test_per_direction_streams_concurrent_in_out(dense_setup):
+    """A stalled device->host copy must NOT block a concurrent host->device
+    swap-in: the two directions run on independent streams (full-duplex
+    PCIe), whereas the legacy single worker serializes them in queue
+    order."""
+    import threading
+
+    cfg, _, _ = dense_setup
+    for per_direction, expect_overlap in ((True, True), (False, False)):
+        pool = DualPool(cfg, device_pages=8, host_pages=8)
+        te = TransferEngine(pool, per_direction=per_direction)
+        req_out = _mk_request(0, pool, 3)  # device-resident, swaps out
+        req_in = _mk_request(1, pool, 1, location="cpu")  # host, swaps in
+        k_out, v_out = _fill_pages(cfg, pool, req_out, seed=0)
+        k_in, v_in = _fill_pages(cfg, pool, req_in, seed=1, location="cpu")
+        # stall the OUT copy at its byte-accounting tail until released
+        # (keyed on the job's byte count so it works in both worker modes)
+        release = threading.Event()
+        out_nbytes = 2 * k_out.nbytes
+        orig = pool.add_swap_bytes
+
+        def stalled(n):
+            if n == out_nbytes:
+                release.wait(timeout=10)
+            orig(n)
+
+        pool.add_swap_bytes = stalled
+        h_out = te.swap_out(req_out)  # queued first
+        h_in = te.swap_in(req_in)
+        if expect_overlap:
+            te.join([h_in])  # completes although the out stream is stalled
+            assert not h_out.done()
+        else:
+            # single worker: the stalled out job blocks the queued in job
+            assert not h_in.wait(0.3)
+        release.set()
+        te.join([h_out, h_in])
+        k_dev, v_dev = pool.device.read_pages(req_in.pages)
+        np.testing.assert_allclose(k_dev, k_in, rtol=1e-6)
+        k_host, _ = pool.host.read_pages(req_out.pages)
+        np.testing.assert_allclose(k_host, k_out, rtol=1e-6)
+        # per-stream busy accounting covers exactly the streams that ran
+        streams = set(te.stats.busy_by_stream)
+        assert streams == ({"out", "in"} if per_direction else {"all"})
+        te.close()
+
+
+def test_lane_scoped_join_requests(dense_setup):
+    """join_requests must join exactly the pending transfers of the given
+    requests (the per-lane join point), leaving the rest for drain()."""
+    cfg, _, _ = dense_setup
+    pool = DualPool(cfg, device_pages=8, host_pages=8)
+    te = TransferEngine(pool)
+    ra = _mk_request(0, pool, 2)
+    rb = _mk_request(1, pool, 2)
+    _fill_pages(cfg, pool, ra, 0)
+    _fill_pages(cfg, pool, rb, 1)
+    ha = te.swap_out(ra)
+    hb = te.swap_out(rb)
+    te.join_requests([ra], kind="out")
+    assert ha.done()
+    with te._lock:
+        pending = list(te._pending)
+    assert ha not in pending, "joined handle must leave the pending set"
+    assert hb in pending or hb.done()
+    # a kind mismatch joins nothing
+    te.join_requests([rb], kind="in")
+    with te._lock:
+        assert hb in te._pending
+    te.drain()
+    with te._lock:
+        assert not te._pending
+    te.close()
+
+
+def test_byte_accounting_matches_single_worker(dense_setup):
+    """Per-direction streams must report byte-for-byte the same accounting
+    as the legacy single worker over an identical swap sequence."""
+    cfg, _, _ = dense_setup
+    results = {}
+    for per_direction in (True, False):
+        pool = DualPool(cfg, device_pages=8, host_pages=8)
+        te = TransferEngine(pool, per_direction=per_direction)
+        r0 = _mk_request(0, pool, 3)
+        _fill_pages(cfg, pool, r0, seed=3)
+        te.join([te.swap_out(r0)])
+        te.join([te.swap_in(r0)])
+        r1 = _mk_request(1, pool, 1)
+        _fill_pages(cfg, pool, r1, seed=4)
+        te.join([te.swap_out(r1)])
+        results[per_direction] = (te.stats.bytes_out, te.stats.bytes_in,
+                                  te.stats.jobs, pool.swap_bytes)
+        te.close()
+    assert results[True] == results[False]
+
+
 # ---------------------------------------------------------------------------
 # pipelined engine end-to-end
 # ---------------------------------------------------------------------------
