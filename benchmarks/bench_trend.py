@@ -14,7 +14,11 @@ Schema (``neo-bench-trend/v1``; documented in ``benchmarks/README.md``):
 * ``engine.microbatched_steps`` / ``engine.borrowed_lane_steps`` — unified
   lane-plan counters (GATED > 0: the splits must actually fire);
 * ``prefix_cache.hit_rate`` / ``prefill_reduction`` — multiturn cache
-  smoke (hit_rate GATED against baseline - tolerance).
+  smoke (hit_rate GATED against baseline - tolerance);
+* ``prefix_cache.host_served_hit_tokens`` / ``inplace_host_hits`` —
+  zero-copy host-tier serving counters from the ``--host-serving`` section
+  (GATED > 0: host-resident prefixes must be served in place, and the
+  section itself fails on any host-hit PCIe bytes).
 
 ``--write-baseline`` refreshes ``benchmarks/BENCH_baseline.json`` (commit
 the result deliberately — that is the trajectory being gated).
@@ -29,7 +33,7 @@ import sys
 
 from benchmarks.common import FIG_DIR, HERE
 
-SCHEMA = "neo-bench-trend/v1"
+SCHEMA = "neo-bench-trend/v2"
 REPO_ROOT = os.path.dirname(HERE)
 BASELINE_PATH = os.path.join(HERE, "BENCH_baseline.json")
 SUMMARY_PATH = os.path.join(REPO_ROOT, "BENCH_engine.json")
@@ -53,7 +57,7 @@ def collect(n: int) -> tuple[int, dict]:
     rc = 0
     rc |= engine_real.main(["--microbatch-only", "--n", str(n)])
     rc |= engine_real.main(["--mixed-lane-only"])
-    rc |= prefix_cache.main(["--quick"])
+    rc |= prefix_cache.main(["--quick", "--host-serving"])
 
     er = _load("engine_real.json")
     pc = _load("prefix_cache.json")
@@ -77,6 +81,11 @@ def collect(n: int) -> tuple[int, dict]:
             "hit_rate": pc["cache_on"]["hit_rate"],
             "prefill_reduction": pc["prefill_reduction"],
             "cache_on_tok_s": pc["cache_on"]["token_throughput"],
+            # zero-copy host-tier serving (--host-serving section)
+            "host_served_hit_tokens": pc["hs_cache_on"]["host_served_hit_tokens"],
+            "inplace_host_hits": pc["hs_cache_on"]["inplace_host_hits"],
+            "token_granular_extra_hit_tokens":
+                pc["hs_token_granular_extra_hit_tokens"],
         },
     }
     return rc, summary
@@ -104,6 +113,14 @@ def gate(summary: dict, baseline: dict) -> int:
     if s_pc["hit_rate"] < b_pc["hit_rate"] - HIT_RATE_TOL:
         print(f"[bench_trend] FAIL: prefix-cache hit_rate regressed "
               f"{b_pc['hit_rate']} -> {s_pc['hit_rate']} (tol {HIT_RATE_TOL})")
+        fails += 1
+    if s_pc.get("host_served_hit_tokens", 0) <= 0:
+        print("[bench_trend] FAIL: no host-served hit tokens in the "
+              "host-serving smoke")
+        fails += 1
+    if s_pc.get("inplace_host_hits", 0) <= 0:
+        print("[bench_trend] FAIL: no in-place host hits in the "
+              "host-serving smoke")
         fails += 1
     if not fails:
         print(f"[bench_trend] OK: bubble {s_eng['bubble_fraction']} "

@@ -81,13 +81,15 @@ def drive(eng: NeoEngine, conversations):
 
 
 def run(prefix_cache: bool, conversations, warmup, *, params, cfg,
-        device_pages: int, host_pages: int, seed: int = 0):
+        device_pages: int, host_pages: int, seed: int = 0,
+        token_granular: bool = True):
     from repro.core.engine import EngineStats
     from repro.core.prefix_cache import PrefixCacheStats
 
     ecfg = EngineConfig(
         device_pool_pages=device_pages, host_pool_pages=host_pages,
         max_batch_tokens=2048, policy="neo", prefix_cache=prefix_cache,
+        prefix_token_granular=token_granular,
         seed=seed,
     )
     eng = NeoEngine(cfg, ecfg, params=params)
@@ -115,9 +117,74 @@ def run(prefix_cache: bool, conversations, warmup, *, params, cfg,
         "demoted": stats.demoted_pages if stats else 0,
         "evicted": stats.evicted_pages if stats else 0,
         "cow": stats.cow_copies if stats else 0,
+        # zero-copy host-tier serving
+        "inplace_host_hits": stats.inplace_host_hits if stats else 0,
+        "host_served_hit_tokens": stats.host_served_hit_tokens if stats else 0,
+        "host_hit_pcie_bytes": stats.host_hit_pcie_bytes if stats else 0,
     }
     eng.close()
     return res, outputs
+
+
+def run_host_serving(conversations, warmup, *, params, cfg,
+                     host_pages: int) -> tuple:
+    """``--host-serving`` section, two gates:
+
+    1. **Zero-PCIe host serving** — a multiturn closed loop whose device
+       pool is far too small for the conversation histories, so prefills
+       land on the CPU queue and their host-resident prefixes must be
+       served IN PLACE: ``inplace_host_hits > 0``, host-hit PCIe bytes and
+       ``promoted_pages`` stay 0, greedy outputs bitwise identical to
+       cache-off.
+    2. **Token-granular vs page-aligned** — same trace (histories extend at
+       arbitrary, non-page-aligned lengths), cache on in both modes: the
+       token-granular radix must serve STRICTLY more hit tokens.
+
+    Returns (rc, results-dict).
+    """
+    # a device pool smaller than one history forces the host tier to SERVE
+    small_dev = 16
+    common = dict(params=params, cfg=cfg, device_pages=small_dev,
+                  host_pages=host_pages)
+    rows, results = [], {}
+    off, off_out = run(False, conversations, warmup, **common)
+    on, on_out = run(True, conversations, warmup, **common)
+    aligned, _ = run(True, conversations, warmup, token_granular=False,
+                     **common)
+    for key, r in (("hs_cache_off", off), ("hs_cache_on", on),
+                   ("hs_page_aligned", aligned)):
+        results[key] = r
+        rows.append([key, r["prefill_tok"], r["hit_rate"], r["hit_tokens"],
+                     r["inplace_host_hits"], r["host_served_hit_tokens"],
+                     r["host_hit_pcie_bytes"], r["promoted"]])
+    print("=== Host-tier serving (multiturn closed-loop, device pool "
+          f"{small_dev} pages) ===")
+    print_table(["config", "prefill tok", "hit rate", "hit tok", "inplace",
+                 "host served", "hit PCIe B", "promo"], rows)
+
+    rc = 0
+    same = off_out == on_out
+    results["hs_outputs_identical"] = same
+    if not same:
+        print("FAIL: host-served outputs differ from cache-off outputs")
+        rc = 1
+    if on["inplace_host_hits"] <= 0:
+        print("FAIL: no in-place host-served prefix hits "
+              "(inplace_host_hits == 0)")
+        rc = 1
+    if on["host_hit_pcie_bytes"] > 0 or on["promoted"] > 0:
+        print(f"FAIL: host-resident prefix hits crossed PCIe "
+              f"({on['host_hit_pcie_bytes']} B, promoted "
+              f"{on['promoted']} pages)")
+        rc = 1
+    gain = on["hit_tokens"] - aligned["hit_tokens"]
+    results["hs_token_granular_extra_hit_tokens"] = gain
+    print(f"token-granular extra hit tokens vs page-aligned: {gain}")
+    if gain <= 0:
+        print("FAIL: token-granular matching did not increase hit tokens "
+              "over page-aligned matching")
+        rc = 1
+    return rc, results
 
 
 def main(argv=None) -> int:
@@ -127,6 +194,10 @@ def main(argv=None) -> int:
     ap.add_argument("--device-pages", type=int, default=96)
     ap.add_argument("--host-pages", type=int, default=256)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--host-serving", action="store_true",
+                    help="also run the zero-copy host-serving section: "
+                         "in-place host hits with 0 promotion PCIe bytes + "
+                         "token-granular vs page-aligned hit-token gate")
     args = ap.parse_args(argv)
     n = 8 if args.quick else args.n
 
@@ -160,6 +231,14 @@ def main(argv=None) -> int:
           f"outputs identical: {same}")
     results["prefill_reduction"] = round(reduction, 2)
     results["outputs_identical"] = same
+
+    rc = 0
+    if args.host_serving:
+        rc, hs_results = run_host_serving(
+            conversations, warmup, params=params, cfg=cfg,
+            host_pages=args.host_pages)
+        results.update(hs_results)
+
     save_json("prefix_cache.json", results)
     if not same:
         print("FAIL: cached outputs differ from cold outputs")
@@ -167,7 +246,7 @@ def main(argv=None) -> int:
     if reduction < 2.0:
         print("FAIL: prefill-token reduction < 2x on the multiturn trace")
         return 1
-    return 0
+    return rc
 
 
 if __name__ == "__main__":

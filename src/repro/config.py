@@ -284,6 +284,16 @@ class EngineConfig:
     # copy-on-write with later requests that repeat the prefix.  Off by
     # default — the compat path is bitwise identical to the uncached engine.
     prefix_cache: bool = False
+    # Token-granular radix matching/insertion: leaves keep a partial tail
+    # page beyond their last full page and matches land at any token offset
+    # (served copy-on-write).  False restores the PR-2 page-aligned radix
+    # (full pages only, exact first-page keys) for A/B measurement.
+    prefix_token_granular: bool = True
+    # Zero-copy host-tier serving: prefills whose longest cached prefix is
+    # host-resident are preferentially placed on the CPU queue so acquire()
+    # pins the prefix IN PLACE (no promotion PCIe) and host attention serves
+    # it from DRAM.  False keeps the PR-2 placement (device first).
+    prefix_host_serving: bool = True
     # Perf-model refresh rate (EWMA) — also the straggler-mitigation knob.
     ewma_alpha: float = 0.2
     # Force a host request into batch-1 after this many consecutive skips

@@ -167,7 +167,8 @@ class NeoEngine:
             # Two-tier radix prefix cache (off by default: the uncached path
             # stays bitwise identical to the pre-cache engine).
             self.prefix_cache = (
-                PrefixCache(self.pool, self.transfer)
+                PrefixCache(self.pool, self.transfer,
+                            token_granular=engine_cfg.prefix_token_granular)
                 if engine_cfg.prefix_cache else None
             )
         else:
@@ -214,8 +215,9 @@ class NeoEngine:
         if self.prefix_cache is not None and not extras:
             # longest-prefix match (estimate only; re-validated and pinned at
             # prefill dispatch) so the scheduler prices the prefill correctly
+            # — residency steers host placement (zero-copy host serving)
             # (multimodal prompts are not prefix-cached)
-            req.cached_len = self.prefix_cache.lookup(req.prompt)
+            req.cached_len, req.prefix_loc = self.prefix_cache.lookup_ex(req.prompt)
         self.requests[rid] = req
         self.scheduler.add_request(req)
         self._journal.append(
@@ -375,6 +377,7 @@ class NeoEngine:
             r.pages = []
             r.location = "gpu"
             r.cached_len = 0  # replay re-matches the tree at dispatch
+            r.prefix_loc = None
         # the scheduler planned against free + evictable cached pages; evict
         # (demote-first) so the promised room actually exists for the swaps.
         # The gpu pass runs FIRST: it may demote device nodes INTO the host
@@ -462,13 +465,15 @@ class NeoEngine:
                 if r.suffix_len > token_budget:
                     # the match shrank and the realized suffix no longer fits
                     # this batch's token budget: release the pins and defer
-                    # to the next iteration (the retry re-runs acquire, so
-                    # drop this lookup from the hit-rate accounting)
+                    # to the next iteration.  retract_acquire unwinds the
+                    # hit AND the copy counters of the pages just released
+                    # (the retry re-runs acquire and would double-count
+                    # them); the lookup is dropped too.
                     if shared:
                         pool.free(shared)
                     if cow is not None:
                         pool.free([cow])
-                    self.prefix_cache.retract_hit(r.cached_len)
+                    self.prefix_cache.retract_acquire()
                     self.prefix_cache.retract_lookup(len(r.prefill_tokens))
                     r.cached_len = 0
                     deferred.append(r)
@@ -480,12 +485,15 @@ class NeoEngine:
                     # dispatch-time match exceeded the scheduler's page
                     # budget (tree changed since submit): release the prefix
                     # — the pages stay tree-owned and evictable — and fall
-                    # back to a cold prefill under full eviction pressure
+                    # back to a cold prefill under full eviction pressure.
+                    # retract_acquire unwinds the hit and the released
+                    # copies; the lookup stays (the prompt is still consumed
+                    # by the cold path, a genuine miss for hit_rate).
                     if shared:
                         pool.free(shared)
                     if cow is not None:
                         pool.free([cow])
-                    self.prefix_cache.retract_hit(r.cached_len)
+                    self.prefix_cache.retract_acquire()
                     r.cached_len = 0
                     if r.suffix_len > token_budget:
                         # the cold suffix (== full prefill) busts the token
@@ -664,6 +672,12 @@ class NeoEngine:
                         0.0, min(inline_hb, lane_t - inline_hb))
                     self.stats.serial_b1_steps += 1
                 if n_lanes:
+                    # K-histogram records the EXECUTED lane count: n_lanes is
+                    # derived from lane_rows AFTER the preemption/state
+                    # filter, so a plan whose lanes were emptied between
+                    # plan and launch (mid-dispatch serial fallback) counts
+                    # under the K it actually ran with, not the planned K —
+                    # bench_trend publishes this histogram.
                     self.stats.lane_counts[n_lanes] = (
                         self.stats.lane_counts.get(n_lanes, 0) + 1)
             else:

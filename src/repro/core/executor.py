@@ -97,6 +97,10 @@ class PagedExecutor:
                                              thread_name_prefix="neo-hostlane")
         self._cb_lane_state: Dict[int, Dict[str, np.ndarray]] = {}
         self._lane_fns: Dict[int, Any] = {}
+        # zero-copy host-prefix prefill: per-dispatch state for the ordered
+        # prefix-partials callback (engine thread only; lane callbacks own
+        # their separate per-lane state dicts)
+        self._cb_prefix_state: Dict[str, np.ndarray] = {}
 
     # ------------------------------------------------------------------
     # host attention callback (one per layer, ordered)
@@ -535,11 +539,62 @@ class PagedExecutor:
         """Suffix-only prefill for prefix-cache hits.
 
         ``req.pages`` already holds the shared/COW prefix pages (in the
-        target pool) followed by freshly allocated suffix pages.  The cached
-        prefix KV is gathered from the pool into a padded [L, B, T, KV, hd]
-        input; the computed suffix KV is scattered back token-granular (the
-        COW page fills from a mid-page offset).
+        target pool) followed by freshly allocated suffix pages.  Rows land
+        on one of two paths:
+
+        * **device rows** gather the cached prefix KV from the device pool
+          into a padded [L, B, T, KV, hd] graph input (the PR-2 path);
+        * **host rows** take the ZERO-COPY host-serving path — the prefix
+          stays in the host pool and each layer's suffix queries detour
+          through an ordered callback computing flash partials over the
+          in-place pages (:meth:`HostAttention.prefix_partials`), so the
+          prefix never crosses PCIe; only the freshly computed suffix KV is
+          written back.
+
+        Both scatter the suffix KV token-granular (the COW page fills from
+        a mid-page offset).
         """
+        host_idx = [i for i, h in enumerate(to_host) if h]
+        gpu_idx = [i for i, h in enumerate(to_host) if not h]
+        if host_idx and gpu_idx:
+            # the two legs touch disjoint rows and pools: run the CPU-heavy
+            # host-partials leg on a lane thread so it overlaps the device
+            # gather graph instead of stalling the device lane (same
+            # concurrency contract as decode_host_lane — the host-prefix
+            # graph never touches the device KV pool)
+            fut = self._lane_pool.submit(
+                self._prefill_cached_host, [reqs[i] for i in host_idx])
+            out_g = self._prefill_cached_gather([reqs[i] for i in gpu_idx])
+            out_h = fut.result()
+            out = np.zeros((len(reqs), out_h.shape[-1]), np.float32)
+            out[host_idx] = out_h
+            out[gpu_idx] = out_g
+            return out
+        if host_idx:
+            return self._prefill_cached_host(reqs)
+        return self._prefill_cached_gather(reqs)
+
+    def _scatter_suffix(self, reqs: List[Request], suffix_lens: np.ndarray,
+                        k_all, v_all, to_host: bool) -> None:
+        """Token-granular suffix-KV scatter: the suffix starts at offset
+        ``cached_len``, which may sit mid-page (inside the COW page)."""
+        page, cfg = self.page, self.cfg
+        L = self.pool.host.num_layers
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+        pool = self.pool.host if to_host else self.pool.device
+        for i, r in enumerate(reqs):
+            suf = int(suffix_lens[i])
+            pos = r.cached_len + np.arange(suf)
+            pids = np.asarray([r.pages[p // page] for p in pos], np.int32)
+            offs = (pos % page).astype(np.int32)
+            pool.write_token_range(pids, offs, k_all[:, i, :suf], v_all[:, i, :suf])
+            if to_host:  # layer-wise PCIe swap of the freshly computed KV
+                nb = 2 * suf * L * KV * hd * self.pool.host.k.dtype.itemsize
+                self.pool.add_swap_bytes(nb)
+
+    def _prefill_cached_gather(self, reqs: List[Request]) -> np.ndarray:
+        """Device rows: gather the cached prefix into the prefix-attention
+        graph input, then scatter the suffix KV into the device pool."""
         cfg, page = self.cfg, self.page
         n = len(reqs)
         L = self.pool.device.num_layers
@@ -553,34 +608,70 @@ class PagedExecutor:
         prefix_lens = np.zeros((n,), np.int32)
         pre_k = np.zeros((L, n, T, KV, hd), np.float32)
         pre_v = np.zeros((L, n, T, KV, hd), np.float32)
-        for i, (r, host) in enumerate(zip(reqs, to_host)):
+        for i, r in enumerate(reqs):
             suf = r.suffix_len
             tokens[i, :suf] = r.prefill_tokens[r.cached_len:]
             suffix_lens[i] = suf
             prefix_lens[i] = r.cached_len
             npg = -(-r.cached_len // page)
-            pool = self.pool.host if host else self.pool.device
-            k_np, v_np = pool.read_pages(r.pages[:npg])  # [L, npg, page, KV, hd]
+            k_np, v_np = self.pool.device.read_pages(r.pages[:npg])
             pre_k[:, i, : npg * page] = k_np.reshape(L, npg * page, KV, hd)
             pre_v[:, i, : npg * page] = v_np.reshape(L, npg * page, KV, hd)
 
         logits, k_all, v_all = self.prefill_prefix_fn(n, S, T)(
             self.params, tokens, suffix_lens, pre_k, pre_v, prefix_lens
         )
-        # token-granular scatter: suffix KV starts at offset cached_len, which
-        # may sit mid-page (inside the COW page)
-        for i, (r, host) in enumerate(zip(reqs, to_host)):
-            suf = int(suffix_lens[i])
-            pos = r.cached_len + np.arange(suf)
-            pids = np.asarray([r.pages[p // page] for p in pos], np.int32)
-            offs = (pos % page).astype(np.int32)
-            pool = self.pool.host if host else self.pool.device
-            k_toks = k_all[:, i, :suf]
-            v_toks = v_all[:, i, :suf]
-            pool.write_token_range(pids, offs, k_toks, v_toks)
-            if host:  # layer-wise PCIe swap of the freshly computed KV
-                nb = 2 * suf * L * KV * hd * self.pool.host.k.dtype.itemsize
-                self.pool.add_swap_bytes(nb)
+        self._scatter_suffix(reqs, suffix_lens, k_all, v_all, to_host=False)
+        return np.asarray(logits)
+
+    # -- zero-copy host-prefix path ------------------------------------------
+    def _host_prefix_cb(self, layer, q):
+        st = self._cb_prefix_state
+        return self.host.prefix_partials(
+            int(layer), np.asarray(q), st["tables"], st["prefix_lens"])
+
+    def _build_prefill_host_prefix(self, B: int, S: int):
+        model = self.model
+
+        def fn(params, tokens, true_lens, prefix_lens):
+            return model.prefill_with_host_prefix(
+                params, tokens, prefix_lens, prefix_cb=self._host_prefix_cb,
+                capacity=S, true_lens=true_lens,
+            )
+
+        return jax.jit(fn)
+
+    def prefill_host_prefix_fn(self, B: int, S: int):
+        key = ("hostprefix", B, S)
+        if key not in self._prefill_fns:
+            self._prefill_fns[key] = self._build_prefill_host_prefix(B, S)
+        return self._prefill_fns[key]
+
+    def _prefill_cached_host(self, reqs: List[Request]) -> np.ndarray:
+        """Host rows: ZERO-COPY host serving.  The cached prefix pages stay
+        in the host pool and are read in place, at their absolute positions,
+        by the per-layer prefix-partials callback; only the computed suffix
+        KV crosses PCIe (the writeback into the host pool)."""
+        page = self.page
+        n = len(reqs)
+        S = _bucket(max(r.suffix_len for r in reqs), 16)
+        max_pp = max(-(-r.cached_len // page) for r in reqs)
+        tokens = np.zeros((n, S), np.int32)
+        suffix_lens = np.zeros((n,), np.int32)
+        prefix_lens = np.zeros((n,), np.int32)
+        tables = np.zeros((n, max_pp), np.int32)
+        for i, r in enumerate(reqs):
+            suf = r.suffix_len
+            tokens[i, :suf] = r.prefill_tokens[r.cached_len:]
+            suffix_lens[i] = suf
+            prefix_lens[i] = r.cached_len
+            npg = -(-r.cached_len // page)
+            tables[i, :npg] = r.pages[:npg]
+        self._cb_prefix_state = {"tables": tables, "prefix_lens": prefix_lens}
+        logits, k_all, v_all = self.prefill_host_prefix_fn(n, S)(
+            self.params, tokens, suffix_lens, prefix_lens
+        )
+        self._scatter_suffix(reqs, suffix_lens, k_all, v_all, to_host=True)
         return np.asarray(logits)
 
 

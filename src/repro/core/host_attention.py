@@ -64,6 +64,12 @@ class HostAttention:
         # run concurrently from different threads
         self.busy_time = 0.0
         self.bytes_read = 0
+        # zero-copy host-serving prefix gathers (suffix prefill over an
+        # in-place host-resident prefix) — kept SEPARATE from busy_time so
+        # the perf model's cpu_attn EWMA calibration only sees decode
+        # attention; this pair backs PerfModel.t_host_prefix instead
+        self.prefix_busy_time = 0.0
+        self.prefix_bytes_read = 0
         self._acct_lock = threading.Lock()
 
     # ------------------------------------------------------------------
@@ -150,6 +156,61 @@ class HostAttention:
         with self._acct_lock:
             self.busy_time += time.perf_counter() - t0
         return out
+
+    # ------------------------------------------------------------------
+    # zero-copy host-serving: prefix partials for the suffix-prefill path
+    # ------------------------------------------------------------------
+    def prefix_partials(
+        self,
+        layer: int,
+        q: np.ndarray,  # [B, S, H, hd] — suffix queries (padded rows ok)
+        tables: np.ndarray,  # [B, MP] page ids in the HOST pool
+        prefix_lens: np.ndarray,  # [B] valid cached-prefix tokens per row
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Flash partials of suffix queries over host-RESIDENT prefix pages.
+
+        The pages are read IN PLACE at their absolute positions — the cached
+        prefix never crosses PCIe; only the (small) partials return to the
+        device, where :func:`attn_lib.suffix_attention_merge` combines them
+        with the causal suffix scores.  Rows with ``prefix_lens == 0``
+        return ``m = -1e30`` so the merge discards them.  Returns
+        ``(acc [B,S,H,hd], l [B,S,H], m [B,S,H])`` float32.
+        """
+        B, S, H, hd = q.shape
+        KV = self.pool_k.shape[3]
+        qpk = H // KV
+        scale = 1.0 / np.sqrt(hd)
+        acc = np.zeros((B, S, H, hd), np.float32)
+        l = np.zeros((B, S, H), np.float32)
+        m = np.full((B, S, H), -1e30, np.float32)
+        t0 = time.perf_counter()
+        for b in range(B):
+            T = int(prefix_lens[b])
+            if T <= 0:
+                continue
+            npg = -(-T // self.page)
+            ids = tables[b, :npg]
+            k = self.pool_k[layer, ids].reshape(-1, KV, hd)[:T]
+            v = self.pool_v[layer, ids].reshape(-1, KV, hd)[:T]
+            with self._acct_lock:
+                # DRAM bytes at the POOL's dtype (f16 on 16-bit archs),
+                # before the f32 compute cast — same convention as the
+                # decode path's bytes_read
+                self.prefix_bytes_read += k.nbytes + v.nbytes
+            k = k.astype(np.float32)
+            v = v.astype(np.float32)
+            qg = q[b].astype(np.float32).reshape(S, KV, qpk, hd)
+            s = np.einsum("skqd,tkd->skqt", qg, k, optimize=True) * scale
+            mb = np.max(s, axis=-1)  # [S, KV, qpk]
+            e = np.exp(s - mb[..., None])
+            lb = np.sum(e, axis=-1)
+            ab = np.einsum("skqt,tkd->skqd", e, v, optimize=True)
+            acc[b] = ab.reshape(S, H, hd)
+            l[b] = lb.reshape(S, H)
+            m[b] = mb.reshape(S, H)
+        with self._acct_lock:
+            self.prefix_busy_time += time.perf_counter() - t0
+        return acc, l, m
 
     # -- standalone oracle-checkable entry (tests) ----------------------------
     def attend(self, layer: int, q: np.ndarray, tables: np.ndarray,

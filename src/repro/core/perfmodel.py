@@ -127,6 +127,19 @@ class PerfModel:
             n_tokens * self.kv_bytes_per_token_layer / self.hw.pcie_bw
         )
 
+    def t_host_prefix(self, n_tokens: int) -> float:
+        """Host-side DRAM gather of `n_tokens` of one layer's cached prefix
+        KV (zero-copy host serving: a cpu-placed prefill whose prefix is
+        host-resident reads it in place at host memory bandwidth instead of
+        promoting it over PCIe — this term replaces the `t_swap` the promote
+        path would pay).  Shares the host-bandwidth resource with the CPU
+        attention stages, so the scheduler adds it to that side of the
+        no-bubble max."""
+        if n_tokens <= 0:
+            return 0.0
+        bytes_ = n_tokens * self.kv_bytes_per_token_layer
+        return bytes_ / (self.hw.host_mem_bw * self.hw.host_bw_eff)
+
     def t_transfer_qo(self, n_rows: int) -> float:
         """Q down + attention-output up for offloaded rows (TrQKV/TrO)."""
         if n_rows <= 0:

@@ -30,6 +30,10 @@ class Request:
     # NeoEngine.submit as a scheduler estimate, finalized at prefill
     # dispatch).  0 when the cache is disabled or misses.
     cached_len: int = 0
+    # Residency of the longest cached prefix at submit time ("cpu" | "gpu" |
+    # None on a miss) — "cpu" steers the scheduler toward host placement so
+    # the prefix is served in place from DRAM (zero-copy host serving).
+    prefix_loc: Optional[str] = None
     # modality-frontend extras (precomputed patch/frame embeddings)
     extras: Optional[Dict[str, Any]] = None
     # consecutive iterations the scheduler skipped this (host) request —

@@ -70,6 +70,10 @@ class StageEstimates:
     t_ca0: float = 0.0
     t_ca1: float = 0.0
     t_swap: float = 0.0
+    # host DRAM gather of host-resident cached prefixes consumed in place by
+    # cpu-placed prefills (zero-copy host serving; replaces the t_swap a
+    # promotion would pay and shares the host-bandwidth resource with t_ca*)
+    t_host_prefix: float = 0.0
 
 
 @dataclass
@@ -405,13 +409,32 @@ class NeoScheduler:
             plan.decode_gpu.append(r)
 
         # ---- step 3: prefill requests -> batch-0 (Maximizing GPU) ---------
+        # Zero-copy host serving: a request whose longest cached prefix is
+        # HOST-resident is placed on the cpu queue first, so acquire() pins
+        # the prefix in place (no promotion PCIe) and host attention serves
+        # it straight from DRAM.  The preference is STRUCTURAL (residency of
+        # the submit-time match), not model-gated — at smoke scale a
+        # perf-model on/off decision would never fire; the model only prices
+        # the resulting plan (t_host_prefix vs the promote-path t_swap).
+        host_serve = cfg.prefix_host_serving
         budget = cfg.max_batch_tokens - plan.batch0_tokens
         while self.waitq and len(plan.prefill) + len(plan.decode_rows) < cfg.max_requests:
             nxt = self.waitq[0]
             if nxt.suffix_len > budget:
                 break
             pages = nxt.new_prefill_pages(page)  # cached full pages are shared
-            if pools.device_take(pages):
+            # one-shot preference: a request the step-5 balancer bounced back
+            # (skipped > 0) falls through to the historical device-first
+            # order — otherwise a hot CPU queue could place-then-drop the
+            # same host-preferred prefill forever, head-of-line-blocking the
+            # FIFO while HBM sits free
+            prefer_host = (host_serve and nxt.cached_len > 0
+                           and nxt.prefix_loc == "cpu" and nxt.skipped == 0)
+            if prefer_host and pools.host_take(pages):
+                req = self.waitq.popleft()
+                plan.prefill.append(req)
+                plan.prefill_to_host.append(req)
+            elif pools.device_take(pages):
                 plan.prefill.append(self.waitq.popleft())
             elif pools.host_take(pages):
                 req = self.waitq.popleft()
@@ -497,6 +520,7 @@ class NeoScheduler:
             if perf.t_cpu_attn(kv1) <= without:
                 plan.prefill.remove(req)
                 plan.prefill_to_host.remove(req)
+                req.skipped += 1  # disarms the host-placement preference
                 self.waitq.appendleft(req)
                 pools.host_free += req.new_prefill_pages(page)
                 cpu_demand -= perf.t_cpu_attn(req.prompt_len)
@@ -609,6 +633,16 @@ class NeoScheduler:
     # -- estimation -------------------------------------------------------
     def _estimate(self, plan: BatchPlan) -> None:
         perf = self.perf
+        # Prefix-hit pricing (residency from the submit-time match estimate):
+        # a cpu-placed prefill whose prefix is host-resident gathers it in
+        # place at host DRAM bandwidth (t_host_prefix); a gpu-placed prefill
+        # whose prefix is host-resident must PROMOTE it over PCIe first, so
+        # those tokens are priced into t_swap.
+        to_host = set(id(r) for r in plan.prefill_to_host)
+        host_gather = sum(r.cached_len for r in plan.prefill_to_host
+                          if r.prefix_loc == "cpu")
+        promote_tokens = sum(r.cached_len for r in plan.prefill
+                             if id(r) not in to_host and r.prefix_loc == "cpu")
         st = StageEstimates(
             t_l0=self._t_l0(plan),
             t_l1=perf.t_linear(plan.batch1_tokens),
@@ -622,12 +656,15 @@ class NeoScheduler:
                 # host-destined prefills only push the freshly computed
                 # suffix KV over PCIe; cached prefix pages are shared in place
                 + sum(r.suffix_len for r in plan.prefill_to_host)
+                + promote_tokens
             ),
+            t_host_prefix=perf.t_host_prefix(host_gather),
         )
         plan.stages = st
         L = self.cfg.num_layers
         if plan.mode == "serial":  # strawman #1: no overlap
-            plan.est_iter_time = L * (st.t_l0 + st.t_l1 + st.t_ga0 + st.t_ca0 + st.t_ca1 + st.t_swap)
+            plan.est_iter_time = L * (st.t_l0 + st.t_l1 + st.t_ga0 + st.t_ca0
+                                      + st.t_ca1 + st.t_swap + st.t_host_prefix)
         elif plan.mode == "gpu_only" and not plan.decode_cpu1:
             plan.est_iter_time = perf.gpu_only_time(
                 batch_tokens=plan.batch0_tokens,
@@ -635,8 +672,11 @@ class NeoScheduler:
                 prefill_sq_sum=self._prefill_sq(plan),
             )
         else:
+            # t_host_prefix shares the host-DRAM-bandwidth resource with the
+            # batch-0 CPU attention, so it lands on that side of the max
             plan.est_iter_time = L * (
-                max(st.t_l0, st.t_ca1) + max(st.t_l1 + st.t_ga0, st.t_ca0, st.t_swap)
+                max(st.t_l0, st.t_ca1)
+                + max(st.t_l1 + st.t_ga0, st.t_ca0 + st.t_host_prefix, st.t_swap)
             )
         plan.est_tokens = len(plan.decode_rows) + len(plan.prefill)
 
@@ -670,6 +710,7 @@ class NeoScheduler:
                 self.gpu_runq.append(r)
         for r in plan.prefill:
             r.state = RequestState.RUNNING
+            r.skipped = 0  # step-5 bounce marks don't leak into decode aging
             if r in plan.prefill_to_host:
                 r.location = "cpu"
                 self.cpu_runq.append(r)

@@ -91,6 +91,9 @@ def run_trace(engine: NeoEngine, trace, *, vocab: int, seed: int = 0,
         metrics.prefix_demoted_pages = ps.demoted_pages
         metrics.prefix_evicted_pages = ps.evicted_pages
         metrics.prefix_cow_copies = ps.cow_copies
+        metrics.inplace_host_hits = ps.inplace_host_hits
+        metrics.host_served_hit_tokens = ps.host_served_hit_tokens
+        metrics.host_hit_pcie_bytes = ps.host_hit_pcie_bytes
     return metrics
 
 
@@ -120,6 +123,11 @@ def main(argv=None) -> int:
     ap.add_argument("--require-hits", action="store_true",
                     help="exit nonzero if the prefix-cache hit rate is 0 "
                          "(CI smoke gate for shared-prefix traces)")
+    ap.add_argument("--host-serving", action="store_true",
+                    help="zero-copy host-serving gate: exit nonzero unless "
+                         ">= 1 host-resident prefix was pinned in place "
+                         "(inplace_host_hits > 0) and host-hit PCIe bytes "
+                         "stay within a small epsilon")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -156,6 +164,31 @@ def main(argv=None) -> int:
     if args.require_hits and m.prefix_hit_rate <= 0.0:
         print("[serve] FAIL: prefix-cache hit rate is 0 on a shared-prefix trace")
         return 1
+    if args.host_serving:
+        # epsilon: two pages of slack plus 10% of the host-served volume —
+        # occasional BY-DESIGN promotions are tolerated (a host preference
+        # bounced once by the step-5 balancer falls back to gpu placement
+        # and legitimately promotes its prefix; COW pages may cross for a
+        # gpu-pinned sibling), wholesale promotion of host-resident
+        # prefixes is not
+        page_bytes = page_tokens = 0
+        if engine.prefix_cache is not None:
+            page_bytes = engine.prefix_cache.page_nbytes()
+            page_tokens = engine.prefix_cache.page
+        served_pages = m.host_served_hit_tokens / max(page_tokens, 1)
+        eps = int(page_bytes * (2 + 0.1 * served_pages))
+        if m.inplace_host_hits <= 0:
+            print("[serve] FAIL: no in-place host-served prefix hits "
+                  "(inplace_host_hits == 0) under --host-serving")
+            return 1
+        if m.host_hit_pcie_bytes > eps:
+            print(f"[serve] FAIL: host-resident prefix hits crossed PCIe "
+                  f"({m.host_hit_pcie_bytes} B > eps {eps} B)")
+            return 1
+        print(f"[serve] host-serving OK: inplace_host_hits="
+              f"{m.inplace_host_hits} host_served_hit_tokens="
+              f"{m.host_served_hit_tokens} host_hit_pcie_bytes="
+              f"{m.host_hit_pcie_bytes}")
     return 0
 
 

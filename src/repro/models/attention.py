@@ -185,6 +185,44 @@ def prefix_attention(
     return o
 
 
+def suffix_attention_merge(
+    q: jnp.ndarray,  # [B, S, H, hd] — suffix queries
+    k_new: jnp.ndarray,  # [B, S, KV, hd] — the suffix's own KV
+    v_new: jnp.ndarray,
+    pre_acc: jnp.ndarray,  # [B, S, H, hd] — prefix flash partials (host)
+    pre_l: jnp.ndarray,  # [B, S, H]
+    pre_m: jnp.ndarray,  # [B, S, H]; <= -1e30 marks "no prefix" rows
+) -> jnp.ndarray:
+    """Partial prefill where the PREFIX attention was computed elsewhere.
+
+    The zero-copy host-serving path of :func:`prefix_attention`: instead of
+    gathering the cached prefix KV into device arrays, the host computes
+    flash partials ``(acc, l, m)`` over its in-place prefix pages and only
+    those cross back; this function computes the causal suffix
+    self-attention on device and log-sum-exp-combines the two — numerically
+    the joint softmax over [prefix, causal suffix].  Returns [B, S, H, hd]
+    float32.
+    """
+    B, S, H, hd = q.shape
+    q_per_kv = H // k_new.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    kn = _repeat_kv(k_new, q_per_kv)
+    vn = _repeat_kv(v_new, q_per_kv)
+    s_new = jnp.einsum("bqhd,bkhd->bqhk", q, kn).astype(jnp.float32) * scale
+    causal = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]  # [S, S]
+    s_new = jnp.where(causal[None, :, None, :], s_new, NEG_INF)
+    m_new = jnp.max(s_new, axis=-1)  # [B, S, H]; diagonal keeps it finite
+    e = jnp.exp(s_new - m_new[..., None])
+    l_new = jnp.sum(e, axis=-1)
+    acc_new = jnp.einsum("bqhk,bkhd->bqhd", e.astype(vn.dtype), vn).astype(jnp.float32)
+    m_tot = jnp.maximum(pre_m, m_new)
+    c_pre = jnp.exp(pre_m - m_tot)  # 0 where there is no prefix
+    c_new = jnp.exp(m_new - m_tot)
+    num = pre_acc * c_pre[..., None] + acc_new * c_new[..., None]
+    den = pre_l * c_pre + l_new * c_new
+    return num / jnp.maximum(den, 1e-30)[..., None]
+
+
 # ---------------------------------------------------------------------------
 # Split-K decode attention, KV pages sharded over the "model" axis
 # ---------------------------------------------------------------------------

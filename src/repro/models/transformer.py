@@ -578,6 +578,89 @@ class DenseLM:
             v_all = jnp.pad(v_all, pad)
         return logits, k_all, v_all
 
+    # -- serve: partial prefill over an IN-PLACE host-resident prefix ----------
+    def prefill_with_host_prefix(self, params: Params, tokens: jnp.ndarray,
+                                 prefix_lens: jnp.ndarray, *, prefix_cb,
+                                 capacity: Optional[int] = None,
+                                 true_lens: Optional[jnp.ndarray] = None):
+        """Suffix prefill whose cached prefix KV is served by the HOST tier
+        in place (zero-copy host serving; :func:`prefill_with_prefix`'s
+        sibling for ``cpu``-placed rows).
+
+        Instead of gathering prefix KV into device arrays, every layer hands
+        its suffix queries to ``prefix_cb(layer, q) -> (acc, l, m)`` — an
+        ordered host callback that computes flash partials over the
+        host-pool prefix pages at their absolute positions — and merges them
+        with the device-computed causal suffix attention
+        (:func:`attn_lib.suffix_attention_merge`); the prefix itself never
+        crosses PCIe.  Returns (next-token logits [B, V], suffix k/v
+        [L, B, capacity, KV, hd]).
+        """
+        from jax.experimental import io_callback
+
+        cfg = self.cfg
+        B, S = tokens.shape
+        capacity = capacity or S
+        positions = prefix_lens[:, None] + jnp.arange(S)[None, :]
+        x = self._embed_tokens(params, tokens)
+        H, hd = cfg.num_heads, cfg.head_dim
+        partial_shapes = (
+            jax.ShapeDtypeStruct((B, S, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, S, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, S, H), jnp.float32),
+        )
+
+        def layer(p: Params, kind: str, lidx, x):
+            h = rms_norm(x, p["ln1"], cfg.rms_eps)
+            q, k, v = project_qkv(p["attn"], cfg, h, positions)
+            acc, l, m = io_callback(prefix_cb, partial_shapes, lidx, q,
+                                    ordered=True)
+            o = attn_lib.suffix_attention_merge(q, k, v, acc, l, m)
+            x = x + jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype),
+                               p["attn"]["wo"])
+            h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+            m2, _ = self._mlp_apply(p, kind, h2)
+            return x + m2, (k, v)
+
+        kvs: List[Tuple[jnp.ndarray, jnp.ndarray]] = []
+        P_ = len(self.prefix_kinds)
+        r = len(self.repeat_kinds)
+        for i, kind in enumerate(self.prefix_kinds):
+            x, kv = layer(params[f"prefix{i}"], kind, jnp.int32(i), x)
+            kvs.append(kv)
+
+        def group_body(carry, gp):
+            x, base = carry
+            ks, vs = [], []
+            for j, kind in enumerate(self.repeat_kinds):
+                x, (k, v) = layer(gp[f"sub{j}"], kind, base + j, x)
+                ks.append(k)
+                vs.append(v)
+            return (x, base + r), (jnp.stack(ks), jnp.stack(vs))
+
+        (x, _), (g_k, g_v) = jax.lax.scan(
+            group_body, (x, jnp.int32(P_)), params["blocks"])
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        if true_lens is None:
+            last_h = x[:, -1]
+        else:
+            last_h = x[jnp.arange(B), jnp.clip(true_lens - 1, 0, S - 1)]
+        logits = logits_last(last_h, self._unembed(params))
+
+        pre_k = (
+            jnp.stack([kv[0] for kv in kvs])
+            if kvs
+            else jnp.zeros((0, B, S, cfg.num_kv_heads, cfg.head_dim), cfg.activation_dtype)
+        )
+        pre_v = jnp.stack([kv[1] for kv in kvs]) if kvs else pre_k
+        k_all = jnp.concatenate([pre_k, g_k.reshape((-1,) + g_k.shape[2:])], axis=0)
+        v_all = jnp.concatenate([pre_v, g_v.reshape((-1,) + g_v.shape[2:])], axis=0)
+        if capacity > S:
+            pad = [(0, 0), (0, 0), (0, capacity - S), (0, 0), (0, 0)]
+            k_all = jnp.pad(k_all, pad)
+            v_all = jnp.pad(v_all, pad)
+        return logits, k_all, v_all
+
     # -- serve: decode (int8 KV variant; §Perf "int8-kv") -----------------------
     def _decode_int8(self, params: Params, tokens: jnp.ndarray, cache, *, window: int = 0):
         cfg = self.cfg

@@ -75,6 +75,12 @@ class ServeMetrics:
     prefix_demoted_pages: int = 0
     prefix_evicted_pages: int = 0
     prefix_cow_copies: int = 0
+    # zero-copy host-tier serving: cpu-placed rows whose host-resident
+    # prefix was pinned in place (no promotion PCIe), the hit tokens served
+    # that way, and the host-resident prefix bytes that DID cross PCIe
+    inplace_host_hits: int = 0
+    host_served_hit_tokens: int = 0
+    host_hit_pcie_bytes: int = 0
 
     # ------------------------------------------------------------------
     @property
@@ -160,4 +166,8 @@ class ServeMetrics:
             "prefix_demoted_pages": self.prefix_demoted_pages,
             "prefix_evicted_pages": self.prefix_evicted_pages,
             "prefix_cow_copies": self.prefix_cow_copies,
+            # zero-copy host-tier serving
+            "inplace_host_hits": self.inplace_host_hits,
+            "host_served_hit_tokens": self.host_served_hit_tokens,
+            "host_hit_pcie_MB": round(self.host_hit_pcie_bytes / 1e6, 3),
         }

@@ -90,3 +90,44 @@ def test_host_attention_window(rng):
     p /= p.sum(-1, keepdims=True)
     o = np.einsum("kqt,tkd->kqd", p, v_lin).reshape(H, hd)
     np.testing.assert_allclose(out[0], o, rtol=1e-4, atol=1e-4)
+
+
+def test_prefix_partials_merge_matches_prefix_attention(rng):
+    """Zero-copy host serving oracle: host-computed prefix flash partials
+    merged with the device's causal-suffix attention must equal the joint
+    softmax over [prefix, causal suffix] (attn_lib.prefix_attention)."""
+    from repro.models import attention as attn_lib
+
+    cfg = get_smoke_config("qwen3-0.6b")
+    L, P, page = 2, 16, cfg.kv_block_size
+    KV, hd, H = cfg.num_kv_heads, cfg.head_dim, cfg.num_heads
+    pk, pv = make_pool(rng, L, P, page, KV, hd)
+    ha = HostAttention(cfg, pk, pv)
+    B, S = 3, 7
+    tables = rng.integers(0, P, size=(B, 3)).astype(np.int32)
+    # row 2 has NO prefix: the merge must reduce to pure causal attention
+    prefix_lens = np.array([3 * page - 5, page + 2, 0], np.int32)
+    q = rng.normal(size=(B, S, H, hd)).astype(np.float32)
+    k_new = rng.normal(size=(B, S, KV, hd)).astype(np.float32)
+    v_new = rng.normal(size=(B, S, KV, hd)).astype(np.float32)
+    for layer in range(L):
+        acc, l, m = ha.prefix_partials(layer, q, tables, prefix_lens)
+        merged = attn_lib.suffix_attention_merge(
+            jnp.asarray(q), jnp.asarray(k_new), jnp.asarray(v_new),
+            jnp.asarray(acc), jnp.asarray(l), jnp.asarray(m))
+        # oracle: gather the prefix KV densely and run the joint softmax
+        T = 3 * page
+        pre_k = np.zeros((B, T, KV, hd), np.float32)
+        pre_v = np.zeros((B, T, KV, hd), np.float32)
+        for b in range(B):
+            n = int(prefix_lens[b])
+            if n:
+                pre_k[b, :n] = pk[layer, tables[b]].reshape(-1, KV, hd)[:n]
+                pre_v[b, :n] = pv[layer, tables[b]].reshape(-1, KV, hd)[:n]
+        oracle = attn_lib.prefix_attention(
+            jnp.asarray(q), jnp.asarray(pre_k), jnp.asarray(pre_v),
+            jnp.asarray(prefix_lens), jnp.asarray(k_new), jnp.asarray(v_new))
+        np.testing.assert_allclose(np.asarray(merged), np.asarray(oracle),
+                                   rtol=1e-4, atol=1e-4)
+    assert ha.prefix_bytes_read > 0  # in-place gather was accounted
+    assert ha.busy_time == 0.0  # and kept OUT of the decode-attn EWMA signal

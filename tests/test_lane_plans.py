@@ -323,3 +323,55 @@ if HAS_HYPOTHESIS:
         loads = s._lane_loads(kv, b)
         assert all(n_rows >= 1 for n_rows, _ in loads)
         assert sum(n for n, _ in loads) == len(kv)
+
+
+# ---------------------------------------------------------------------------
+# satellite: the K-histogram records the EXECUTED lane count
+# ---------------------------------------------------------------------------
+
+
+def test_lane_counts_record_executed_k_on_plan_launch_preemption(dense_setup):
+    """A plan annotated with K=2 whose second lane is preempted between plan
+    and launch falls back to a serialized single-lane dispatch — the
+    K-histogram (published by bench_trend) must record the EXECUTED K (1),
+    not the planned K (2), and the step must not count as micro-batched."""
+    cfg, params = dense_setup
+    eng = _make_engine(cfg, params, policy="fastdecode", pipeline=True,
+                       device_pages=64, max_host_lanes=2)
+    rng = np.random.default_rng(11)
+    for _ in range(4):
+        eng.submit(list(map(int, rng.integers(1, 500, size=24))), 8)
+    for _ in range(3):  # prefill + settle into batch-1-only decode steps
+        eng.step(now=eng.clock + 1e-3)
+    assert eng.stats.lane_counts.get(2, 0) > 0  # K=2 steps actually ran
+
+    orig_plan = eng.scheduler.plan
+    injected = {}
+
+    def preempting_plan(pools):
+        # preemption lands AFTER lane annotation, BEFORE launch — the
+        # mid-dispatch fallback path
+        plan = orig_plan(pools)
+        lanes = plan.host_lanes()
+        if plan.lane_splits and len(lanes) >= 2 and not injected:
+            plan.preempt.extend(lanes[1])
+            injected["planned_k"] = plan.num_host_lanes
+        return plan
+
+    eng.scheduler.plan = preempting_plan
+    before = dict(eng.stats.lane_counts)
+    mb_before = eng.stats.microbatched_steps
+    serial_before = eng.stats.serial_b1_steps
+    eng.step(now=eng.clock + 1e-3)
+    assert injected.get("planned_k") == 2, "scenario must plan a K=2 split"
+    delta = {k: eng.stats.lane_counts.get(k, 0) - before.get(k, 0)
+             for k in set(eng.stats.lane_counts) | set(before)}
+    assert delta.get(2, 0) == 0, f"planned K recorded, not executed: {delta}"
+    assert delta.get(1, 0) == 1, f"executed K=1 not recorded: {delta}"
+    assert eng.stats.microbatched_steps == mb_before
+    assert eng.stats.serial_b1_steps == serial_before + 1
+    eng.scheduler.plan = orig_plan
+    eng.run_until_done()  # preempted rows replay and finish
+    assert all(r.state.name in ("FINISHED", "ABORTED")
+               for r in eng.requests.values())
+    eng.close()

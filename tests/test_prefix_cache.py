@@ -440,3 +440,383 @@ def test_cache_off_default_unchanged(cfg):
     assert EngineConfig().prefix_cache is False
     assert eng.prefix_cache is None
     eng.close()
+
+
+# ---------------------------------------------------------------------------
+# token-granular radix: partial tails, sub-page matches, tail upgrades
+# ---------------------------------------------------------------------------
+
+
+def test_token_granular_partial_tail_and_subpage_match(cfg):
+    """A non-aligned insert keeps its partial tail (ceil pages) and matches
+    at token granularity: the tail serves via COW, and divergence inside the
+    FIRST page of a node still yields a sub-page hit."""
+    cache, pool, tr = make_cache(cfg)
+    page = cache.page
+    toks = list(range(2 * page + page // 2))  # 2.5 pages
+    pages = pool.device.alloc(3)
+    cache.insert(toks, pages, "gpu")
+    pool.device.free(pages)
+    assert cache.num_nodes() == 1
+    assert cache.total_pages("gpu") == 3  # ceil: partial tail adopted
+
+    # the tail matches (beyond the page-aligned 2 pages)
+    assert cache.lookup(toks + [999]) == 2 * page + page // 2
+    # sub-page divergence inside the node's first page
+    assert cache.lookup(toks[:5] + [7777] * page) == 5
+    # acquire of the tail hit: 2 shared full pages + a COW of the tail page
+    shared, cow, clen = cache.acquire(toks + [999], "gpu")
+    assert clen == 2 * page + page // 2
+    assert len(shared) == 2 and cow is not None
+    pool.device.free(shared)
+    pool.device.free([cow])
+    tr.close()
+
+
+def test_page_aligned_mode_drops_tail(cfg):
+    """token_granular=False restores the PR-2 radix: full pages only, exact
+    first-page keys, no sub-page matches."""
+    from repro.core.kv_cache import DualPool
+    from repro.core.prefix_cache import PrefixCache
+    from repro.core.transfer import TransferEngine
+
+    pool = DualPool(cfg, 32, 32)
+    tr = TransferEngine(pool)
+    cache = PrefixCache(pool, tr, token_granular=False)
+    page = cache.page
+    toks = list(range(2 * page + page // 2))
+    pages = pool.device.alloc(3)
+    cache.insert(toks, pages, "gpu")
+    pool.device.free(pages[:2])  # tree adopted only the 2 full pages
+    pool.device.free(pages[2:])  # the tail page stays request-owned -> free
+    assert cache.total_pages("gpu") == 2
+    assert cache.lookup(toks + [999]) == 2 * page  # aligned only
+    assert cache.lookup(toks[:5] + [7777] * page) == 0  # no sub-page match
+    tr.close()
+
+
+def test_tail_upgrade_extends_node(cfg):
+    """Inserting a LONGER copy of an existing partial tail upgrades the tree
+    in place: the tree's reference moves to the fuller page, old readers
+    keep their pin, and subsequent matches see the extended prefix."""
+    cache, pool, tr = make_cache(cfg)
+    page = cache.page
+    toks = list(range(2 * page + 4))  # 2 pages + 4-token tail
+    pages = pool.device.alloc(3)
+    cache.insert(toks, pages, "gpu")
+    pool.device.free(pages)
+    [node] = list(cache._iter_nodes())
+    old_tail = node.pages[-1]
+
+    # a reader pins the tail's COW source mid-upgrade
+    shared, cow, clen = cache.acquire(toks + [1], "gpu")
+    assert clen == 2 * page + 4
+
+    # a finished request re-inserts the same prefix, extended to 4 pages
+    longer = list(range(4 * page))
+    pg2 = pool.device.alloc(4)
+    cache.insert(longer, pg2, "gpu")
+    pool.device.free(pg2)
+    # the tail page was swapped for the fuller copy and the node extended
+    assert cache.lookup(longer + [1]) == 4 * page
+    [n0] = [n for n in cache._iter_nodes() if n.parent is cache.root]
+    assert old_tail not in n0.pages
+    # old readers' pins are unaffected (their pages still refcounted)
+    pool.device.free(shared)
+    if cow is not None:
+        pool.device.free([cow])
+    tr.close()
+
+
+# ---------------------------------------------------------------------------
+# zero-copy host-tier serving
+# ---------------------------------------------------------------------------
+
+
+def test_inplace_host_acquire_no_pcie(cfg):
+    """acquire(target='cpu') over a host-resident prefix pins the pages IN
+    PLACE: no promotion, no private copy, no PCIe bytes — and the pinned
+    node can be neither promoted nor evicted until released."""
+    cache, pool, tr = make_cache(cfg)
+    page = cache.page
+    toks = list(range(2 * page))
+    seed_node(cache, pool, toks, location="cpu", fill=5.0)
+    [node] = list(cache._iter_nodes())
+    swap_before = tr.stats.total_bytes
+
+    shared, cow, clen = cache.acquire(toks + [1], "cpu")
+    assert clen == 2 * page
+    assert shared == node.pages  # the tree's own pages, in place
+    assert cache.stats.inplace_host_hits == 1
+    assert cache.stats.host_served_hit_tokens == 2 * page
+    assert cache.stats.host_hit_pcie_bytes == 0
+    assert cache.stats.promoted_pages == 0
+    assert tr.stats.total_bytes == swap_before  # nothing crossed PCIe
+
+    # while pinned: eviction pressure cannot move or drop the node ...
+    cache.make_room("cpu", pool.host.num_pages)
+    assert node.pages == shared and node.location == "cpu"
+    # ... and a gpu-destined reader gets a private copy, not a promotion
+    dev_shared, _, _ = cache.acquire(toks + [2], "gpu")
+    assert node.location == "cpu"
+    assert cache.stats.host_hit_pcie_bytes > 0  # the copy DID cross
+    pool.device.free(dev_shared)
+    pool.host.free(shared)
+    tr.close()
+
+
+def test_lookup_ex_reports_residency(cfg):
+    cache, pool, tr = make_cache(cfg)
+    page = cache.page
+    a = list(range(2 * page))
+    b = [90_000 + i for i in range(2 * page)]
+    seed_node(cache, pool, a, location="cpu")
+    seed_node(cache, pool, b, location="gpu")
+    assert cache.lookup_ex(a + [1]) == (2 * page, "cpu")
+    assert cache.lookup_ex(b + [1]) == (2 * page, "gpu")
+    assert cache.lookup_ex([1, 2, 3]) == (0, None)
+    tr.close()
+
+
+# ---------------------------------------------------------------------------
+# deferral unwinding: retract_acquire counts copies once (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_retract_acquire_restores_copy_counters(cfg):
+    """A deferred acquire whose prefix was served by a PRIVATE cross-pool
+    copy must not double-count promoted_pages across the defer/retry pair
+    (the copy is freed on defer and re-made on retry); relocations persist
+    and stay counted once."""
+    cache, pool, tr = make_cache(cfg)
+    page = cache.page
+    toks = list(range(2 * page))
+    seed_node(cache, pool, toks, location="cpu")
+    [node] = list(cache._iter_nodes())
+    pool.host.incref(node.pages)  # a sibling reader pins the host node
+
+    # acquire for the device: pinned source -> private copy, counted
+    shared, cow, clen = cache.acquire(toks + [1], "gpu")
+    assert clen == 2 * page and cache.stats.promoted_pages == 2
+    assert cache.stats.host_hit_pcie_bytes > 0
+    # the engine defers: frees the pages and unwinds the acquire
+    pool.device.free(shared)
+    cache.retract_acquire()
+    assert cache.stats.promoted_pages == 0
+    assert cache.stats.hits == 0 and cache.stats.host_hit_pcie_bytes == 0
+    # retry re-runs acquire: counted ONCE overall
+    shared, cow, clen = cache.acquire(toks + [1], "gpu")
+    assert clen == 2 * page and cache.stats.promoted_pages == 2
+    assert cache.stats.hits == 1
+    pool.device.free(shared)
+    pool.host.free(node.pages)
+    tr.close()
+
+
+def test_defer_after_promoting_acquire_counts_once(cfg):
+    """Engine-level regression (satellite): a prefill deferred AFTER its
+    acquire promoted/copied a host-resident prefix must leave the stats
+    consistent — the promotion is counted once across defer + retry, the
+    retracted hit is re-counted exactly once on the retry, and hit_rate
+    stays in [0, 1]."""
+    from repro.core.engine import NeoEngine
+    from repro.core.request import RequestState
+
+    page = cfg.kv_block_size
+    max_bt = 3 * page
+    ecfg = EngineConfig(device_pool_pages=64, host_pool_pages=64,
+                        max_batch_tokens=max_bt, policy="neo",
+                        prefix_cache=True, prefix_host_serving=False)
+    eng = NeoEngine(cfg, ecfg)
+    rng = np.random.default_rng(7)
+    shared_toks = list(map(int, rng.integers(1, 500, size=2 * page)))
+    eng.submit(shared_toks, 4)
+    eng.run_until_done()
+    cache = eng.prefix_cache
+
+    # push the prefix to the host tier, shrink it to ONE page, and pin it
+    # (a sibling reader) so the gpu-destined acquire must COPY, not relocate
+    cache.make_room("gpu", eng.pool.device.num_pages)
+    assert cache.total_pages("cpu") > 0 and cache.total_pages("gpu") == 0
+    pa = shared_toks + list(map(int, rng.integers(1, 500, size=page - 4)))
+    pb = list(map(int, rng.integers(1, 500, size=2 * page)))
+    rb = eng.submit(pb, 4)  # admitted first: consumes the token budget
+    ra = eng.submit(pa, 4)
+    assert eng.requests[ra].cached_len >= 2 * page - 1
+
+    # between submit and dispatch the tree shrinks to a single pinned page:
+    # the realized suffix busts max_batch_tokens -> defer AFTER the copy
+    [node] = [n for n in cache._iter_nodes() if n.parent is cache.root]
+    head = cache._split(node, 1)
+    tail = next(iter(head.children.values()))
+    cache._drop(tail)
+    eng.pool.host.incref(head.pages)  # sibling pin -> private copy path
+
+    out = eng.run_until_done(200)
+    assert eng.requests[ra].state == RequestState.FINISHED
+    assert eng.requests[rb].state == RequestState.FINISHED
+    st = cache.stats
+    # the private copy crossed once on the consumed retry; the deferred
+    # attempt's copy was retracted with its freed pages
+    assert st.promoted_pages == 1, st
+    assert st.hits == 1 and st.hit_tokens == page
+    assert st.hits <= st.lookups
+    assert 0.0 <= st.hit_rate <= 1.0
+    eng.pool.host.free(head.pages)
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# stats monotone-consistency under random defer/retry (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_hit_rate_monotone_under_random_defer_retry(cfg):
+    """Property: under random acquire / defer(retract) / release sequences —
+    including stray over-retractions — hit_rate stays in [0, 1] and NaN-free
+    and the counters stay monotone-consistent (hits <= lookups, hit_tokens
+    <= prompt_tokens)."""
+    rng = np.random.default_rng(99)
+    cache, pool, tr = make_cache(cfg, device_pages=48, host_pages=48)
+    page = cache.page
+    bases = [list(range(k, k + 3 * page + 5)) for k in (0, 10_000)]
+    for b in bases:
+        n = -(-len(b) // page)
+        pages = pool.device.alloc(n)
+        cache.insert(b, pages, "gpu")
+        pool.device.free(pages)
+    held = []
+
+    def check():
+        st = cache.stats
+        assert 0.0 <= st.hit_rate <= 1.0
+        assert not np.isnan(st.hit_rate)
+        assert st.hits <= st.lookups
+        assert st.hit_tokens <= st.prompt_tokens
+
+    for step in range(300):
+        op = int(rng.integers(0, 5))
+        b = bases[int(rng.integers(0, len(bases)))]
+        cut = int(rng.integers(1, len(b) + 1))
+        tgt = "gpu" if rng.random() < 0.7 else "cpu"
+        if op == 0:  # acquire and keep (a consumed hit)
+            shared, cow, clen = cache.acquire(b[:cut] + [7], tgt)
+            held.append((tgt, shared, cow))
+        elif op == 1:  # acquire then DEFER: engine unwind order
+            shared, cow, clen = cache.acquire(b[:cut] + [7], tgt)
+            p = pool.pool(tgt)
+            if shared:
+                p.free(shared)
+            if cow is not None:
+                p.free([cow])
+            cache.retract_acquire()
+            if rng.random() < 0.8:  # full deferral also drops the lookup
+                cache.retract_lookup(cut + 1)
+        elif op == 2 and held:  # a reader releases its pins
+            tgt2, shared, cow = held.pop(int(rng.integers(0, len(held))))
+            if shared:
+                pool.pool(tgt2).free(shared)
+            if cow is not None:
+                pool.pool(tgt2).free([cow])
+        elif op == 3:  # stray over-retraction must clamp, not corrupt
+            cache.retract_lookup(int(rng.integers(1, 50)))
+        else:  # eviction pressure between retries
+            cache.make_room(tgt, int(rng.integers(1, 6)))
+        check()
+    for tgt2, shared, cow in held:
+        if shared:
+            pool.pool(tgt2).free(shared)
+        if cow is not None:
+            pool.pool(tgt2).free([cow])
+    check()
+    tr.close()
+
+
+# ---------------------------------------------------------------------------
+# bitwise identity: token-granular matches across gpu/cpu targets
+# ---------------------------------------------------------------------------
+
+
+def test_token_granular_bitwise_identity_property(cfg):
+    """Random prompts sharing prefixes at NON-page-aligned lengths: greedy
+    outputs with the cache on must be token-for-token identical to cache-off
+    across device-roomy (gpu-placed) and device-starved (cpu-placed,
+    host-served) pool shapes, including a preemption-heavy shape."""
+    from repro.core.engine import NeoEngine
+    from repro.core.request import RequestState
+
+    page = cfg.kv_block_size
+    rng = np.random.default_rng(3)
+    base = list(map(int, rng.integers(1, 500, size=2 * page + 5)))
+    prompts = [base + list(map(int, rng.integers(1, 500,
+                                                 size=int(rng.integers(1, 12)))))
+               for _ in range(3)]
+    prompts.append(base[: page + 3]
+                   + list(map(int, rng.integers(1, 500, size=7))))
+
+    def run_all(pc, dev, host, n_out=6, **kw):
+        ecfg = EngineConfig(device_pool_pages=dev, host_pool_pages=host,
+                            max_batch_tokens=256,
+                            prefix_cache=pc, **kw)
+        eng = NeoEngine(cfg, ecfg)
+        # the first prompt seeds the tree; the rest run concurrently so the
+        # tight shapes exercise swaps/preemption mid-stream
+        eng.submit(prompts[0], n_out)
+        out = eng.run_until_done(500)
+        for p in prompts[1:]:
+            eng.submit(p, n_out)
+        out.update(eng.run_until_done(500))
+        states = {r.rid: r.state for r in eng.requests.values()}
+        stats = eng.prefix_cache.stats if eng.prefix_cache else None
+        preempts = sum(int(s.split("preempt=")[1].split()[0])
+                       for s in eng.stats.plans)
+        eng.close()
+        return out, stats, states, preempts
+
+    shapes = {
+        "gpu-roomy": dict(dev=64, host=128, policy="neo"),
+        "host-forced": dict(dev=6, host=128, policy="neo"),
+        # full offload + tiny host pool: recompute preemption mid-stream
+        # full offload + tiny host pool + long decodes (page-boundary
+        # growth): recompute preemption mid-stream
+        "preempting": dict(dev=8, host=10, policy="fastdecode",
+                           starvation_limit=2, n_out=16),
+    }
+    for name, shape in shapes.items():
+        kw = {k: v for k, v in shape.items() if k not in ("dev", "host")}
+        cold, _, states_c, pre_c = run_all(False, shape["dev"],
+                                           shape["host"], **kw)
+        warm, st, states_w, pre_w = run_all(True, shape["dev"],
+                                            shape["host"], **kw)
+        assert cold == warm, name
+        assert all(s == RequestState.FINISHED for s in states_w.values()), name
+        assert st.hits >= 1, name
+        # the non-aligned share must actually be served beyond page alignment
+        assert st.hit_tokens > 0, name
+    # preemption must actually fire in the tight shape (mid-stream replay)
+    assert pre_w > 0 or pre_c > 0
+
+
+def test_cross_pool_partial_tail_does_not_block_adoption(cfg):
+    """Regression: a host-resident partial-tail leaf must not stop a
+    device-located finisher from contributing its suffix — the aligned head
+    stays shared, the remainder is adopted as a gpu sibling (its first
+    tokens duplicate the cross-pool tail; matching picks the longer node),
+    and later lookups see the full long prefix."""
+    cache, pool, tr = make_cache(cfg)
+    page = cache.page
+    short = list(range(page + 4))  # 1 full page + 4-token tail, on cpu
+    hp = pool.host.alloc(2)
+    cache.insert(short, hp, "cpu")
+    pool.host.free(hp)
+
+    longer = list(range(3 * page))  # same prefix, finished on gpu
+    gp = pool.device.alloc(3)
+    adopted = cache.insert(longer, gp, "gpu")
+    pool.device.free(gp)
+    assert adopted == 2  # the suffix beyond the shared aligned head
+    # the long prefix is fully servable now ...
+    assert cache.lookup(longer + [1]) == 3 * page
+    # ... and the short cpu tail still matches at token granularity
+    assert cache.lookup(short + [999]) == page + 4
+    tr.close()

@@ -295,3 +295,50 @@ def test_fastdecode_offloads_everything():
         assert not plan.decode_gpu
         saw_decode = saw_decode or bool(plan.decode_cpu1)
     assert saw_decode
+
+
+# ---------------------------------------------------------------------------
+# zero-copy host serving: placement preference must never livelock
+# ---------------------------------------------------------------------------
+
+
+def test_host_preferred_placement(cfg=None):
+    """A prefill whose longest cached prefix is host-resident is placed on
+    the CPU queue first (zero-copy host serving), even with free HBM."""
+    sched = make_scheduler()
+    req = Request(rid=0, prompt=[2] * 32, max_new_tokens=4)
+    req.cached_len = 16
+    req.prefix_loc = "cpu"
+    sched.add_request(req)
+    plan = sched.plan(PoolView(PAGE, 64, 256))
+    assert req in plan.prefill and req in plan.prefill_to_host
+
+
+def test_host_preference_bounced_by_step5_falls_back_to_device():
+    """Regression: a host-preferred prefill that step 5 (reduce prefill)
+    bounces back to the waitq must fall back to DEVICE placement on the
+    next plan — the place-then-drop cycle previously repeated forever,
+    head-of-line-blocking the FIFO while HBM sat free."""
+    sched = make_scheduler()
+    # a permanently hot CPU queue: a long-KV host row + a maxed cpu_attn
+    # scale makes cpu_demand dwarf the hideable window every iteration
+    sched.perf.scale["cpu_attn"] = PerfModel.SCALE_MAX
+    hot = Request(rid=0, prompt=[1] * 256, max_new_tokens=64)
+    hot.state = RequestState.RUNNING
+    hot.location = "cpu"
+    hot.pages = list(range(17))
+    sched.cpu_runq.append(hot)
+
+    req = Request(rid=1, prompt=[2] * 32, max_new_tokens=4)
+    req.cached_len = 16
+    req.prefix_loc = "cpu"
+    sched.add_request(req)
+
+    plan1 = sched.plan(PoolView(PAGE, 64, 256))
+    # step 3 host-placed it, step 5 dropped it back to the waitq
+    assert req not in plan1.prefill
+    assert sched.waitq and sched.waitq[0] is req
+    plan2 = sched.plan(PoolView(PAGE, 64, 256))
+    # the bounce disarmed the preference: admitted on the device
+    assert req in plan2.prefill
+    assert req not in plan2.prefill_to_host
