@@ -4,7 +4,7 @@ perf-trajectory regression vs the checked-in baseline.
 
 This is the CI ``bench-trend`` job's entry point (the summary file is
 uploaded as a build artifact, so the trajectory is inspectable per commit).
-Schema (``neo-bench-trend/v1``; documented in ``benchmarks/README.md``):
+Schema (``neo-bench-trend/v3``; documented in ``benchmarks/README.md``):
 
 * ``engine.*_tok_s``      — smoke token throughputs (RECORDED, not gated:
   they are wall-times of whatever machine ran the job);
@@ -18,7 +18,13 @@ Schema (``neo-bench-trend/v1``; documented in ``benchmarks/README.md``):
 * ``prefix_cache.host_served_hit_tokens`` / ``inplace_host_hits`` —
   zero-copy host-tier serving counters from the ``--host-serving`` section
   (GATED > 0: host-resident prefixes must be served in place, and the
-  section itself fails on any host-hit PCIe bytes).
+  section itself fails on any host-hit PCIe bytes);
+* ``serving.*`` — sustained-load A/B (closed-loop lockstep vs open-loop
+  continuous batching with plan-ahead): goodput and p99 TTFT/TPOT for both
+  loops (RECORDED — wall-clock latencies are machine-dependent), plus
+  ``planahead_hits`` (GATED > 0: speculative plans must actually be
+  adopted) and ``bitwise_identical`` (GATED: plan-ahead may never change
+  greedy outputs).
 
 ``--write-baseline`` refreshes ``benchmarks/BENCH_baseline.json`` (commit
 the result deliberately — that is the trajectory being gated).
@@ -33,7 +39,7 @@ import sys
 
 from benchmarks.common import FIG_DIR, HERE
 
-SCHEMA = "neo-bench-trend/v2"
+SCHEMA = "neo-bench-trend/v3"
 REPO_ROOT = os.path.dirname(HERE)
 BASELINE_PATH = os.path.join(HERE, "BENCH_baseline.json")
 SUMMARY_PATH = os.path.join(REPO_ROOT, "BENCH_engine.json")
@@ -53,11 +59,13 @@ def collect(n: int) -> tuple[int, dict]:
     """Run the smokes (micro-batch, mixed-lane, prefix-cache) and collate
     their figure JSONs into the trend summary.  Returns (rc, summary)."""
     from benchmarks import engine_real, prefix_cache
+    from repro.launch.serve import run_sustained
 
     rc = 0
     rc |= engine_real.main(["--microbatch-only", "--n", str(n)])
     rc |= engine_real.main(["--mixed-lane-only"])
     rc |= prefix_cache.main(["--quick", "--host-serving"])
+    sus = run_sustained(n=max(n, 12), rate=8.0, seed=0)
 
     er = _load("engine_real.json")
     pc = _load("prefix_cache.json")
@@ -86,6 +94,18 @@ def collect(n: int) -> tuple[int, dict]:
             "inplace_host_hits": pc["hs_cache_on"]["inplace_host_hits"],
             "token_granular_extra_hit_tokens":
                 pc["hs_token_granular_extra_hit_tokens"],
+        },
+        "serving": {
+            "closed_goodput_rps": sus["closed"]["goodput_rps"],
+            "open_goodput_rps": sus["open"]["goodput_rps"],
+            "closed_ttft_p99_ms": sus["closed"]["ttft_p99_ms"],
+            "open_ttft_p99_ms": sus["open"]["ttft_p99_ms"],
+            "closed_tpot_p99_ms": sus["closed"]["tpot_p99_ms"],
+            "open_tpot_p99_ms": sus["open"]["tpot_p99_ms"],
+            "planahead_hits": sus["open"]["planahead_hits"],
+            "planahead_replans": sus["open"]["planahead_replans"],
+            "planahead_hidden_s": sus["open"]["planahead_hidden_s"],
+            "bitwise_identical": sus["gates"]["bitwise_identical"],
         },
     }
     return rc, summary
@@ -121,6 +141,15 @@ def gate(summary: dict, baseline: dict) -> int:
     if s_pc.get("inplace_host_hits", 0) <= 0:
         print("[bench_trend] FAIL: no in-place host hits in the "
               "host-serving smoke")
+        fails += 1
+    s_srv = summary.get("serving", {})
+    if s_srv.get("planahead_hits", 0) <= 0:
+        print("[bench_trend] FAIL: plan-ahead never adopted a speculative "
+              "plan in the sustained-load smoke")
+        fails += 1
+    if not s_srv.get("bitwise_identical", False):
+        print("[bench_trend] FAIL: plan-ahead changed greedy outputs in the "
+              "sustained-load smoke")
         fails += 1
     if not fails:
         print(f"[bench_trend] OK: bubble {s_eng['bubble_fraction']} "

@@ -294,6 +294,19 @@ class EngineConfig:
     # pins the prefix IN PLACE (no promotion PCIe) and host attention serves
     # it from DRAM.  False keeps the PR-2 placement (device first).
     prefix_host_serving: bool = True
+    # Plan-ahead scheduling: a planner thread builds iteration N+1's lane
+    # plan against the PREDICTED post-step queue/pool view while iteration
+    # N's lanes execute, so the plan phase leaves the critical path.  The
+    # speculative plan is validated against the real state at the next step
+    # and cheaply replanned when an arrival, departure, or preemption
+    # falsified it (EngineStats.planahead_hits / planahead_replans).  Only
+    # acts with ``pipeline`` on and the paged executor; greedy outputs are
+    # bitwise identical either way (plans may differ, outputs may not).
+    planahead: bool = True
+    # Admission control for the open-loop serving front end: reject new
+    # arrivals (NeoEngine.offer returns None) while the waitqueue holds this
+    # many requests.  0 = unbounded (the closed-loop behavior).
+    max_waiting: int = 0
     # Perf-model refresh rate (EWMA) — also the straggler-mitigation knob.
     ewma_alpha: float = 0.2
     # Force a host request into batch-1 after this many consecutive skips

@@ -37,7 +37,10 @@ stopped; emitted tokens are never re-issued).
 
 from __future__ import annotations
 
+import copy
 import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -52,7 +55,7 @@ from repro.core.kv_cache import DualPool
 from repro.core.perfmodel import PerfModel
 from repro.core.prefix_cache import PrefixCache
 from repro.core.request import Request, RequestState
-from repro.core.scheduler import BatchPlan, NeoScheduler, PoolView
+from repro.core.scheduler import BatchPlan, NeoScheduler, PoolView, SchedQueues
 from repro.core.transfer import TransferEngine
 from repro.models.api import get_model
 
@@ -99,6 +102,21 @@ class EngineStats:
     swap_in_bytes: int = 0
     swap_hidden_bytes: int = 0  # copies that finished before anyone joined
     swap_wait_time: float = 0.0  # time the compute lanes blocked on joins
+    # -- plan-ahead scheduling ---------------------------------------------
+    # hits: iterations that reused the speculative plan built while the
+    # previous iteration's lanes executed (plan phase off the critical path);
+    # replans: speculation falsified (arrival/departure/preemption/eos) and
+    # the iteration planned fresh; skipped: iterations whose post-step state
+    # was not predictable enough to speculate on (cache mutations etc.)
+    planahead_hits: int = 0
+    planahead_replans: int = 0
+    planahead_skipped: int = 0
+    # critical-path planning wall time (fresh plans + harvest waits) vs the
+    # planner-thread time hidden under lane execution by accepted plans
+    plan_busy_time: float = 0.0
+    planahead_hidden_time: float = 0.0
+    # open-loop admission control: arrivals bounced by offer()
+    rejected_requests: int = 0
     plans: List[str] = field(default_factory=list)
 
     def record_plan(self, plan: BatchPlan) -> None:
@@ -188,6 +206,12 @@ class NeoEngine:
         self.stats = EngineStats()
         self._journal: List[Dict[str, Any]] = []
         self.clock = 0.0  # virtual clock (arrival bookkeeping in offline runs)
+        # plan-ahead: a single planner thread (lazily started) builds the
+        # NEXT iteration's plan against a shadow of the post-step state while
+        # this iteration's lanes execute; _spec holds the in-flight
+        # speculation as (predicted_signature, shadow_state, shadows, future)
+        self._planner: Optional[ThreadPoolExecutor] = None
+        self._spec: Optional[Tuple[Any, SchedQueues, Dict[int, Request], Any]] = None
 
     # ------------------------------------------------------------------
     # submission
@@ -231,6 +255,52 @@ class NeoEngine:
             }
         )
         return rid
+
+    def offer(
+        self,
+        prompt: Sequence[int],
+        max_new_tokens: int,
+        *,
+        arrival_time: Optional[float] = None,
+        eos_token: Optional[int] = None,
+        extras: Optional[Dict[str, np.ndarray]] = None,
+    ) -> Optional[int]:
+        """Admission-controlled :meth:`submit` for the open-loop front end:
+        returns ``None`` (and counts the rejection) when the waitqueue is at
+        the configured ``max_waiting`` depth.  ``submit`` keeps the
+        closed-loop everything-is-admitted behavior."""
+        if not self.scheduler.has_capacity():
+            self.stats.rejected_requests += 1
+            return None
+        return self.submit(prompt, max_new_tokens, arrival_time=arrival_time,
+                           eos_token=eos_token, extras=extras)
+
+    def cancel(self, rid: int) -> bool:
+        """Mid-flight departure (client disconnect / streaming abort): free
+        the request's KV, drop it from the scheduler queues, and mark it
+        ABORTED.  Tokens already streamed stay with the caller.  Call
+        between steps (the engine API is single-threaded; transfers drain at
+        the end of every step, so no in-flight copy references the pages)."""
+        req = self.requests.get(rid)
+        if req is None or req.state in (RequestState.FINISHED, RequestState.ABORTED):
+            return False
+        if req.pages:
+            if self.paged:
+                pool = self.pool.device if req.location == "gpu" else self.pool.host
+                pool.free(req.pages)  # refcounted: shared prefix pages survive
+            else:
+                self.executor.free_slot(req.pages[0])
+            req.pages = []
+        sched = self.scheduler
+        if req in sched.waitq:
+            sched.waitq.remove(req)
+        if req in sched.gpu_runq:
+            sched.gpu_runq.remove(req)
+        if req in sched.cpu_runq:
+            sched.cpu_runq.remove(req)
+        req.state = RequestState.ABORTED
+        req.finish_time = self.clock
+        return True
 
     # ------------------------------------------------------------------
     # helpers
@@ -307,6 +377,247 @@ class NeoEngine:
         return out
 
     # ------------------------------------------------------------------
+    # plan-ahead scheduling
+    # ------------------------------------------------------------------
+    # While iteration N's lanes execute, a planner thread builds iteration
+    # N+1's plan against a SHADOW of the predicted post-step queues and pool
+    # counters (the view-based scheduler makes planning side-effect-free for
+    # the live queues).  At step N+1 the speculation is validated by
+    # comparing a signature over every plan input — per-request scheduling
+    # fields plus the free-page view — against the real state: a match
+    # adopts the plan (remapped shadow→real) with zero planning on the
+    # critical path; a mismatch (arrival, cancel, eos finish, anything the
+    # simulation could not see) replans fresh.  Prediction accuracy only
+    # affects the hit rate, never correctness — and greedy outputs are
+    # bitwise identical under ANY plan shape (row-independent per-row
+    # compute), so even a speculation built from stale EWMA scales is safe.
+
+    @staticmethod
+    def _sig_req(r: Request) -> tuple:
+        # every per-request field the six-step procedure reads (kv_len /
+        # prefill_len / suffix_len / pages_needed derive from these)
+        return (r.rid, r.state.value, r.location, len(r.prompt),
+                len(r.out_tokens), len(r.pages), r.skipped, r.cached_len,
+                r.prefix_loc, r.max_new_tokens)
+
+    @staticmethod
+    def _sig_of(waitq, gpu_runq, cpu_runq, dev_free: int, host_free: int) -> tuple:
+        f = NeoEngine._sig_req
+        return (tuple(f(r) for r in waitq), tuple(f(r) for r in gpu_runq),
+                tuple(f(r) for r in cpu_runq), dev_free, host_free)
+
+    def _signature(self) -> tuple:
+        pv = self._pool_view()
+        s = self.scheduler
+        return self._sig_of(s.waitq, s.gpu_runq, s.cpu_runq,
+                            pv.device_free, pv.host_free)
+
+    def _build_shadow(self, plan: BatchPlan):
+        """Predict the post-step scheduler/pool state for ``plan`` (called
+        right after commit, before dispatch) and clone it into shadows the
+        planner thread can mutate freely.
+
+        Returns ``(state, shadows, pools_pred, sig_pred)`` or ``None`` when
+        the remainder of the step is not predictable by page arithmetic
+        alone — with the prefix cache on, anything that touches the radix
+        tree (prefill pins, preemption/swap frees of possibly-shared pages,
+        finish-time inserts, growth under eviction pressure) is skipped
+        rather than simulated.
+        """
+        page = self._page
+        cache_on = self.prefix_cache is not None
+        sched = self.scheduler
+        if cache_on and (plan.prefill or plan.preempt
+                         or plan.swap_out or plan.swap_in):
+            return None
+
+        # pool counters as they will stand at the end of the step: swaps'
+        # page accounting already moved at launch, except swap-in source
+        # pages which return to the host pool at join-apply (drained by the
+        # step barrier)
+        dev_raw = self.pool.device.free_pages
+        host_raw = self.pool.host.free_pages + sum(
+            len(r.pages) for r in plan.swap_in)
+
+        def _running(rs: List[Request]) -> List[Request]:
+            return [r for r in rs
+                    if r.state == RequestState.RUNNING and r not in plan.prefill]
+
+        rows = (_running(plan.decode_gpu) + _running(plan.decode_cpu0)
+                + _running(plan.decode_cpu1))
+
+        shadows: Dict[int, Request] = {}
+
+        def clone(r: Request) -> Request:
+            sr = copy.copy(r)
+            sr.out_tokens = list(r.out_tokens)
+            sr.pages = list(r.pages)
+            shadows[r.rid] = sr
+            return sr
+
+        st = SchedQueues(
+            waitq=deque(clone(r) for r in sched.waitq),
+            gpu_runq=[clone(r) for r in sched.gpu_runq],
+            cpu_runq=[clone(r) for r in sched.cpu_runq],
+        )
+
+        # decode-row page growth (same predicate as dispatch, evaluated on
+        # the pre-emission kv_len) + token emission.  -1 is a placeholder:
+        # signatures only read lengths, and it can never equal an eos token,
+        # so a real eos finish falsifies the signature instead of silently
+        # matching.
+        for r in rows:
+            sr = shadows[r.rid]
+            host = r.location == "cpu"
+            if r.kv_len % page == 0 and r.kv_len // page >= len(r.pages):
+                if cache_on and (host_raw if host else dev_raw) < 1:
+                    return None  # make_room would evict: not predictable
+                if host:
+                    host_raw -= 1
+                else:
+                    dev_raw -= 1
+                sr.pages.append(-1)
+            sr.out_tokens.append(-1)
+
+        # prefill allocation + first-token emission (cache off here; the
+        # cache-on prefill path was excluded above).  Replayed prefills
+        # (recompute preemption) re-derive their last token and do not emit.
+        for r in plan.prefill:
+            sr = shadows[r.rid]
+            npages = -(-r.prefill_len // page)
+            if r in plan.prefill_to_host:
+                host_raw -= npages
+            else:
+                dev_raw -= npages
+            sr.pages = [-1] * npages
+            if not sr.out_tokens:
+                sr.out_tokens.append(-1)
+
+        # finishes: only the max_new_tokens bound is predictable (an eos
+        # emission falsifies the signature and replans)
+        for r in plan.prefill + plan.decode_rows:
+            sr = shadows.get(r.rid)
+            if sr is None or sr.state != RequestState.RUNNING:
+                continue
+            if len(sr.out_tokens) >= sr.max_new_tokens:
+                if cache_on:
+                    return None  # finish inserts into the radix tree
+                if sr.location == "cpu":
+                    host_raw += len(sr.pages)
+                else:
+                    dev_raw += len(sr.pages)
+                sr.state = RequestState.FINISHED
+                sr.pages = []
+        st.gpu_runq = [r for r in st.gpu_runq if r.state != RequestState.FINISHED]
+        st.cpu_runq = [r for r in st.cpu_runq if r.state != RequestState.FINISHED]
+
+        if dev_raw < 0 or host_raw < 0:
+            return None  # simulation diverged from the scheduler's budget
+
+        dev_ev = host_ev = 0
+        if cache_on:
+            # pure-decode steps leave the radix tree untouched (everything
+            # else returned None above), so evictable counts are stable
+            dev_ev = self.prefix_cache.evictable_pages("gpu")
+            host_ev = self.prefix_cache.evictable_pages("cpu")
+        pools_pred = PoolView(
+            page_size=page,
+            device_free=dev_raw + dev_ev,
+            host_free=host_raw + host_ev,
+            device_total=self.pool.device.num_pages - 1,
+            host_total=self.pool.host.num_pages,
+        )
+        sig_pred = self._sig_of(st.waitq, st.gpu_runq, st.cpu_runq,
+                                pools_pred.device_free, pools_pred.host_free)
+        return st, shadows, pools_pred, sig_pred
+
+    def _launch_planahead(self, plan: BatchPlan) -> None:
+        """Kick off the speculative plan for the NEXT iteration (called after
+        commit, before dispatch, so the planner overlaps the lane windows).
+        The planner thread touches only shadow requests and its own pool
+        view — never the live queues the executing lanes read."""
+        self._spec = None
+        shadow = self._build_shadow(plan)
+        if shadow is None:
+            self.stats.planahead_skipped += 1
+            return
+        st, shadows, pools_pred, sig_pred = shadow
+        sched = self.scheduler
+
+        def _plan_spec():
+            t0 = time.perf_counter()
+            p = sched.plan(pools_pred, state=st)
+            return p, time.perf_counter() - t0
+
+        if self._planner is None:
+            self._planner = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="neo-planner")
+        self._spec = (sig_pred, st, shadows, self._planner.submit(_plan_spec))
+
+    def _take_plan(self) -> Tuple[Optional[BatchPlan], bool]:
+        """Harvest the in-flight speculation: ``(plan, False)`` on a hit,
+        ``(None, had_spec)`` otherwise (the caller plans fresh; had_spec
+        marks a REPLAN whose fresh planning time was hideable)."""
+        spec, self._spec = self._spec, None
+        if spec is None:
+            return None, False
+        sig_pred, st, shadows, fut = spec
+        t0 = time.perf_counter()
+        try:
+            plan_s, dur = fut.result()
+        except Exception:
+            self.stats.plan_busy_time += time.perf_counter() - t0
+            self.stats.planahead_replans += 1
+            return None, True
+        # harvest wait (planner still running = the rare case where planning
+        # outlasted the lanes) is genuine critical-path plan time
+        self.stats.plan_busy_time += time.perf_counter() - t0
+        if self._signature() != sig_pred:
+            self.stats.planahead_replans += 1
+            return None, True
+        real = self.requests
+
+        def rmap(rs: List[Request]) -> List[Request]:
+            return [real[sr.rid] for sr in rs]
+
+        plan = BatchPlan(
+            mode=plan_s.mode,
+            prefill=rmap(plan_s.prefill),
+            prefill_to_host=rmap(plan_s.prefill_to_host),
+            decode_gpu=rmap(plan_s.decode_gpu),
+            decode_cpu0=rmap(plan_s.decode_cpu0),
+            decode_cpu1=rmap(plan_s.decode_cpu1),
+            swap_out=rmap(plan_s.swap_out),
+            swap_in=rmap(plan_s.swap_in),
+            preempt=rmap(plan_s.preempt),
+            lane_splits=list(plan_s.lane_splits),
+            est_iter_time=plan_s.est_iter_time,
+            est_tokens=plan_s.est_tokens,
+            stages=plan_s.stages,
+        )
+        # planning's own queue/request mutations ran on the shadows; apply
+        # them to the real state exactly as a fresh plan would have: aging
+        # (skipped), admission aborts, and the post-plan waitqueue (pops +
+        # step-5 bounces, in shadow order)
+        for sr in shadows.values():
+            r = real.get(sr.rid)
+            if r is None:
+                continue
+            r.skipped = sr.skipped
+            if (sr.state == RequestState.ABORTED
+                    and r.state == RequestState.WAITING):
+                r.state = RequestState.ABORTED
+        self.scheduler.waitq = deque(real[sr.rid] for sr in st.waitq)
+        self.stats.planahead_hits += 1
+        # the planner's wall time was hidden under iteration N's lanes:
+        # realized AND ideal overlap both grow by it, keeping bubble_fraction
+        # comparable with the lockstep path (which pays it as a bubble)
+        self.stats.planahead_hidden_time += dur
+        self.stats.pipeline_overlap_time += dur
+        self.stats.pipeline_ideal_time += dur
+        return plan, False
+
+    # ------------------------------------------------------------------
     # one iteration
     # ------------------------------------------------------------------
     def step(self, now: Optional[float] = None) -> List[Tuple[int, int]]:
@@ -315,11 +626,28 @@ class NeoEngine:
         now = self.clock if now is None else now
         self.clock = now
         host_busy0 = self.host_attn.busy_time if self.host_attn else 0.0
+        prefix_busy0 = self.host_attn.prefix_busy_time if self.host_attn else 0.0
         dev_busy0 = self.stats.device_busy_time
         swap_busy0 = self.transfer.stats.busy_time if self.transfer else 0.0
 
         # -- PLAN --------------------------------------------------------------
-        plan = self.scheduler.plan(self._pool_view())
+        # plan-ahead first: adopt the plan speculated during the previous
+        # iteration when its predicted state still matches reality
+        plan = None
+        replanned = False
+        if self.paged:
+            plan, replanned = self._take_plan()
+        if plan is None:
+            p0 = time.perf_counter()
+            plan = self.scheduler.plan(self._pool_view())
+            dt = time.perf_counter() - p0
+            self.stats.plan_busy_time += dt
+            if replanned:
+                # a falsified speculation means this planning time WAS
+                # hideable (the planner thread sat idle while the previous
+                # lanes ran): account it as unrealized-but-ideal overlap so
+                # bubble_fraction reflects the missed win
+                self.stats.pipeline_ideal_time += dt
         if plan.is_empty():
             return []
         self.stats.iterations += 1
@@ -359,6 +687,8 @@ class NeoEngine:
                 device_busy=self.stats.device_busy_time - dev_busy0,
                 swap_busy=(self.transfer.stats.busy_time - swap_busy0)
                 if self.transfer else 0.0,
+                host_prefix_busy=(self.host_attn.prefix_busy_time - prefix_busy0)
+                if self.host_attn else 0.0,
                 pipelined=self.engine_cfg.pipeline and plan.mode != "serial",
             )
         return emitted
@@ -403,6 +733,10 @@ class NeoEngine:
             for r in plan.swap_in:
                 self.pool.swap_request(r, "gpu")
         self.scheduler.commit(plan)
+        # plan-ahead: speculate the NEXT iteration's plan now, so the planner
+        # thread runs under the lane windows dispatched below
+        if pipelined and self.engine_cfg.planahead:
+            self._launch_planahead(plan)
         dispatch_t0 = time.perf_counter()  # compute-window start (hidden-bytes)
 
         # ==== DISPATCH phase ================================================
@@ -737,7 +1071,11 @@ class NeoEngine:
     # lifecycle
     # ------------------------------------------------------------------
     def close(self) -> None:
-        """Join and stop the background transfer/dispatch threads."""
+        """Join and stop the background transfer/dispatch/planner threads."""
+        self._spec = None
+        if self._planner is not None:
+            self._planner.shutdown(wait=True)
+            self._planner = None
         if self.transfer is not None:
             self.transfer.close()
         if self.paged:

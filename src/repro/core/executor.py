@@ -60,6 +60,45 @@ from repro.models.transformer import DenseLM, project_qkv
 Params = Dict[str, Any]
 
 
+def _patch_io_callback_operand_roundtrip() -> None:
+    """Work around a host-callback self-deadlock on low-core machines.
+
+    jax 0.4.x's ``io_callback_impl`` round-trips the runtime-delivered
+    numpy operands through ``jax.device_put`` before invoking the Python
+    callback.  The XLA CPU custom-call runs the callback inline on the
+    client's async-dispatch pool thread; ``device_put`` enqueues an async
+    host-to-device copy on that same pool, so on a single-threaded client
+    (nproc==1 containers) the callback blocks forever materializing its
+    own operands (``int(layer)`` / ``np.asarray(q)``) while the only pool
+    thread is parked inside the callback — the whole graph deadlocks.
+
+    Every callback in this repo consumes plain numpy, so the round-trip
+    buys nothing: replace the impl with a straight pass-through.  The CPU
+    lowering closure resolves ``io_callback_impl`` as a module global at
+    call time, so already-compiled graphs pick the patch up too.  Guarded
+    to the known-affected 0.4.x line; newer jax runs unpatched.
+    """
+    if not jax.__version__.startswith("0.4."):
+        return
+    try:
+        from jax import tree_util
+        from jax._src import callback as _jcb
+    except ImportError:  # internal layout moved; leave jax alone
+        return
+    if getattr(_jcb, "_neo_io_callback_patched", False):
+        return
+
+    def _impl(*args, result_avals, callback, sharding, ordered):
+        del result_avals, sharding, ordered
+        return tree_util.tree_map(np.asarray, callback(*args))
+
+    _jcb.io_callback_impl = _impl
+    _jcb._neo_io_callback_patched = True
+
+
+_patch_io_callback_operand_roundtrip()
+
+
 def _bucket(n: int, minimum: int = 8) -> int:
     b = minimum
     while b < n:
@@ -671,6 +710,19 @@ class PagedExecutor:
         logits, k_all, v_all = self.prefill_host_prefix_fn(n, S)(
             self.params, tokens, suffix_lens, prefix_lens
         )
+        # Drain the callback-bearing graph with a plain wait BEFORE
+        # dispatching anything that depends on its outputs.  Slicing
+        # k_all/v_all while this graph is still in flight enqueues new
+        # executables through the runtime's dispatch path; the ordered
+        # per-layer prefix callback needs that same path to materialize its
+        # operands, and on low-core hosts the two deadlock (main thread in
+        # write_token_range materializing a slice, callback thread stuck on
+        # np.asarray(q) forever).  block_until_ready takes no dispatch
+        # locks, and the numpy conversion afterwards makes the scatter pure
+        # host-side work.
+        jax.block_until_ready((logits, k_all, v_all))
+        k_all = np.asarray(k_all)
+        v_all = np.asarray(v_all)
         self._scatter_suffix(reqs, suffix_lens, k_all, v_all, to_host=True)
         return np.asarray(logits)
 

@@ -36,7 +36,8 @@ class PerfModel:
     ewma_alpha: float = 0.2
     # online calibration factors (measured / predicted), one per stage kind
     scale: Dict[str, float] = field(
-        default_factory=lambda: {"linear": 1.0, "gpu_attn": 1.0, "cpu_attn": 1.0, "swap": 1.0}
+        default_factory=lambda: {"linear": 1.0, "gpu_attn": 1.0, "cpu_attn": 1.0,
+                                 "swap": 1.0, "host_prefix": 1.0}
     )
 
     @classmethod
@@ -138,7 +139,9 @@ class PerfModel:
         if n_tokens <= 0:
             return 0.0
         bytes_ = n_tokens * self.kv_bytes_per_token_layer
-        return bytes_ / (self.hw.host_mem_bw * self.hw.host_bw_eff)
+        return self.scale["host_prefix"] * bytes_ / (
+            self.hw.host_mem_bw * self.hw.host_bw_eff
+        )
 
     def t_transfer_qo(self, n_rows: int) -> float:
         """Q down + attention-output up for offloaded rows (TrQKV/TrO)."""
@@ -199,7 +202,21 @@ class PerfModel:
 
         All terms are EWMA-calibrated through ``t_linear``/``t_cpu_attn``,
         so the predicted overlap tracks measured lane times.  With K = 2 and
-        no device lane this reduces exactly to the PR-3 micro-batch model.
+        no device lane the steady-state period reduces exactly to the PR-3
+        micro-batch model.
+
+        The steady-state period alone structurally caps the useful lane
+        count at 2: splitting further shrinks per-lane stages but the
+        resource TOTALS (and their dispatch overheads) only grow, so the
+        argmin over K never moves past 2.  What K > 2 actually buys is a
+        shorter pipeline FILL (one lane's linear must run before any host
+        attention can start) and DRAIN (one lane's attention runs after the
+        final layer's device work) — both shrink ~1/K.  We charge the
+        AVERAGE lane's stage for each (keeping the boundary argmin for a
+        fixed K identical to the pure steady-state model, since the per-K
+        average is split-invariant), amortized over the iteration's L
+        layers: deep splits win exactly when host attention dominates and L
+        is small relative to the per-lane stage times.
         """
         t_lin = [self.t_linear(n) for n, _ in lanes]
         t_att = [self.t_cpu_attn(kv) for _, kv in lanes]
@@ -207,7 +224,12 @@ class PerfModel:
         host_total = device_host_attn + sum(t_att)
         chains = [device_compute + device_host_attn]
         chains += [tl + ta for tl, ta in zip(t_lin, t_att)]
-        return max(device_total, host_total, *chains)
+        period = max(device_total, host_total, *chains)
+        L = max(self.cfg.num_layers, 1)
+        k = max(len(lanes), 1)
+        fill = sum(t_lin) / k
+        drain = sum(t_att) / k
+        return period + (fill + drain) / L
 
     def microbatch_time(self, n_a: int, kv_a: int, n_b: int, kv_b: int) -> float:
         """Two alternating batch-1 micro-batches — the K=2, no-device-lane
@@ -240,6 +262,7 @@ class PerfModel:
 
     def observe_iteration(self, stages, *, host_busy: float = 0.0,
                           device_busy: float = 0.0, swap_busy: float = 0.0,
+                          host_prefix_busy: float = 0.0,
                           pipelined: bool = False) -> None:
         """Refresh calibration from one iteration's MEASURED lane times.
 
@@ -271,3 +294,8 @@ class PerfModel:
             self.observe("linear", pred, device_busy)
         if swap_busy > 0:
             self.observe("swap", L * stages.t_swap, swap_busy)
+        if host_prefix_busy > 0:
+            # zero-copy host-serving gathers: HostAttention.prefix_busy_time
+            # delta for this iteration vs the plan's priced t_host_prefix —
+            # the last analytic-only stage joins the EWMA loop
+            self.observe("host_prefix", L * stages.t_host_prefix, host_prefix_busy)

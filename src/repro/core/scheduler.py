@@ -170,6 +170,24 @@ class BatchPlan:
         )
 
 
+@dataclass
+class SchedQueues:
+    """Detached queue state the planning procedure can run against.
+
+    Planning MUTATES queue state (admission pops the waitq, step 3 pops
+    prefills, step 5 bounces them back) — parameterizing the six-step
+    procedure on this view lets the engine plan SPECULATIVELY against a
+    shadow copy of the queues on a planner thread while the real queues
+    back the executing iteration (plan-ahead).  ``NeoScheduler`` itself is
+    duck-compatible (same three attributes), so ``plan()`` with no explicit
+    state runs against the live queues exactly as before.
+    """
+
+    waitq: Deque[Request] = field(default_factory=deque)
+    gpu_runq: List[Request] = field(default_factory=list)
+    cpu_runq: List[Request] = field(default_factory=list)
+
+
 class NeoScheduler:
     def __init__(self, cfg: ArchConfig, engine_cfg: EngineConfig, perf: PerfModel):
         self.cfg = cfg
@@ -189,8 +207,47 @@ class NeoScheduler:
         assert req.state == RequestState.WAITING
         self.waitq.append(req)
 
+    def has_capacity(self) -> bool:
+        """Admission control for the open-loop front end: False when the
+        waitqueue is at the configured depth cap (``max_waiting``; 0 =
+        unbounded).  Callers that bypass this (``NeoEngine.submit``) keep
+        the closed-loop everything-is-admitted behavior."""
+        mw = self.engine_cfg.max_waiting
+        return mw <= 0 or len(self.waitq) < mw
+
     def running(self) -> List[Request]:
         return self.gpu_runq + self.cpu_runq
+
+    # -- continuous-batching queue surface (vLLM-cacheflow naming) -------
+    @property
+    def waiting(self) -> List[Request]:
+        """Admitted requests not yet prefilled (the arrival queue)."""
+        return list(self.waitq)
+
+    @property
+    def running_rows(self) -> List[Request]:
+        """Rows actively decoding this regime.  Under ``gpu_only`` the CPU
+        runqueue holds swapped-OUT rows that do NOT decode until swap-in, so
+        only the device queue counts as running; every other policy decodes
+        host-resident rows in place."""
+        if self.policy == "gpu_only":
+            return list(self.gpu_runq)
+        return self.gpu_runq + self.cpu_runq
+
+    @property
+    def swapped(self) -> List[Request]:
+        """Rows whose KV sits on the host awaiting swap-in (vLLM-style
+        SWAPPED state) — non-empty only under ``gpu_only``."""
+        if self.policy == "gpu_only":
+            return list(self.cpu_runq)
+        return []
+
+    def queue_depths(self) -> dict:
+        return {
+            "waiting": len(self.waitq),
+            "running": len(self.running_rows),
+            "swapped": len(self.swapped),
+        }
 
     @property
     def num_queued(self) -> int:
@@ -228,14 +285,23 @@ class NeoScheduler:
     # ------------------------------------------------------------------
     # the six-step procedure (§3.2)
     # ------------------------------------------------------------------
-    def plan(self, pools: PoolView) -> BatchPlan:
-        self._admission_control(pools)
+    def plan(self, pools: PoolView, state=None) -> BatchPlan:
+        """Build one iteration's plan.
+
+        ``state`` is any object with ``waitq`` / ``gpu_runq`` / ``cpu_runq``
+        attributes (default: the scheduler's live queues).  Planning mutates
+        that state — a :class:`SchedQueues` shadow makes the whole six-step
+        procedure side-effect-free with respect to the live queues, which is
+        what the engine's plan-ahead thread runs against.
+        """
+        st = self if state is None else state
+        self._admission_control(pools, st)
         if self.policy == "gpu_only":
-            plan = self._plan_gpu_only(pools)
+            plan = self._plan_gpu_only(pools, st)
         elif self.policy in ("fastdecode", "simple"):
-            plan = self._plan_full_offload(pools)
+            plan = self._plan_full_offload(pools, st)
         else:
-            plan = self._plan_neo(pools)
+            plan = self._plan_neo(pools, st)
         self._annotate_lanes(plan)
         return plan
 
@@ -353,7 +419,7 @@ class NeoScheduler:
             bounds.append(min(prev + 1, hi))
         return bounds
 
-    def _admission_control(self, pools: PoolView) -> None:
+    def _admission_control(self, pools: PoolView, st) -> None:
         """Reject queued prompts that can never fit any pool."""
         page = pools.page_size
         cap = pools.device_total
@@ -362,23 +428,23 @@ class NeoScheduler:
         if self.policy in ("fastdecode", "simple"):
             cap = pools.host_total
         keep: Deque[Request] = deque()
-        while self.waitq:
-            r = self.waitq.popleft()
+        while st.waitq:
+            r = st.waitq.popleft()
             pages = -(-(r.prompt_len + r.max_new_tokens) // page)
             if pages > cap or r.prompt_len > self.engine_cfg.max_batch_tokens:
                 r.state = RequestState.ABORTED
             else:
                 keep.append(r)
-        self.waitq = keep
+        st.waitq = keep
 
     # -- NEO ------------------------------------------------------------
-    def _plan_neo(self, pools: PoolView) -> BatchPlan:
+    def _plan_neo(self, pools: PoolView, st) -> BatchPlan:
         cfg, perf = self.engine_cfg, self.perf
         page = pools.page_size
         plan = BatchPlan(mode="asym")  # step 1: initialise
 
         # ---- step 2: GPU decode requests -> batch-0; swap to fit ----------
-        gpu_decode = sorted(self.gpu_runq, key=lambda r: r.arrival_time)
+        gpu_decode = sorted(st.gpu_runq, key=lambda r: r.arrival_time)
         need = sum(self._new_pages_for_decode(r, page) for r in gpu_decode)
         # shed largest-KV requests until the device pool holds all new KV:
         # swap to the host when it has room, otherwise recompute-preempt
@@ -399,7 +465,7 @@ class NeoScheduler:
         plan.decode_gpu = gpu_decode
 
         # swap IN when there is ample device space (Maximizing GPU)
-        for r in sorted(self.cpu_runq, key=lambda r: r.kv_len):
+        for r in sorted(st.cpu_runq, key=lambda r: r.kv_len):
             pages = len(r.pages) + self._new_pages_for_decode(r, page)
             headroom = pools.device_free - pages
             if headroom < int(0.25 * pools.device_free):
@@ -418,8 +484,8 @@ class NeoScheduler:
         # the resulting plan (t_host_prefix vs the promote-path t_swap).
         host_serve = cfg.prefix_host_serving
         budget = cfg.max_batch_tokens - plan.batch0_tokens
-        while self.waitq and len(plan.prefill) + len(plan.decode_rows) < cfg.max_requests:
-            nxt = self.waitq[0]
+        while st.waitq and len(plan.prefill) + len(plan.decode_rows) < cfg.max_requests:
+            nxt = st.waitq[0]
             if nxt.suffix_len > budget:
                 break
             pages = nxt.new_prefill_pages(page)  # cached full pages are shared
@@ -431,13 +497,13 @@ class NeoScheduler:
             prefer_host = (host_serve and nxt.cached_len > 0
                            and nxt.prefix_loc == "cpu" and nxt.skipped == 0)
             if prefer_host and pools.host_take(pages):
-                req = self.waitq.popleft()
+                req = st.waitq.popleft()
                 plan.prefill.append(req)
                 plan.prefill_to_host.append(req)
             elif pools.device_take(pages):
-                plan.prefill.append(self.waitq.popleft())
+                plan.prefill.append(st.waitq.popleft())
             elif pools.host_take(pages):
-                req = self.waitq.popleft()
+                req = st.waitq.popleft()
                 plan.prefill.append(req)
                 plan.prefill_to_host.append(req)
             else:
@@ -447,7 +513,7 @@ class NeoScheduler:
         # ---- step 4: CPU decode requests -> batch-0 / batch-1 -------------
         in_plan = set(id(r) for r in plan.swap_in)
         t_ga0 = perf.t_gpu_attn(self._kv_tokens(plan.decode_gpu))
-        cpu_candidates = [r for r in self.cpu_runq if id(r) not in in_plan]
+        cpu_candidates = [r for r in st.cpu_runq if id(r) not in in_plan]
         # swap-out victims already decode on the host in batch-1
         kv0 = 0  # host kv tokens in batch-0
         kv1 = self._kv_tokens(plan.swap_out)  # host kv tokens in batch-1
@@ -505,7 +571,7 @@ class NeoScheduler:
         # future iterations — "Balancing"), and only while the no-bubble
         # inequality T_ca1 <= T_l0 still holds after the removal.
         cpu_demand = perf.t_cpu_attn(
-            self._kv_tokens(self.cpu_runq) + sum(r.prompt_len for r in plan.prefill_to_host)
+            self._kv_tokens(st.cpu_runq) + sum(r.prompt_len for r in plan.prefill_to_host)
         )
         for req in list(plan.prefill_to_host):
             hideable = self._t_l0(plan) + perf.t_linear(plan.batch1_tokens) + t_ga0
@@ -521,7 +587,7 @@ class NeoScheduler:
                 plan.prefill.remove(req)
                 plan.prefill_to_host.remove(req)
                 req.skipped += 1  # disarms the host-placement preference
-                self.waitq.appendleft(req)
+                st.waitq.appendleft(req)
                 pools.host_free += req.new_prefill_pages(page)
                 cpu_demand -= perf.t_cpu_attn(req.prompt_len)
 
@@ -557,10 +623,10 @@ class NeoScheduler:
         return None
 
     # -- baselines -------------------------------------------------------
-    def _plan_gpu_only(self, pools: PoolView) -> BatchPlan:
+    def _plan_gpu_only(self, pools: PoolView, st) -> BatchPlan:
         page = pools.page_size
         plan = BatchPlan(mode="gpu_only")
-        gpu_decode = sorted(self.gpu_runq, key=lambda r: r.arrival_time)
+        gpu_decode = sorted(st.gpu_runq, key=lambda r: r.arrival_time)
         need = sum(self._new_pages_for_decode(r, page) for r in gpu_decode)
         by_size = sorted(gpu_decode, key=lambda r: -r.kv_len)
         while need > pools.device_free and by_size:
@@ -575,7 +641,7 @@ class NeoScheduler:
         pools.device_free -= sum(self._new_pages_for_decode(r, page) for r in gpu_decode)
         plan.decode_gpu = gpu_decode
         # swap preempted requests back in when space allows
-        for r in sorted(self.cpu_runq, key=lambda r: r.kv_len):
+        for r in sorted(st.cpu_runq, key=lambda r: r.kv_len):
             pages = len(r.pages) + self._new_pages_for_decode(r, page)
             if pools.device_free - pages < 0:
                 break
@@ -583,28 +649,28 @@ class NeoScheduler:
             plan.swap_in.append(r)
             plan.decode_gpu.append(r)
         budget = self.engine_cfg.max_batch_tokens - plan.batch0_tokens
-        while self.waitq and len(plan.prefill) + len(plan.decode_rows) < self.engine_cfg.max_requests:
-            nxt = self.waitq[0]
+        while st.waitq and len(plan.prefill) + len(plan.decode_rows) < self.engine_cfg.max_requests:
+            nxt = st.waitq[0]
             pages = nxt.new_prefill_pages(page)
             if nxt.suffix_len > budget or not pools.device_take(pages):
                 break
-            plan.prefill.append(self.waitq.popleft())
+            plan.prefill.append(st.waitq.popleft())
             budget -= nxt.suffix_len
         self._estimate(plan)
         return plan
 
-    def _plan_full_offload(self, pools: PoolView) -> BatchPlan:
+    def _plan_full_offload(self, pools: PoolView, st) -> BatchPlan:
         """FastDecode+ / simple-offloading: ALL decode KV lives on the host."""
         page = pools.page_size
         mode = "asym" if self.policy == "fastdecode" else "serial"
         plan = BatchPlan(mode=mode)
         # every running request is (or becomes) a host request
-        for r in list(self.gpu_runq):
+        for r in list(st.gpu_runq):
             if pools.host_take(len(r.pages) + self._new_pages_for_decode(r, page)):
                 plan.swap_out.append(r)
                 plan.decode_cpu1.append(r)
         starve = self.engine_cfg.starvation_limit
-        for r in self.cpu_runq:
+        for r in st.cpu_runq:
             if self._new_pages_for_decode(r, page) and not pools.host_take(
                 self._new_pages_for_decode(r, page)
             ):
@@ -617,12 +683,12 @@ class NeoScheduler:
             r.skipped = 0
             plan.decode_cpu1.append(r)
         budget = self.engine_cfg.max_batch_tokens
-        while self.waitq and len(plan.prefill) + len(plan.decode_rows) < self.engine_cfg.max_requests:
-            nxt = self.waitq[0]
+        while st.waitq and len(plan.prefill) + len(plan.decode_rows) < self.engine_cfg.max_requests:
+            nxt = st.waitq[0]
             pages = nxt.new_prefill_pages(page)
             if nxt.suffix_len > budget or not pools.host_take(pages):
                 break
-            req = self.waitq.popleft()
+            req = st.waitq.popleft()
             plan.prefill.append(req)
             plan.prefill_to_host.append(req)
             budget -= nxt.suffix_len  # match the admission check (replayed

@@ -3,6 +3,13 @@
 The paper's headline metric (Fig. 6): **average per-token latency** — each
 request's full latency divided by its output token count, averaged over
 requests.  Throughput = completed tokens / makespan.
+
+Online-serving additions: per-request TTFT (time to first token) and TPOT
+(time per output token after the first) with p50/p99 percentiles, and
+**goodput** — finished requests per second that met the TTFT/TPOT SLOs —
+the headline metric of the open-loop arrival-driven loop (`launch/serve.py
+run_online`), where admission-rejected and still-queued requests count
+against SLO attainment.
 """
 
 from __future__ import annotations
@@ -40,6 +47,16 @@ class RequestRecord:
         if self.first_token_time is None:
             return None
         return self.first_token_time - self.arrival_time
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Time per output token AFTER the first (decode cadence; None for
+        single-token outputs, which have no decode phase to pace)."""
+        if self.finish_time is None or self.first_token_time is None:
+            return None
+        if self.output_len <= 1:
+            return None
+        return (self.finish_time - self.first_token_time) / (self.output_len - 1)
 
 
 @dataclass
@@ -81,6 +98,16 @@ class ServeMetrics:
     inplace_host_hits: int = 0
     host_served_hit_tokens: int = 0
     host_hit_pcie_bytes: int = 0
+    # plan-ahead scheduling (EngineStats mirror): speculative plans adopted,
+    # plans invalidated by arrivals/eos/preemption, speculation rounds skipped,
+    # critical-path plan time, and plan time hidden behind lane execution
+    planahead_hits: int = 0
+    planahead_replans: int = 0
+    planahead_skipped: int = 0
+    plan_busy_time: float = 0.0
+    planahead_hidden_time: float = 0.0
+    # open-loop admission control: requests refused at offer() time
+    rejected_requests: int = 0
 
     # ------------------------------------------------------------------
     @property
@@ -128,6 +155,33 @@ class ServeMetrics:
             return float("nan")
         return float(np.mean(vals) if pct is None else np.percentile(vals, pct))
 
+    def tpot(self, pct: Optional[float] = None) -> float:
+        vals = [r.tpot for r in self.finished if r.tpot is not None]
+        if not vals:
+            return float("nan")
+        return float(np.mean(vals) if pct is None else np.percentile(vals, pct))
+
+    def slo_attained(self, slo_ttft: float, slo_tpot: float) -> int:
+        """Finished requests meeting BOTH SLOs.  A missing TPOT (single-token
+        output) only has to meet the TTFT bound; a missing TTFT fails."""
+        n = 0
+        for r in self.finished:
+            t = r.ttft
+            if t is None or t > slo_ttft:
+                continue
+            p = r.tpot
+            if p is not None and p > slo_tpot:
+                continue
+            n += 1
+        return n
+
+    def goodput(self, slo_ttft: float, slo_tpot: float) -> float:
+        """SLO-attaining finished requests per second over the makespan.
+        Rejected / unfinished requests simply never count in the numerator."""
+        if self.makespan <= 0:
+            return 0.0
+        return self.slo_attained(slo_ttft, slo_tpot) / self.makespan
+
     def summary(self) -> Dict[str, float]:
         return {
             "requests": len(self.finished),
@@ -136,6 +190,10 @@ class ServeMetrics:
             "per_token_latency_ms": round(self.per_token_latency() * 1e3, 2),
             "p99_per_token_latency_ms": round(self.per_token_latency(99) * 1e3, 2),
             "ttft_s": round(self.ttft(), 3),
+            "ttft_p50_ms": round(self.ttft(50) * 1e3, 2),
+            "ttft_p99_ms": round(self.ttft(99) * 1e3, 2),
+            "tpot_p50_ms": round(self.tpot(50) * 1e3, 2),
+            "tpot_p99_ms": round(self.tpot(99) * 1e3, 2),
             "makespan_s": round(self.makespan, 2),
             "offload_frac": round(
                 self.offloaded_decodes
@@ -170,4 +228,11 @@ class ServeMetrics:
             "inplace_host_hits": self.inplace_host_hits,
             "host_served_hit_tokens": self.host_served_hit_tokens,
             "host_hit_pcie_MB": round(self.host_hit_pcie_bytes / 1e6, 3),
+            # plan-ahead scheduling + open-loop admission
+            "planahead_hits": self.planahead_hits,
+            "planahead_replans": self.planahead_replans,
+            "planahead_skipped": self.planahead_skipped,
+            "plan_busy_s": round(self.plan_busy_time, 3),
+            "planahead_hidden_s": round(self.planahead_hidden_time, 3),
+            "rejected_requests": self.rejected_requests,
         }

@@ -17,6 +17,7 @@ deterministic given a seed.
 
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -129,6 +130,47 @@ def multiturn_trace(
     return out
 
 
+def save_trace(trace: List[TraceRequest], path: str) -> None:
+    """Write a trace as JSONL for later replay (arrival_time/prompt_len/
+    output_len per line; materialised prompts and conv ids round-trip too)."""
+    with open(path, "w") as f:
+        for r in trace:
+            rec = {
+                "arrival_time": r.arrival_time,
+                "prompt_len": r.prompt_len,
+                "output_len": r.output_len,
+            }
+            if r.prompt is not None:
+                rec["prompt"] = r.prompt
+            if r.conv is not None:
+                rec["conv"] = r.conv
+            f.write(json.dumps(rec) + "\n")
+
+
+def replay_trace(path: str, n: int = 0, *, time_scale: float = 1.0) -> List[TraceRequest]:
+    """Replayed arrivals from a JSONL file (one request per line, as written
+    by :func:`save_trace`).  ``n > 0`` truncates; ``time_scale`` stretches or
+    compresses the recorded inter-arrival gaps (0.5 = replay at 2x rate)."""
+    out: List[TraceRequest] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            out.append(TraceRequest(
+                float(rec["arrival_time"]) * time_scale,
+                int(rec["prompt_len"]),
+                int(rec["output_len"]),
+                prompt=rec.get("prompt"),
+                conv=rec.get("conv"),
+            ))
+            if n > 0 and len(out) >= n:
+                break
+    out.sort(key=lambda r: r.arrival_time)
+    return out
+
+
 TRACES = {
     "ac": azure_code_trace,
     "osc": osc_trace,
@@ -144,6 +186,9 @@ def get_trace(name: str, n: int, rate: float, seed: int = 0) -> List[TraceReques
     if name.startswith("syn:"):  # "syn:1000x100"
         li, lo = name[4:].split("x")
         return synthetic_trace(n, rate, int(li), int(lo), seed=seed)
+    if name.startswith("replay:"):  # "replay:/path/to/trace.jsonl"
+        return replay_trace(name.split(":", 1)[1], n)
     raise KeyError(
-        f"unknown trace {name!r} (have ac, osc, multiturn[:turns], syn:<in>x<out>)"
+        f"unknown trace {name!r} "
+        "(have ac, osc, multiturn[:turns], syn:<in>x<out>, replay:<path>)"
     )

@@ -27,6 +27,11 @@ def dense_setup():
 
 def _run(cfg, params, prompts, *, policy, pipeline, microbatch, n_out=8,
          device_pages=8, host_pages=128, **kw):
+    # planahead off: these tests assert on the EXECUTION overlap the
+    # micro-batch / lane splits realize (pipeline_overlap_time == 0 for the
+    # serialized reference), and plan-ahead hits would fold hidden plan
+    # time into the same counters
+    kw.setdefault("planahead", False)
     ecfg = EngineConfig(device_pool_pages=device_pages,
                         host_pool_pages=host_pages,
                         max_batch_tokens=256, policy=policy,

@@ -336,8 +336,11 @@ def test_lane_counts_record_executed_k_on_plan_launch_preemption(dense_setup):
     K-histogram (published by bench_trend) must record the EXECUTED K (1),
     not the planned K (2), and the step must not count as micro-batched."""
     cfg, params = dense_setup
+    # plan-ahead off: this test monkeypatches scheduler.plan to inject a
+    # preemption between plan and launch, which requires the plan to be
+    # built synchronously on this step's critical path
     eng = _make_engine(cfg, params, policy="fastdecode", pipeline=True,
-                       device_pages=64, max_host_lanes=2)
+                       device_pages=64, max_host_lanes=2, planahead=False)
     rng = np.random.default_rng(11)
     for _ in range(4):
         eng.submit(list(map(int, rng.integers(1, 500, size=24))), 8)
