@@ -4,7 +4,7 @@ perf-trajectory regression vs the checked-in baseline.
 
 This is the CI ``bench-trend`` job's entry point (the summary file is
 uploaded as a build artifact, so the trajectory is inspectable per commit).
-Schema (``neo-bench-trend/v3``; documented in ``benchmarks/README.md``):
+Schema (``neo-bench-trend/v4``; documented in ``benchmarks/README.md``):
 
 * ``engine.*_tok_s``      — smoke token throughputs (RECORDED, not gated:
   they are wall-times of whatever machine ran the job);
@@ -24,7 +24,13 @@ Schema (``neo-bench-trend/v3``; documented in ``benchmarks/README.md``):
   loops (RECORDED — wall-clock latencies are machine-dependent), plus
   ``planahead_hits`` (GATED > 0: speculative plans must actually be
   adopted) and ``bitwise_identical`` (GATED: plan-ahead may never change
-  greedy outputs).
+  greedy outputs);
+* ``obs.tracing_overhead`` — fractional tok/s cost of structured tracing
+  on the decode-heavy fastdecode smoke (GATED <= TRACING_OVERHEAD_TOL:
+  the tracer must stay out of the engine's way);
+* ``obs.reconcile_ok`` — the span timeline reproduces EngineStats' lane
+  busy / overlap / bubble / swap-hidden / plan-ahead accounting (GATED
+  true: the trace is a standing audit of every other gated number).
 
 ``--write-baseline`` refreshes ``benchmarks/BENCH_baseline.json`` (commit
 the result deliberately — that is the trajectory being gated).
@@ -39,7 +45,7 @@ import sys
 
 from benchmarks.common import FIG_DIR, HERE
 
-SCHEMA = "neo-bench-trend/v3"
+SCHEMA = "neo-bench-trend/v4"
 REPO_ROOT = os.path.dirname(HERE)
 BASELINE_PATH = os.path.join(HERE, "BENCH_baseline.json")
 SUMMARY_PATH = os.path.join(REPO_ROOT, "BENCH_engine.json")
@@ -48,6 +54,7 @@ SUMMARY_PATH = os.path.join(REPO_ROOT, "BENCH_engine.json")
 # machines), throughputs are not — only ratios/counters are gated.
 BUBBLE_TOL = 0.05
 HIT_RATE_TOL = 0.05
+TRACING_OVERHEAD_TOL = 0.05
 
 
 def _load(name: str) -> dict:
@@ -64,6 +71,7 @@ def collect(n: int) -> tuple[int, dict]:
     rc = 0
     rc |= engine_real.main(["--microbatch-only", "--n", str(n)])
     rc |= engine_real.main(["--mixed-lane-only"])
+    rc |= engine_real.main(["--obs-only", "--n", str(n)])
     rc |= prefix_cache.main(["--quick", "--host-serving"])
     sus = run_sustained(n=max(n, 12), rate=8.0, seed=0)
 
@@ -106,6 +114,14 @@ def collect(n: int) -> tuple[int, dict]:
             "planahead_replans": sus["open"]["planahead_replans"],
             "planahead_hidden_s": sus["open"]["planahead_hidden_s"],
             "bitwise_identical": sus["gates"]["bitwise_identical"],
+        },
+        "obs": {
+            "tracing_off_tok_s": er["obs_tracing_off"]["token_throughput"],
+            "tracing_on_tok_s": er["obs_tracing_on"]["token_throughput"],
+            "tracing_overhead": er["obs_tracing_on"]["tracing_overhead"],
+            "reconcile_ok": er["obs_tracing_on"]["reconcile_ok"],
+            "trace_events": er["obs_tracing_on"]["trace_events"],
+            "trace_dropped": er["obs_tracing_on"]["trace_dropped"],
         },
     }
     return rc, summary
@@ -150,6 +166,16 @@ def gate(summary: dict, baseline: dict) -> int:
     if not s_srv.get("bitwise_identical", False):
         print("[bench_trend] FAIL: plan-ahead changed greedy outputs in the "
               "sustained-load smoke")
+        fails += 1
+    s_obs = summary.get("obs", {})
+    if s_obs.get("tracing_overhead", 0.0) > TRACING_OVERHEAD_TOL:
+        print(f"[bench_trend] FAIL: tracing overhead "
+              f"{s_obs['tracing_overhead']:.2%} exceeds "
+              f"{TRACING_OVERHEAD_TOL:.0%} of untraced tok/s")
+        fails += 1
+    if not s_obs.get("reconcile_ok", False):
+        print("[bench_trend] FAIL: span timeline disagrees with EngineStats "
+              "(reconcile) in the tracing smoke")
         fails += 1
     if not fails:
         print(f"[bench_trend] OK: bubble {s_eng['bubble_fraction']} "

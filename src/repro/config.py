@@ -312,6 +312,17 @@ class EngineConfig:
     # Force a host request into batch-1 after this many consecutive skips
     # (anti-starvation override of the no-bubble inequalities).
     starvation_limit: int = 8
+    # Structured engine tracing (repro.obs): when on, a monotonic-clock
+    # span tracer records the plan -> launch -> join timeline (per-lane
+    # dispatch windows, copy streams, planner thread, request lifecycles)
+    # for Perfetto export and stats reconciliation.  Off by default; every
+    # call site guards on the tracer, so greedy outputs are bitwise
+    # identical tracing on vs off.
+    tracing: bool = False
+    # Tracer ring-buffer capacity in events.  When full the OLDEST events
+    # are overwritten (counted in SpanTracer.dropped) — emission never
+    # blocks the engine thread.
+    trace_buffer: int = 65536
     # Hardware profile name from roofline/hw.py used by the perf model.
     hw_profile: str = "tpu_v5e"
     host_threads: int = 1

@@ -58,6 +58,7 @@ from repro.core.request import Request, RequestState
 from repro.core.scheduler import BatchPlan, NeoScheduler, PoolView, SchedQueues
 from repro.core.transfer import TransferEngine
 from repro.models.api import get_model
+from repro.obs.tracer import SpanTracer
 
 PAGED_FAMILIES = ("dense", "moe", "vlm")
 
@@ -204,6 +205,12 @@ class NeoEngine:
         self._next_rid = 0
         self.requests: Dict[int, Request] = {}
         self.stats = EngineStats()
+        # Structured tracing (repro.obs): off by default.  Every call site
+        # guards on ``tracer is not None`` so the traced and untraced paths
+        # run the same computation — greedy outputs are bitwise identical.
+        self.tracer: Optional[SpanTracer] = None
+        if engine_cfg.tracing:
+            self.attach_tracer(SpanTracer(engine_cfg.trace_buffer))
         self._journal: List[Dict[str, Any]] = []
         self.clock = 0.0  # virtual clock (arrival bookkeeping in offline runs)
         # plan-ahead: a single planner thread (lazily started) builds the
@@ -212,6 +219,18 @@ class NeoEngine:
         # speculation as (predicted_signature, shadow_state, shadows, future)
         self._planner: Optional[ThreadPoolExecutor] = None
         self._spec: Optional[Tuple[Any, SchedQueues, Dict[int, Request], Any]] = None
+
+    def attach_tracer(self, tracer: Optional[SpanTracer]) -> None:
+        """(Re)wire ``tracer`` through every instrumented component — also
+        used by benchmarks that reset stats after a warmup phase and need a
+        fresh span timeline that stays reconcilable against them."""
+        self.tracer = tracer
+        self.scheduler.tracer = tracer
+        if self.paged:
+            self.executor.tracer = tracer
+            self.transfer.tracer = tracer
+            if self.prefix_cache is not None:
+                self.prefix_cache.tracer = tracer
 
     # ------------------------------------------------------------------
     # submission
@@ -254,6 +273,10 @@ class NeoEngine:
                 "out_tokens": req.out_tokens,  # aliased: auto-updates
             }
         )
+        if self.tracer is not None:
+            self.tracer.async_begin(rid, "req", args={
+                "prompt_len": len(req.prompt),
+                "max_new_tokens": req.max_new_tokens})
         return rid
 
     def offer(
@@ -271,6 +294,9 @@ class NeoEngine:
         closed-loop everything-is-admitted behavior."""
         if not self.scheduler.has_capacity():
             self.stats.rejected_requests += 1
+            if self.tracer is not None:
+                self.tracer.instant("engine", "reject",
+                                    {"reason": "max_waiting"})
             return None
         return self.submit(prompt, max_new_tokens, arrival_time=arrival_time,
                            eos_token=eos_token, extras=extras)
@@ -300,6 +326,9 @@ class NeoEngine:
             sched.cpu_runq.remove(req)
         req.state = RequestState.ABORTED
         req.finish_time = self.clock
+        if self.tracer is not None:
+            self.tracer.async_end(rid, "req", args={
+                "outcome": "cancelled", "tokens": len(req.out_tokens)})
         return True
 
     # ------------------------------------------------------------------
@@ -345,10 +374,15 @@ class NeoEngine:
             req.first_token_time = now
         emitted.append((req.rid, tok))
         self.stats.tokens_out += 1
+        if self.tracer is not None:
+            self.tracer.async_instant(req.rid, "tok", args={"token": tok})
 
     def _finish(self, req: Request, now: float) -> None:
         req.state = RequestState.FINISHED
         req.finish_time = now
+        if self.tracer is not None:
+            self.tracer.async_end(req.rid, "req", args={
+                "outcome": "finished", "tokens": len(req.out_tokens)})
         if self.paged:
             if req.pages:
                 pool = self.pool.device if req.location == "gpu" else self.pool.host
@@ -540,14 +574,20 @@ class NeoEngine:
         shadow = self._build_shadow(plan)
         if shadow is None:
             self.stats.planahead_skipped += 1
+            if self.tracer is not None:
+                self.tracer.instant("engine", "plan_skip")
             return
         st, shadows, pools_pred, sig_pred = shadow
         sched = self.scheduler
+        tr = self.tracer
 
         def _plan_spec():
             t0 = time.perf_counter()
             p = sched.plan(pools_pred, state=st)
-            return p, time.perf_counter() - t0
+            dur = time.perf_counter() - t0
+            if tr is not None:
+                tr.emit("planner", "spec_plan", t0, t0 + dur, {"dur": dur})
+            return p, dur
 
         if self._planner is None:
             self._planner = ThreadPoolExecutor(
@@ -562,16 +602,22 @@ class NeoEngine:
         if spec is None:
             return None, False
         sig_pred, st, shadows, fut = spec
+        tr = self.tracer
         t0 = time.perf_counter()
+        err = False
         try:
             plan_s, dur = fut.result()
         except Exception:
-            self.stats.plan_busy_time += time.perf_counter() - t0
-            self.stats.planahead_replans += 1
-            return None, True
+            err = True
         # harvest wait (planner still running = the rare case where planning
         # outlasted the lanes) is genuine critical-path plan time
-        self.stats.plan_busy_time += time.perf_counter() - t0
+        wait = time.perf_counter() - t0
+        self.stats.plan_busy_time += wait
+        if tr is not None:
+            tr.emit("engine", "plan_harvest", t0, t0 + wait, {"dur": wait})
+        if err:
+            self.stats.planahead_replans += 1
+            return None, True
         if self._signature() != sig_pred:
             self.stats.planahead_replans += 1
             return None, True
@@ -615,6 +661,8 @@ class NeoEngine:
         self.stats.planahead_hidden_time += dur
         self.stats.pipeline_overlap_time += dur
         self.stats.pipeline_ideal_time += dur
+        if tr is not None:
+            tr.instant("engine", "plan_adopt", {"dur": dur})
         return plan, False
 
     # ------------------------------------------------------------------
@@ -642,6 +690,9 @@ class NeoEngine:
             plan = self.scheduler.plan(self._pool_view())
             dt = time.perf_counter() - p0
             self.stats.plan_busy_time += dt
+            if self.tracer is not None:
+                self.tracer.emit("engine", "plan_fresh", p0, p0 + dt,
+                                 {"dur": dt, "hideable": replanned})
             if replanned:
                 # a falsified speculation means this planning time WAS
                 # hideable (the planner thread sat idle while the previous
@@ -691,6 +742,14 @@ class NeoEngine:
                 if self.host_attn else 0.0,
                 pipelined=self.engine_cfg.pipeline and plan.mode != "serial",
             )
+        if self.tracer is not None:
+            self.tracer.emit("engine", "step", t0, time.perf_counter(),
+                             {"iter": self.stats.iterations})
+            self.tracer.counter("queues", self.scheduler.queue_depths())
+            if self.paged:
+                self.tracer.counter("pool_free", {
+                    "device": self.pool.device.free_pages,
+                    "host": self.pool.host.free_pages})
         return emitted
 
     # -- paged families ------------------------------------------------------
@@ -698,6 +757,12 @@ class NeoEngine:
         # "serial"-mode plans (strawman #1) must execute without overlap by
         # definition; everything else pipelines when enabled.
         pipelined = self.engine_cfg.pipeline and plan.mode != "serial"
+        tr = self.tracer
+        it = self.stats.iterations
+        if tr is not None:
+            # copy handles launched this step stamp their spans with the
+            # iteration id, pairing them with the dispatch window below
+            self.transfer.trace_iter = it
 
         # ==== LAUNCH phase ==================================================
         # recompute preemption (both pools full): drop KV, requeue
@@ -922,6 +987,12 @@ class NeoEngine:
             dev_windows.append((t0, time.perf_counter()))
             self.stats.device_busy_time += dev_windows[-1][1] - t0
             self.stats.lane_add("prefill", dev_windows[-1][1] - t0)
+            if tr is not None:
+                tr.emit("device", "prefill", t0, dev_windows[-1][1],
+                        {"iter": it, "rows": len(plan.prefill)})
+                for r in plan.prefill:
+                    tr.async_begin(r.rid, "prefill", t=t0)
+                    tr.async_end(r.rid, "prefill", t=dev_windows[-1][1])
             # computed prefill tokens: prefix-cache hits skip the cached part
             self.stats.prefill_tokens += sum(r.suffix_len for r in plan.prefill)
             for i, r in enumerate(plan.prefill):
@@ -942,6 +1013,9 @@ class NeoEngine:
                     dev_windows.append((t0, time.perf_counter()))
                     self.stats.device_busy_time += dev_windows[-1][1] - t0
                     self.stats.lane_add("batch0", dev_windows[-1][1] - t0)
+                    if tr is not None:
+                        tr.emit("device", "batch0", t0, dev_windows[-1][1],
+                                {"iter": it, "rows": len(rows0)})
                 lane_windows = [(0.0, 0.0)] * n_lanes
                 lane_logits: List[Optional[np.ndarray]] = [None] * n_lanes
                 inline_hb = 0.0
@@ -970,6 +1044,13 @@ class NeoEngine:
                 # reduces exactly to the pairwise window intersection.
                 for li, w in enumerate(lane_windows):
                     self.stats.lane_add(f"host{li}", w[1] - w[0])
+                    if tr is not None:
+                        a: Dict[str, Any] = {"iter": it,
+                                             "rows": len(lane_rows[li])}
+                        if li == inline_idx:
+                            a["inline"] = True
+                            a["host_busy"] = inline_hb
+                        tr.emit(f"host{li}", "lane", w[0], w[1], a)
                 interval_lanes: List[List[Tuple[float, float]]] = []
                 if dev_windows:
                     interval_lanes.append(list(dev_windows))
@@ -1020,6 +1101,9 @@ class NeoEngine:
                 dev_windows.append((t0, time.perf_counter()))
                 self.stats.device_busy_time += dev_windows[-1][1] - t0
                 self.stats.lane_add("serial", dev_windows[-1][1] - t0)
+                if tr is not None:
+                    tr.emit("device", "serial", t0, dev_windows[-1][1],
+                            {"iter": it, "rows": len(rows)})
                 row_logits = list(logits)
 
             self.stats.offloaded_decodes += sum(host_flags)
@@ -1032,7 +1116,11 @@ class NeoEngine:
         # gpu_only swap-outs whose victims do not decode this iteration) so
         # every step ends with pools fully consistent
         if pipelined:
+            d0 = time.perf_counter() if tr is not None else 0.0
             self.transfer.drain()
+            if tr is not None:
+                tr.emit("engine", "drain", d0, time.perf_counter(),
+                        {"iter": it})
             # bytes hidden under compute: copy-window overlap with this
             # step's dispatch window (page-table building + prefill + both
             # decode lanes)
@@ -1040,6 +1128,9 @@ class NeoEngine:
             lanes_end = max((w[1] for w in lane_windows), default=None)
             win_end = max(filter(None, (dev_end, lanes_end)), default=None)
             if win_end is not None:
+                if tr is not None:
+                    tr.emit("engine", "dispatch", dispatch_t0, win_end,
+                            {"iter": it})
                 for h in out_handles + in_handles:
                     self.stats.swap_hidden_bytes += int(
                         h.nbytes * h.hidden_fraction(dispatch_t0, win_end))

@@ -140,6 +140,9 @@ class PagedExecutor:
         # prefix-partials callback (engine thread only; lane callbacks own
         # their separate per-lane state dicts)
         self._cb_prefix_state: Dict[str, np.ndarray] = {}
+        # tracing (repro.obs): set by the engine when EngineConfig.tracing
+        # is on; host-attention callbacks and lane threads emit spans
+        self.tracer = None
 
     # ------------------------------------------------------------------
     # host attention callback (one per layer, ordered)
@@ -149,7 +152,9 @@ class PagedExecutor:
         layer = int(layer)
         if st["host_rows"].size == 0:
             return np.zeros(q.shape, np.float32)
-        return self.host.run_layer(
+        tr = self.tracer
+        t0 = time.perf_counter() if tr is not None else 0.0
+        out = self.host.run_layer(
             layer,
             np.asarray(q),
             np.asarray(k_new),
@@ -161,6 +166,10 @@ class PagedExecutor:
             offsets=st["offsets"],
             window=int(st["window"][0]) if "window" in st else 0,
         )
+        if tr is not None:
+            tr.emit("hostattn-b0", f"L{layer}", t0, time.perf_counter(),
+                    {"rows": int(st["host_rows"].size)})
+        return out
 
     # ------------------------------------------------------------------
     # decode step graph
@@ -330,7 +339,9 @@ class PagedExecutor:
         layer = int(layer)
         if st["host_rows"].size == 0:
             return np.zeros(q.shape, np.float32)
-        return self.host.run_layer(
+        tr = self.tracer
+        t0 = time.perf_counter() if tr is not None else 0.0
+        out = self.host.run_layer(
             layer,
             np.asarray(q),
             np.asarray(k_new),
@@ -342,6 +353,10 @@ class PagedExecutor:
             offsets=st["offsets"],
             window=int(st["window"][0]) if "window" in st else 0,
         )
+        if tr is not None:
+            tr.emit(f"hostattn-lane{lane}", f"L{layer}", t0,
+                    time.perf_counter(), {"rows": int(st["host_rows"].size)})
+        return out
 
     def _build_decode_lane(self, lane: int):
         """Fused decode graph for an all-host-rows lane: the per-layer pre
@@ -455,11 +470,20 @@ class PagedExecutor:
         """
 
         def run_lane() -> Tuple[np.ndarray, Tuple[float, float]]:
+            tr = self.tracer
+            track = f"host{lane - 1}"  # engine lane index li = lane - 1
             t0 = time.perf_counter()
             if pre is not None:
+                j0 = time.perf_counter() if tr is not None else 0.0
                 pre()
+                if tr is not None:
+                    tr.emit(track, "join_out", j0, time.perf_counter())
+            c0 = time.perf_counter() if tr is not None else 0.0
             out = self.decode_host_lane(rows, window, lane=lane)
-            return out, (t0, time.perf_counter())
+            end = time.perf_counter()
+            if tr is not None:
+                tr.emit(track, "compute", c0, end, {"rows": len(rows)})
+            return out, (t0, end)
 
         return self._lane_pool.submit(run_lane)
 
@@ -666,8 +690,14 @@ class PagedExecutor:
     # -- zero-copy host-prefix path ------------------------------------------
     def _host_prefix_cb(self, layer, q):
         st = self._cb_prefix_state
-        return self.host.prefix_partials(
+        tr = self.tracer
+        t0 = time.perf_counter() if tr is not None else 0.0
+        out = self.host.prefix_partials(
             int(layer), np.asarray(q), st["tables"], st["prefix_lens"])
+        if tr is not None:
+            tr.emit("hostattn-prefix", f"L{int(layer)}", t0,
+                    time.perf_counter(), {"rows": int(st["tables"].shape[0])})
+        return out
 
     def _build_prefill_host_prefix(self, B: int, S: int):
         model = self.model

@@ -52,6 +52,7 @@ Invariants (see ROADMAP architecture note):
 from __future__ import annotations
 
 import heapq
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -154,6 +155,10 @@ class PrefixCache:
         self.root = RadixNode([], [], "gpu", None)
         self.stats = PrefixCacheStats()
         self._clock = 0
+        # tracing (repro.obs): set by the engine when EngineConfig.tracing
+        # is on; acquire()/make_room() run on the engine thread only, so
+        # the "prefix" track never carries overlapping spans
+        self.tracer = None
         # retractable deltas of the most recent acquire() (engine deferral
         # unwinding; see retract_acquire)
         self._last_acquire: Optional[Dict[str, int]] = None
@@ -442,6 +447,17 @@ class PrefixCache:
     # acquire (engine thread, at prefill dispatch)
     # ------------------------------------------------------------------
     def acquire(self, tokens: Sequence[int], target: str) -> Tuple[List[int], Optional[int], int]:
+        tr = self.tracer
+        if tr is None:
+            return self._acquire_impl(tokens, target)
+        t0 = time.perf_counter()
+        shared, cow, cached_len = self._acquire_impl(tokens, target)
+        tr.emit("prefix", "acquire", t0, time.perf_counter(),
+                {"tokens": len(tokens), "cached_len": cached_len,
+                 "cow": cow is not None, "target": target})
+        return shared, cow, cached_len
+
+    def _acquire_impl(self, tokens: Sequence[int], target: str) -> Tuple[List[int], Optional[int], int]:
         """Pin the longest cached prefix of ``tokens`` in the ``target`` pool.
 
         Returns ``(shared_pages, cow_page, cached_len)``: ``shared_pages``
@@ -801,7 +817,14 @@ class PrefixCache:
         LRU cache nodes as needed.  Device evictions demote to the host pool
         through the TransferEngine when it has room; host evictions (and
         device evictions with a full host pool) drop the pages outright."""
+        tr = self.tracer
+        if tr is None:
+            self._make_room(location, n)
+            return
+        t0 = time.perf_counter()
         self._make_room(location, n)
+        tr.emit("prefix", "make_room", t0, time.perf_counter(),
+                {"location": location, "need": n})
 
     def _make_room(self, location: str, n: int, exclude: Optional[RadixNode] = None) -> None:
         # Victims pop off the per-location LRU heap (lazy deletion: an entry

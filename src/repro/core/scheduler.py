@@ -26,6 +26,7 @@ Policies:
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Iterable, List, Optional, Tuple
@@ -197,6 +198,11 @@ class NeoScheduler:
         self.gpu_runq: List[Request] = []
         self.cpu_runq: List[Request] = []
         self.policy = engine_cfg.policy
+        # tracing (repro.obs): set by the engine when EngineConfig.tracing
+        # is on.  plan() calls are globally serialized (the engine harvests
+        # the planner future before planning fresh), so one "sched" track
+        # never carries overlapping spans.
+        self.tracer = None
         if not cfg.supports_offload and self.policy != "gpu_only":
             # NEO degrades to non-offloading mode when there is nothing to
             # offload (attention-free archs — DESIGN.md §Arch-applicability).
@@ -294,6 +300,8 @@ class NeoScheduler:
         procedure side-effect-free with respect to the live queues, which is
         what the engine's plan-ahead thread runs against.
         """
+        tr = self.tracer
+        t0 = time.perf_counter() if tr is not None else 0.0
         st = self if state is None else state
         self._admission_control(pools, st)
         if self.policy == "gpu_only":
@@ -303,6 +311,9 @@ class NeoScheduler:
         else:
             plan = self._plan_neo(pools, st)
         self._annotate_lanes(plan)
+        if tr is not None:
+            tr.emit("sched", "plan", t0, time.perf_counter(),
+                    {"mode": plan.mode, "speculative": state is not None})
         return plan
 
     # ------------------------------------------------------------------

@@ -86,6 +86,9 @@ class TransferHandle:
         self.kind = kind  # "out" | "in"
         self.req = req
         self.nbytes = nbytes
+        # engine iteration that launched this swap (tracing: pairs the
+        # worker's copy span with that iteration's dispatch window)
+        self.trace_iter = 0
         self.error: Optional[BaseException] = None
         self._event = threading.Event()
         self._apply: Optional[Callable[[], None]] = None  # staged device write
@@ -129,6 +132,10 @@ class TransferEngine:
         self.pool = pool
         self.stats = TransferStats()
         self._lock = threading.Lock()
+        # tracing (repro.obs): set by the engine when EngineConfig.tracing
+        # is on; workers emit one copy span per job on their stream's track
+        self.tracer = None
+        self.trace_iter = 0
         self.per_direction = per_direction
         streams = ("out", "in") if per_direction else ("all",)
         self._queues: Dict[str, "queue.Queue[Optional[_Job]]"] = {
@@ -169,6 +176,13 @@ class TransferEngine:
                 self.stats.busy_time += t1 - t0
                 self.stats.busy_by_stream[stream] = (
                     self.stats.busy_by_stream.get(stream, 0.0) + (t1 - t0))
+            tr = self.tracer
+            if tr is not None:
+                # emitted BEFORE the event fires so the span exists by the
+                # time any join on this handle returns
+                tr.emit(f"copy-{stream}", job.handle.kind, t0, t1,
+                        {"nbytes": job.handle.nbytes,
+                         "iter": job.handle.trace_iter})
             job.handle._event.set()
 
     # ------------------------------------------------------------------
@@ -199,6 +213,7 @@ class TransferEngine:
         L = host.num_layers
         nbytes = k_np.nbytes + v_np.nbytes
         handle = TransferHandle("out", req, nbytes)
+        handle.trace_iter = self.trace_iter
         dst_idx = np.asarray(new_pages, np.int32)
 
         def copy() -> None:
@@ -233,6 +248,7 @@ class TransferEngine:
         req.location = "gpu"
         nbytes = 2 * host.k[:, src_idx[:1]].nbytes * len(old_pages)
         handle = TransferHandle("in", req, nbytes)
+        handle.trace_iter = self.trace_iter
         staged = {}
 
         def gather() -> None:
@@ -270,6 +286,9 @@ class TransferEngine:
         dst_pool = self.pool.pool(dst)
         if not pages:
             return []
+        tr = self.tracer
+        t0c = time.perf_counter() if tr is not None else 0.0
+        nbytes = 0
         k_np, v_np = src_pool.read_pages(pages)
         new_pages = dst_pool.alloc(len(pages))
         if dst == "cpu":
@@ -286,6 +305,9 @@ class TransferEngine:
                 else:
                     self.stats.bytes_in += nbytes
             self.pool.add_swap_bytes(nbytes)
+        if tr is not None:
+            tr.emit("copy-sync", f"{src}->{dst}", t0c, time.perf_counter(),
+                    {"pages": len(pages), "nbytes": nbytes})
         return new_pages
 
     # ------------------------------------------------------------------

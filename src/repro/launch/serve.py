@@ -29,6 +29,8 @@ import numpy as np
 from repro.config import EngineConfig
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.core.engine import NeoEngine
+from repro.core.request import RequestState
+from repro.obs.reconcile import reconcile
 from repro.serving.metrics import RequestRecord, ServeMetrics
 from repro.serving.traces import get_trace, save_trace
 
@@ -108,6 +110,9 @@ def run_trace(engine: NeoEngine, trace, *, vocab: int, seed: int = 0,
                 rec.first_token_time = done_now
             if req.finish_time is not None and rec.finish_time is None:
                 rec.finish_time = done_now
+                rec.status = ("cancelled"
+                              if req.state == RequestState.ABORTED
+                              else "finished")
         if not emitted and i >= len(pending) and engine.scheduler.num_queued == 0:
             break
         if not emitted and i < len(pending):
@@ -149,7 +154,11 @@ def run_online(engine: NeoEngine, trace, *, vocab: int, seed: int = 0,
                                arrival_time=tr.arrival_time, extras=extras)
             i += 1
             if rid is None:
-                continue  # rejected at admission; no retry
+                # rejected at admission; no retry — keep a terminal record
+                # so the request ledger still accounts for it
+                metrics.record_rejection(tr.arrival_time, tr.prompt_len,
+                                         tr.output_len, "max_waiting")
+                continue
             records[rid] = RequestRecord(rid, tr.arrival_time, tr.prompt_len,
                                          tr.output_len)
             metrics.records.append(records[rid])
@@ -169,6 +178,9 @@ def run_online(engine: NeoEngine, trace, *, vocab: int, seed: int = 0,
                 streamed[rid] = len(req.out_tokens)
             if req.finish_time is not None and rec.finish_time is None:
                 rec.finish_time = done_now
+                rec.status = ("cancelled"
+                              if req.state == RequestState.ABORTED
+                              else "finished")
         if not emitted and i >= len(pending) and engine.scheduler.num_queued == 0:
             break
         if not emitted and i < len(pending):
@@ -331,6 +343,19 @@ def main(argv=None) -> int:
                          "misses the SLO, or goodput regresses")
     ap.add_argument("--save-trace", default="",
                     help="write the (clamped) trace as JSONL for replay")
+    ap.add_argument("--trace-out", default="",
+                    help="enable structured engine tracing and write the "
+                         "Chrome trace-event JSON (Perfetto-loadable) here; "
+                         "the counter time-series lands next to it as "
+                         "<stem>.counters.jsonl unless --counters-out is "
+                         "given")
+    ap.add_argument("--counters-out", default="",
+                    help="JSONL sink for the tracer's counter time-series "
+                         "(queue depths, free pages); requires --trace-out")
+    ap.add_argument("--require-reconcile", action="store_true",
+                    help="exit nonzero unless reconcile() — the span-vs-"
+                         "EngineStats accounting audit — passes (implies "
+                         "tracing; use with --trace-out)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -352,6 +377,7 @@ def main(argv=None) -> int:
         return 0
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tracing = bool(args.trace_out) or args.require_reconcile
     ecfg = EngineConfig(
         device_pool_pages=args.device_pages,
         host_pool_pages=args.host_pages,
@@ -363,6 +389,7 @@ def main(argv=None) -> int:
         prefix_cache=args.prefix_cache,
         planahead=not args.no_planahead,
         max_waiting=args.max_waiting,
+        tracing=tracing,
         seed=args.seed,
     )
     open_loop = args.arrivals != "closed"
@@ -387,6 +414,26 @@ def main(argv=None) -> int:
     engine.close()
     print(json.dumps(m.summary(), indent=1))
     print("scheduler modes:", m.mode_counts)
+    if engine.tracer is not None:
+        if args.trace_out:
+            trace_doc = engine.tracer.export_chrome(args.trace_out)
+            print(f"[serve] wrote {len(trace_doc['traceEvents'])} trace "
+                  f"events to {args.trace_out} "
+                  f"(recorded={engine.tracer.total} "
+                  f"dropped={engine.tracer.dropped})")
+            counters_out = args.counters_out
+            if not counters_out:
+                stem = args.trace_out
+                if stem.endswith(".json"):
+                    stem = stem[: -len(".json")]
+                counters_out = stem + ".counters.jsonl"
+            n_c = engine.tracer.export_counters_jsonl(counters_out)
+            print(f"[serve] wrote {n_c} counter samples to {counters_out}")
+        report = reconcile(engine.tracer, engine.stats)
+        print(report.summary())
+        if args.require_reconcile and not report.ok:
+            print("[serve] FAIL: span timeline disagrees with EngineStats")
+            return 1
     if args.require_hits and m.prefix_hit_rate <= 0.0:
         print("[serve] FAIL: prefix-cache hit rate is 0 on a shared-prefix trace")
         return 1

@@ -14,10 +14,21 @@ against SLO attainment.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import numpy as np
+
+
+def _finite(x: float, nd: int) -> Optional[float]:
+    """Round ``x`` for the summary dict, mapping non-finite values (no
+    finished requests -> nan percentiles) to ``None`` so ``json.dump``
+    emits valid JSON (nan is rejected by strict parsers and
+    ``allow_nan=False``)."""
+    if not math.isfinite(x):
+        return None
+    return round(x, nd)
 
 
 @dataclass
@@ -28,6 +39,13 @@ class RequestRecord:
     output_len: int
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    # terminal state: "active" (still in flight / never finished),
+    # "finished", "rejected" (admission control bounced the offer; rid is
+    # -1 — the engine never assigned one), or "cancelled" (client
+    # departure mid-flight).  Rejected/cancelled records keep goodput
+    # denominators and the request-lifecycle traces honest.
+    status: str = "active"
+    reject_reason: Optional[str] = None
 
     @property
     def latency(self) -> Optional[float]:
@@ -112,7 +130,56 @@ class ServeMetrics:
     # ------------------------------------------------------------------
     @property
     def finished(self) -> List[RequestRecord]:
-        return [r for r in self.records if r.finish_time is not None]
+        """Completed requests (cancelled ones record a departure time for
+        bookkeeping but never count as finished work)."""
+        return [r for r in self.records
+                if r.finish_time is not None and r.status != "cancelled"]
+
+    @property
+    def terminal_counts(self) -> Dict[str, int]:
+        """Every record bucketed by terminal state — the goodput
+        denominator story: finished + active + rejected + cancelled ==
+        len(records)."""
+        counts = {"finished": 0, "active": 0, "rejected": 0, "cancelled": 0}
+        for r in self.records:
+            if r.status in ("rejected", "cancelled"):
+                counts[r.status] += 1
+            elif r.finish_time is not None:
+                counts["finished"] += 1
+            else:
+                counts["active"] += 1
+        return counts
+
+    @property
+    def reject_reasons(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for r in self.records:
+            if r.status == "rejected":
+                key = r.reject_reason or "unknown"
+                out[key] = out.get(key, 0) + 1
+        return out
+
+    def record_rejection(self, arrival_time: float, prompt_len: int,
+                         output_len: int,
+                         reason: str = "max_waiting") -> RequestRecord:
+        """Record an admission-rejected offer (rid -1: the engine never
+        assigned one) so it stops vanishing from the request ledger."""
+        rec = RequestRecord(-1, arrival_time, prompt_len, output_len,
+                            status="rejected", reject_reason=reason)
+        self.records.append(rec)
+        return rec
+
+    def record_cancelled(self, rid: int,
+                         finish_time: Optional[float] = None) -> bool:
+        """Mark the record for ``rid`` as cancelled (client departure);
+        returns False when no such record exists."""
+        for r in self.records:
+            if r.rid == rid and r.status not in ("finished", "rejected"):
+                r.status = "cancelled"
+                if finish_time is not None and r.finish_time is None:
+                    r.finish_time = finish_time
+                return True
+        return False
 
     @property
     def total_output_tokens(self) -> int:
@@ -187,13 +254,13 @@ class ServeMetrics:
             "requests": len(self.finished),
             "throughput_tok_s": round(self.throughput, 2),
             "token_throughput_tok_s": round(self.token_throughput, 2),
-            "per_token_latency_ms": round(self.per_token_latency() * 1e3, 2),
-            "p99_per_token_latency_ms": round(self.per_token_latency(99) * 1e3, 2),
-            "ttft_s": round(self.ttft(), 3),
-            "ttft_p50_ms": round(self.ttft(50) * 1e3, 2),
-            "ttft_p99_ms": round(self.ttft(99) * 1e3, 2),
-            "tpot_p50_ms": round(self.tpot(50) * 1e3, 2),
-            "tpot_p99_ms": round(self.tpot(99) * 1e3, 2),
+            "per_token_latency_ms": _finite(self.per_token_latency() * 1e3, 2),
+            "p99_per_token_latency_ms": _finite(self.per_token_latency(99) * 1e3, 2),
+            "ttft_s": _finite(self.ttft(), 3),
+            "ttft_p50_ms": _finite(self.ttft(50) * 1e3, 2),
+            "ttft_p99_ms": _finite(self.ttft(99) * 1e3, 2),
+            "tpot_p50_ms": _finite(self.tpot(50) * 1e3, 2),
+            "tpot_p99_ms": _finite(self.tpot(99) * 1e3, 2),
             "makespan_s": round(self.makespan, 2),
             "offload_frac": round(
                 self.offloaded_decodes
@@ -235,4 +302,8 @@ class ServeMetrics:
             "plan_busy_s": round(self.plan_busy_time, 3),
             "planahead_hidden_s": round(self.planahead_hidden_time, 3),
             "rejected_requests": self.rejected_requests,
+            # terminal accounting: every offered request lands in exactly
+            # one bucket (rejections/cancellations no longer vanish)
+            "terminal_counts": self.terminal_counts,
+            "reject_reasons": self.reject_reasons,
         }
