@@ -4,7 +4,7 @@ perf-trajectory regression vs the checked-in baseline.
 
 This is the CI ``bench-trend`` job's entry point (the summary file is
 uploaded as a build artifact, so the trajectory is inspectable per commit).
-Schema (``neo-bench-trend/v4``; documented in ``benchmarks/README.md``):
+Schema (``neo-bench-trend/v5``; documented in ``benchmarks/README.md``):
 
 * ``engine.*_tok_s``      — smoke token throughputs (RECORDED, not gated:
   they are wall-times of whatever machine ran the job);
@@ -30,7 +30,12 @@ Schema (``neo-bench-trend/v4``; documented in ``benchmarks/README.md``):
   the tracer must stay out of the engine's way);
 * ``obs.reconcile_ok`` — the span timeline reproduces EngineStats' lane
   busy / overlap / bubble / swap-hidden / plan-ahead accounting (GATED
-  true: the trace is a standing audit of every other gated number).
+  true: the trace is a standing audit of every other gated number);
+* ``sharded.*`` (v5) — the tensor-parallel A/B (``engine_sharded.py``,
+  TP=1 vs TP=2 on a fake-device CPU mesh): ``tp2_bitwise_ok`` (GATED:
+  gather-TP may never change greedy outputs), ``swap_bytes_equal`` and
+  ``stream_split_exact`` (GATED: per-shard copy streams must partition
+  the TP=1 byte totals exactly), plus the recorded per-shard byte split.
 
 ``--write-baseline`` refreshes ``benchmarks/BENCH_baseline.json`` (commit
 the result deliberately — that is the trajectory being gated).
@@ -45,7 +50,7 @@ import sys
 
 from benchmarks.common import FIG_DIR, HERE
 
-SCHEMA = "neo-bench-trend/v4"
+SCHEMA = "neo-bench-trend/v5"
 REPO_ROOT = os.path.dirname(HERE)
 BASELINE_PATH = os.path.join(HERE, "BENCH_baseline.json")
 SUMMARY_PATH = os.path.join(REPO_ROOT, "BENCH_engine.json")
@@ -65,7 +70,7 @@ def _load(name: str) -> dict:
 def collect(n: int) -> tuple[int, dict]:
     """Run the smokes (micro-batch, mixed-lane, prefix-cache) and collate
     their figure JSONs into the trend summary.  Returns (rc, summary)."""
-    from benchmarks import engine_real, prefix_cache
+    from benchmarks import engine_real, engine_sharded, prefix_cache
     from repro.launch.serve import run_sustained
 
     rc = 0
@@ -73,10 +78,12 @@ def collect(n: int) -> tuple[int, dict]:
     rc |= engine_real.main(["--mixed-lane-only"])
     rc |= engine_real.main(["--obs-only", "--n", str(n)])
     rc |= prefix_cache.main(["--quick", "--host-serving"])
+    rc |= engine_sharded.main([])
     sus = run_sustained(n=max(n, 12), rate=8.0, seed=0)
 
     er = _load("engine_real.json")
     pc = _load("prefix_cache.json")
+    sh = _load("engine_sharded.json")
     mb_on = er["fastdecode_mb_on"]
     mb_off = er["fastdecode_mb_off"]
     mixed = er["mixed_pipelined"]
@@ -123,6 +130,16 @@ def collect(n: int) -> tuple[int, dict]:
             "trace_events": er["obs_tracing_on"]["trace_events"],
             "trace_dropped": er["obs_tracing_on"]["trace_dropped"],
         },
+        "sharded": {
+            "tp2_bitwise_ok": sh["tp2_bitwise_ok"],
+            "swap_bytes_equal": sh["swap_bytes_equal"],
+            "stream_split_exact": sh["stream_split_exact"],
+            "bytes_out": sh["bytes_out"],
+            "bytes_in": sh["bytes_in"],
+            "tp2_copy_streams": sh["tp2_copy_streams"],
+            "tp1_tok_s": sh["tp1_tok_s"],
+            "tp2_tok_s": sh["tp2_tok_s"],
+        },
     }
     return rc, summary
 
@@ -166,6 +183,19 @@ def gate(summary: dict, baseline: dict) -> int:
     if not s_srv.get("bitwise_identical", False):
         print("[bench_trend] FAIL: plan-ahead changed greedy outputs in the "
               "sustained-load smoke")
+        fails += 1
+    s_sh = summary.get("sharded", {})
+    if not s_sh.get("tp2_bitwise_ok", False):
+        print("[bench_trend] FAIL: TP=2 greedy outputs diverge from TP=1 "
+              "in the sharded smoke")
+        fails += 1
+    if not s_sh.get("swap_bytes_equal", False):
+        print("[bench_trend] FAIL: TP=2 swap byte totals differ from TP=1 "
+              "in the sharded smoke")
+        fails += 1
+    if not s_sh.get("stream_split_exact", False):
+        print("[bench_trend] FAIL: per-shard copy-stream bytes do not "
+              "partition the totals in the sharded smoke")
         fails += 1
     s_obs = summary.get("obs", {})
     if s_obs.get("tracing_overhead", 0.0) > TRACING_OVERHEAD_TOL:

@@ -327,6 +327,11 @@ class EngineConfig:
     hw_profile: str = "tpu_v5e"
     host_threads: int = 1
     decode_sample: str = "greedy"  # greedy | temperature
+    # Tensor-parallel shard count (gather-TP over the mesh "model" axis).
+    # tp=1 is the single-device engine, byte-for-byte; tp>1 shards the fused
+    # decode/prefill graphs, the device KV pool, the host-attention KV heads
+    # and the copy streams while the scheduler stays device-count-agnostic.
+    tp: int = 1
     seed: int = 0
 
 

@@ -47,6 +47,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.config import ArchConfig, EngineConfig
 from repro.core.executor import ContiguousExecutor, PagedExecutor
@@ -168,11 +169,31 @@ class NeoEngine:
         if params is None:
             params = self.model.init(rng if rng is not None else jax.random.key(engine_cfg.seed))
         self.params = params
-        self.perf = PerfModel.for_arch(cfg, engine_cfg.hw_profile, engine_cfg.ewma_alpha)
+        tp = max(1, int(engine_cfg.tp))
+        self.tp = tp
+        mesh = None
+        if tp > 1:
+            devs = jax.devices()
+            if tp > len(devs):
+                raise ValueError(
+                    f"tp={tp} exceeds the {len(devs)} available device(s); "
+                    "start with XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                    "or lower --tp")
+            # The engine builds its own (1, tp) mesh over the first tp
+            # devices: a data-replicated mesh would instantiate duplicate
+            # shard_map bodies whose host callbacks race on shared state.
+            mesh = Mesh(np.asarray(devs[:tp]).reshape(1, tp), ("data", "model"))
+        self.mesh = mesh
+        self.perf = PerfModel.for_arch(cfg, engine_cfg.hw_profile,
+                                       engine_cfg.ewma_alpha, tp=tp)
         self.scheduler = NeoScheduler(cfg, engine_cfg, self.perf)
         self.paged = cfg.family in PAGED_FAMILIES and cfg.supports_offload
+        if tp > 1 and not self.paged:
+            raise ValueError("tp > 1 requires the paged engine "
+                             "(dense family with offload support)")
         if self.paged:
-            self.pool = DualPool(cfg, engine_cfg.device_pool_pages, engine_cfg.host_pool_pages)
+            self.pool = DualPool(cfg, engine_cfg.device_pool_pages,
+                                 engine_cfg.host_pool_pages, mesh=mesh)
             self._scratch = self.pool.device.alloc(1)  # page 0 = decode scratch
             self.host_attn = HostAttention(
                 cfg, self.pool.host.k, self.pool.host.v, threads=engine_cfg.host_threads
@@ -180,8 +201,9 @@ class NeoEngine:
             self.executor = PagedExecutor(
                 self.model, params, self.pool, self.host_attn,
                 impl=kernel_impl, host_lanes=engine_cfg.max_host_lanes,
+                tp=tp, mesh=mesh,
             )
-            self.transfer = TransferEngine(self.pool)
+            self.transfer = TransferEngine(self.pool, shards=tp)
             self._page = cfg.kv_block_size
             # Two-tier radix prefix cache (off by default: the uncached path
             # stays bitwise identical to the pre-cache engine).
@@ -665,6 +687,24 @@ class NeoEngine:
             tr.instant("engine", "plan_adopt", {"dur": dur})
         return plan, False
 
+    def _host_busy_total(self) -> float:
+        """Host-attention busy seconds summed over the engine-level instance
+        and the executor's per-shard instances (TP device-lane callbacks)."""
+        if not self.host_attn:
+            return 0.0
+        t = self.host_attn.busy_time
+        for s in getattr(self.executor, "host_shards", []) or []:
+            t += s.busy_time
+        return t
+
+    def _host_prefix_busy_total(self) -> float:
+        if not self.host_attn:
+            return 0.0
+        t = self.host_attn.prefix_busy_time
+        for s in getattr(self.executor, "host_shards", []) or []:
+            t += s.prefix_busy_time
+        return t
+
     # ------------------------------------------------------------------
     # one iteration
     # ------------------------------------------------------------------
@@ -673,8 +713,8 @@ class NeoEngine:
         t0 = time.perf_counter()
         now = self.clock if now is None else now
         self.clock = now
-        host_busy0 = self.host_attn.busy_time if self.host_attn else 0.0
-        prefix_busy0 = self.host_attn.prefix_busy_time if self.host_attn else 0.0
+        host_busy0 = self._host_busy_total()
+        prefix_busy0 = self._host_prefix_busy_total()
         dev_busy0 = self.stats.device_busy_time
         swap_busy0 = self.transfer.stats.busy_time if self.transfer else 0.0
 
@@ -724,7 +764,7 @@ class NeoEngine:
         self.stats.wall_time += t_iter
         host_busy = 0.0
         if self.host_attn:
-            host_busy = self.host_attn.busy_time - host_busy0
+            host_busy = self._host_busy_total() - host_busy0
             self.stats.host_busy_time += host_busy
         if self.transfer:
             ts = self.transfer.stats
@@ -732,14 +772,17 @@ class NeoEngine:
             self.stats.swap_in_bytes = ts.bytes_in
             self.stats.swap_wait_time = ts.wait_time
         if self.paged:
+            # per-shard host-attention instances run concurrently, so their
+            # summed busy time approximates tp x the wall time the perf model
+            # prices — divide before calibrating (exact no-op at tp=1)
             self.perf.observe_iteration(
                 plan.stages,
-                host_busy=host_busy,
+                host_busy=host_busy / self.tp,
                 device_busy=self.stats.device_busy_time - dev_busy0,
                 swap_busy=(self.transfer.stats.busy_time - swap_busy0)
                 if self.transfer else 0.0,
-                host_prefix_busy=(self.host_attn.prefix_busy_time - prefix_busy0)
-                if self.host_attn else 0.0,
+                host_prefix_busy=(self._host_prefix_busy_total() - prefix_busy0)
+                / self.tp if self.host_attn else 0.0,
                 pipelined=self.engine_cfg.pipeline and plan.mode != "serial",
             )
         if self.tracer is not None:
@@ -1132,8 +1175,8 @@ class NeoEngine:
                     tr.emit("engine", "dispatch", dispatch_t0, win_end,
                             {"iter": it})
                 for h in out_handles + in_handles:
-                    self.stats.swap_hidden_bytes += int(
-                        h.nbytes * h.hidden_fraction(dispatch_t0, win_end))
+                    self.stats.swap_hidden_bytes += h.hidden_bytes(
+                        dispatch_t0, win_end)
 
     # -- contiguous families ---------------------------------------------------
     def _step_contiguous(self, plan: BatchPlan, now: float, emitted: List[Tuple[int, int]]) -> None:

@@ -47,11 +47,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import io_callback
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import ArchConfig
 from repro.core.host_attention import HostAttention
 from repro.core.kv_cache import DualPool
 from repro.core.request import Request
+from repro.distributed.sharding import (
+    ShardingContext,
+    activate,
+    gather_tp_spec,
+    shard_map_nocheck,
+    tp_allgather,
+    tp_axis,
+    tp_body,
+)
 from repro.kernels.paged_decode import ops as paged_ops
 from repro.models.layers import embed_lookup, logits_last, rms_norm, swiglu_apply
 from repro.models.moe import moe_apply
@@ -111,7 +121,8 @@ class PagedExecutor:
 
     def __init__(self, model: DenseLM, params: Params, pool: DualPool,
                  host_attn: HostAttention, *, impl: str = "ref",
-                 interpret: bool = True, host_lanes: int = 2):
+                 interpret: bool = True, host_lanes: int = 2,
+                 tp: int = 1, mesh=None):
         self.model = model
         self.cfg: ArchConfig = model.cfg
         self.params = params
@@ -120,6 +131,50 @@ class PagedExecutor:
         self.impl = impl
         self.interpret = interpret
         self.page = pool.page_size
+        # --- gather-TP (reduction-free tensor parallelism) ---------------
+        # Column-shard QKV / MLP-up over the mesh "model" axis, keep O /
+        # down / embeddings replicated, and concat shard partials with a
+        # tiled all_gather before every replicated contraction — greedy
+        # decode stays BITWISE identical to the single-device graphs.  The
+        # scheduler / lane-plan layers above stay device-count-agnostic:
+        # only the fused graphs, the device page pool and the host-attention
+        # callbacks here know the shard count.
+        self.tp = max(1, int(tp))
+        self.mesh = mesh
+        self.host_shards: List[HostAttention] = []
+        if self.tp > 1:
+            cfg = self.cfg
+            if mesh is None:
+                raise ValueError("tp > 1 requires a device mesh")
+            if cfg.moe is not None or cfg.modality is not None:
+                raise NotImplementedError(
+                    "tensor-parallel serving covers the dense family only")
+            if (cfg.num_heads % self.tp or cfg.num_kv_heads % self.tp
+                    or cfg.d_ff % self.tp):
+                raise ValueError(
+                    f"tp={self.tp} must divide num_heads={cfg.num_heads}, "
+                    f"num_kv_heads={cfg.num_kv_heads} and d_ff={cfg.d_ff}")
+            self.tp_ctx: Optional[ShardingContext] = ShardingContext.for_arch(
+                cfg, mesh)
+            axes = model.param_logical_axes()
+            self._tp_param_specs = jax.tree.map(
+                gather_tp_spec, axes, is_leaf=lambda t: isinstance(t, tuple))
+            # self.params stays single-device: host lanes and the gathered
+            # prefix-prefill path run the unsharded graphs unchanged.
+            self.params_tp = jax.tree.map(
+                lambda leaf, sp: jax.device_put(leaf, NamedSharding(mesh, sp)),
+                params, self._tp_param_specs)
+            # One HostAttention per shard over a writable kv-head slice of
+            # the SAME host pool allocation — page ids stay global, only the
+            # head axis is partitioned (host attention shards by KV head).
+            for s in range(self.tp):
+                k_s, v_s = pool.host.kv_head_slice(s, self.tp)
+                self.host_shards.append(
+                    HostAttention(cfg, k_s, v_s, threads=host_attn.threads))
+        else:
+            self.tp_ctx = None
+            self._tp_param_specs = None
+            self.params_tp = None
         # per-iteration host-side state consumed by the io_callback
         self._cb_state: Dict[str, np.ndarray] = {}
         self._decode_fns: Dict[Tuple[int, int], Any] = {}
@@ -171,6 +226,38 @@ class PagedExecutor:
                     {"rows": int(st["host_rows"].size)})
         return out
 
+    def _host_cb_tp(self, shard, layer, q, k_new, v_new):
+        """Per-shard batch-0 host attention (TP decode; unordered callback).
+
+        ``q``/``k_new``/``v_new`` are the shard's LOCAL head slices; the
+        shard's :class:`HostAttention` owns the matching kv-head slice of
+        the host pool, so concurrent shard callbacks write disjoint memory
+        and keep separate accounting.
+        """
+        st = self._cb_state
+        shard, layer = int(shard), int(layer)
+        if st["host_rows"].size == 0:
+            return np.zeros(q.shape, np.float32)
+        tr = self.tracer
+        t0 = time.perf_counter() if tr is not None else 0.0
+        out = self.host_shards[shard].run_layer(
+            layer,
+            np.asarray(q),
+            np.asarray(k_new),
+            np.asarray(v_new),
+            host_rows=st["host_rows"],
+            tables=st["tables"],
+            lens=st["lens"],
+            page_ids=st["page_ids"],
+            offsets=st["offsets"],
+            window=int(st["window"][0]) if "window" in st else 0,
+        )
+        if tr is not None:
+            tr.emit(f"hostattn-b0-s{shard}", f"L{layer}", t0,
+                    time.perf_counter(),
+                    {"rows": int(st["host_rows"].size), "shard": shard})
+        return out
+
     # ------------------------------------------------------------------
     # decode step graph
     # ------------------------------------------------------------------
@@ -186,6 +273,9 @@ class PagedExecutor:
 
     def _layer_post(self, kind: str, p: Params, x, o):
         cfg = self.cfg
+        # gather-TP seam: concat per-shard head outputs before the
+        # replicated wo (identity outside a TP body)
+        o = tp_allgather(o, axis=1)
         out = jnp.einsum("bhk,hkd->bd", o, p["attn"]["wo"])
         x = x + out
         h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
@@ -218,51 +308,95 @@ class PagedExecutor:
             impl=self.impl, interpret=self.interpret,
         )
         # -- host attention via ordered callback (TrQKV -> CPU attn -> TrO) ---
-        host_out = io_callback(
-            self._host_cb,
-            jax.ShapeDtypeStruct(q.shape, jnp.float32),
-            lidx, q, k, v,
-            ordered=True,
-        )
+        ax = tp_axis()
+        if ax is None:
+            host_out = io_callback(
+                self._host_cb,
+                jax.ShapeDtypeStruct(q.shape, jnp.float32),
+                lidx, q, k, v,
+                ordered=True,
+            )
+        else:
+            # Per-shard host attention: q/k/v carry the LOCAL head slice
+            # and the shard index routes to that shard's HostAttention over
+            # its kv-head slice of the host pool.  Cross-layer ordering is
+            # carried by the data dependence (x threads through each layer
+            # via host_out), so the callback can be unordered — ordered
+            # io_callback is not supported inside shard_map bodies.
+            sidx = jax.lax.axis_index(ax)
+            host_out = io_callback(
+                self._host_cb_tp,
+                jax.ShapeDtypeStruct(q.shape, jnp.float32),
+                sidx, lidx, q, k, v,
+                ordered=False,
+            )
         o = jnp.where(is_host[:, None, None], host_out.astype(dev_out.dtype), dev_out)
         return self._layer_post(kind, p, x, o), pool_k, pool_v
 
-    def _build_decode(self, D: int, MP: int):
+    def _decode_graph(self, params, tokens, positions, dev_bt, dev_lens,
+                      is_host, page_ids, offsets, pool_k, pool_v):
+        """The fused decode step, shared VERBATIM by the single-device jit
+        and (wrapped in ``tp_body`` inside a shard_map) the TP builder —
+        op-for-op identity is what keeps TP=N bitwise equal to TP=1."""
         model, cfg = self.model, self.cfg
+        x = embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
+        meta = (positions, dev_bt, dev_lens, is_host, page_ids, offsets)
+        for i, kind in enumerate(model.prefix_kinds):
+            x, pool_k, pool_v = self._layer_step(
+                params[f"prefix{i}"], kind, jnp.int32(i), x, pool_k, pool_v, meta
+            )
+        n_prefix = len(model.prefix_kinds)
+        r = len(model.repeat_kinds)
+
+        def group_body(carry, scanned):
+            x, pk, pv, base = carry
+            gp = scanned
+            for j, kind in enumerate(model.repeat_kinds):
+                x, pk, pv = self._layer_step(gp[f"sub{j}"], kind, base + j, x, pk, pv, meta)
+            return (x, pk, pv, base + r), None
+
+        (x, pool_k, pool_v, _), _ = jax.lax.scan(
+            group_body, (x, pool_k, pool_v, jnp.int32(n_prefix)), params["blocks"]
+        )
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = logits_last(x, model._unembed(params))
+        return logits, pool_k, pool_v
+
+    def _build_decode(self, D: int, MP: int):
+        return jax.jit(self._decode_graph, donate_argnums=(8, 9))
+
+    def _build_decode_tp(self, D: int, MP: int):
+        """TP decode: ONE jitted shard_map graph over the "model" axis.
+
+        Params enter pre-sharded per :func:`gather_tp_spec`; the device
+        pool tiles its kv-head axis; scalar metadata replicates.  The body
+        is the exact single-device graph traced under ``tp_body`` so the
+        model-level ``tp_allgather`` seams become tiled all_gathers (pure
+        concats) and ``shard(...)`` annotations become no-ops.  Logits are
+        computed identically on every shard (replicated out-spec).
+        """
+        kv_spec = P(None, None, None, "model", None)
 
         def step(params, tokens, positions, dev_bt, dev_lens, is_host,
                  page_ids, offsets, pool_k, pool_v):
-            x = embed_lookup(params["embed"], tokens).astype(cfg.activation_dtype)
-            meta = (positions, dev_bt, dev_lens, is_host, page_ids, offsets)
-            lidx = 0
-            for i, kind in enumerate(model.prefix_kinds):
-                x, pool_k, pool_v = self._layer_step(
-                    params[f"prefix{i}"], kind, jnp.int32(i), x, pool_k, pool_v, meta
-                )
-                lidx += 1
-            n_prefix = len(model.prefix_kinds)
-            r = len(model.repeat_kinds)
+            with tp_body("model"):
+                return self._decode_graph(params, tokens, positions, dev_bt,
+                                          dev_lens, is_host, page_ids,
+                                          offsets, pool_k, pool_v)
 
-            def group_body(carry, scanned):
-                x, pk, pv, base = carry
-                gp = scanned
-                for j, kind in enumerate(model.repeat_kinds):
-                    x, pk, pv = self._layer_step(gp[f"sub{j}"], kind, base + j, x, pk, pv, meta)
-                return (x, pk, pv, base + r), None
-
-            (x, pool_k, pool_v, _), _ = jax.lax.scan(
-                group_body, (x, pool_k, pool_v, jnp.int32(n_prefix)), params["blocks"]
-            )
-            x = rms_norm(x, params["final_norm"], cfg.rms_eps)
-            logits = logits_last(x, model._unembed(params))
-            return logits, pool_k, pool_v
-
-        return jax.jit(step, donate_argnums=(8, 9))
+        wrapped = shard_map_nocheck(
+            step, mesh=self.mesh,
+            in_specs=(self._tp_param_specs, P(), P(), P(), P(), P(), P(), P(),
+                      kv_spec, kv_spec),
+            out_specs=(P(), kv_spec, kv_spec),
+        )
+        return jax.jit(wrapped, donate_argnums=(8, 9))
 
     def decode_fn(self, D: int, MP: int):
         key = (D, MP)
         if key not in self._decode_fns:
-            self._decode_fns[key] = self._build_decode(D, MP)
+            build = self._build_decode_tp if self.tp > 1 else self._build_decode
+            self._decode_fns[key] = build(D, MP)
         return self._decode_fns[key]
 
     # ------------------------------------------------------------------
@@ -321,6 +455,13 @@ class PagedExecutor:
         }
         fn = self.decode_fn(D, MP)
         dev = self.pool.device
+        if self.tp > 1:
+            with activate(self.tp_ctx):
+                logits, dev.k, dev.v = fn(
+                    self.params_tp, tokens, positions, dev_bt, dev_lens,
+                    is_host, page_ids, offsets, dev.k, dev.v,
+                )
+            return np.asarray(logits[:n])
         logits, dev.k, dev.v = fn(
             self.params, tokens, positions, dev_bt, dev_lens, is_host,
             page_ids, offsets, dev.k, dev.v,
@@ -504,10 +645,33 @@ class PagedExecutor:
 
         return jax.jit(fn)
 
+    def _build_prefill_tp(self, B: int, S: int):
+        """TP cold prefill: the same model.prefill traced per shard under
+        ``tp_body`` inside a shard_map — the cache comes back tiled on its
+        kv-head axis (matching the device pool layout) and the first-token
+        logits replicated (identical per shard by construction)."""
+        model = self.model
+        kv_spec = P(None, None, None, "model", None)
+
+        def body(params, tokens, true_lens):
+            with tp_body("model"):
+                logits, cache = model.prefill(
+                    params, tokens, capacity=S, true_lens=true_lens
+                )
+                return logits, cache["k"], cache["v"]
+
+        wrapped = shard_map_nocheck(
+            body, mesh=self.mesh,
+            in_specs=(self._tp_param_specs, P(), P()),
+            out_specs=(P(), kv_spec, kv_spec),
+        )
+        return jax.jit(wrapped)
+
     def prefill_fn(self, B: int, S: int):
         key = (B, S)
         if key not in self._prefill_fns:
-            self._prefill_fns[key] = self._build_prefill(B, S)
+            build = self._build_prefill_tp if self.tp > 1 else self._build_prefill
+            self._prefill_fns[key] = build(B, S)
         return self._prefill_fns[key]
 
     def prefill(self, reqs: List[Request], to_host: List[bool],
@@ -548,9 +712,17 @@ class PagedExecutor:
             tokens[i, : r.prefill_len] = r.prefill_tokens
             lens[i] = r.prefill_len
         extras = extras_fn(reqs, S) if extras_fn else {}
-        logits, k_all, v_all = self.prefill_fn(B, S)(
-            self.params, tokens, lens, extras
-        )
+        if self.tp > 1:
+            if extras:
+                raise NotImplementedError("prefill extras unsupported at tp>1")
+            with activate(self.tp_ctx):
+                logits, k_all, v_all = self.prefill_fn(B, S)(
+                    self.params_tp, tokens, lens
+                )
+        else:
+            logits, k_all, v_all = self.prefill_fn(B, S)(
+                self.params, tokens, lens, extras
+            )
         # scatter into pools, page-granular (device) / numpy (host)
         k_np: Optional[np.ndarray] = None
         for i, (r, host) in enumerate(zip(reqs, to_host)):
@@ -684,6 +856,12 @@ class PagedExecutor:
         logits, k_all, v_all = self.prefill_prefix_fn(n, S, T)(
             self.params, tokens, suffix_lens, pre_k, pre_v, prefix_lens
         )
+        if self.tp > 1:
+            # this path runs the unsharded graph on the default device; the
+            # suffix KV must cross to numpy (uncommitted) before the scatter
+            # into the mesh-sharded device pool
+            k_all = np.asarray(k_all)
+            v_all = np.asarray(v_all)
         self._scatter_suffix(reqs, suffix_lens, k_all, v_all, to_host=False)
         return np.asarray(logits)
 
@@ -699,6 +877,26 @@ class PagedExecutor:
                     time.perf_counter(), {"rows": int(st["tables"].shape[0])})
         return out
 
+    def _host_prefix_cb_tp(self, shard, layer, q):
+        """Per-shard zero-copy prefix partials (TP host-prefix prefill).
+
+        ``q`` is the shard's LOCAL query-head slice; the shard's
+        :class:`HostAttention` reads its kv-head slice of the host pool in
+        place, and the per-shard LSE partials merge on device via
+        ``suffix_attention_merge`` before the head all_gather.
+        """
+        st = self._cb_prefix_state
+        shard = int(shard)
+        tr = self.tracer
+        t0 = time.perf_counter() if tr is not None else 0.0
+        out = self.host_shards[shard].prefix_partials(
+            int(layer), np.asarray(q), st["tables"], st["prefix_lens"])
+        if tr is not None:
+            tr.emit(f"hostattn-prefix-s{shard}", f"L{int(layer)}", t0,
+                    time.perf_counter(),
+                    {"rows": int(st["tables"].shape[0]), "shard": shard})
+        return out
+
     def _build_prefill_host_prefix(self, B: int, S: int):
         model = self.model
 
@@ -710,10 +908,34 @@ class PagedExecutor:
 
         return jax.jit(fn)
 
+    def _build_prefill_host_prefix_tp(self, B: int, S: int):
+        """TP host-prefix prefill: per-shard suffix graphs whose prefix
+        partials come from the shard's HostAttention (sharded by KV head)
+        through an unordered per-shard callback."""
+        model = self.model
+        kv_spec = P(None, None, None, "model", None)
+
+        def body(params, tokens, true_lens, prefix_lens):
+            with tp_body("model"):
+                return model.prefill_with_host_prefix(
+                    params, tokens, prefix_lens,
+                    prefix_cb=self._host_prefix_cb_tp,
+                    capacity=S, true_lens=true_lens,
+                )
+
+        wrapped = shard_map_nocheck(
+            body, mesh=self.mesh,
+            in_specs=(self._tp_param_specs, P(), P(), P()),
+            out_specs=(P(), kv_spec, kv_spec),
+        )
+        return jax.jit(wrapped)
+
     def prefill_host_prefix_fn(self, B: int, S: int):
         key = ("hostprefix", B, S)
         if key not in self._prefill_fns:
-            self._prefill_fns[key] = self._build_prefill_host_prefix(B, S)
+            build = (self._build_prefill_host_prefix_tp if self.tp > 1
+                     else self._build_prefill_host_prefix)
+            self._prefill_fns[key] = build(B, S)
         return self._prefill_fns[key]
 
     def _prefill_cached_host(self, reqs: List[Request]) -> np.ndarray:
@@ -737,9 +959,15 @@ class PagedExecutor:
             npg = -(-r.cached_len // page)
             tables[i, :npg] = r.pages[:npg]
         self._cb_prefix_state = {"tables": tables, "prefix_lens": prefix_lens}
-        logits, k_all, v_all = self.prefill_host_prefix_fn(n, S)(
-            self.params, tokens, suffix_lens, prefix_lens
-        )
+        if self.tp > 1:
+            with activate(self.tp_ctx):
+                logits, k_all, v_all = self.prefill_host_prefix_fn(n, S)(
+                    self.params_tp, tokens, suffix_lens, prefix_lens
+                )
+        else:
+            logits, k_all, v_all = self.prefill_host_prefix_fn(n, S)(
+                self.params, tokens, suffix_lens, prefix_lens
+            )
         # Drain the callback-bearing graph with a plain wait BEFORE
         # dispatching anything that depends on its outputs.  Slicing
         # k_all/v_all while this graph is still in flight enqueues new

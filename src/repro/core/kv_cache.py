@@ -31,6 +31,7 @@ class PagePool:
         backend: str,  # "device" | "host"
         num_layers: Optional[int] = None,
         dtype=None,
+        mesh=None,
     ):
         self.cfg = cfg
         self.backend = backend
@@ -40,9 +41,21 @@ class PagePool:
         self.num_layers = L
         shape = (L, num_pages, self.page_size, cfg.num_kv_heads, cfg.head_dim)
         self.dtype = dtype or (np.float32 if cfg.activation_dtype == "float32" else jnp.bfloat16)
+        self.mesh = mesh
         if backend == "device":
             self.k = jnp.zeros(shape, self.dtype)
             self.v = jnp.zeros(shape, self.dtype)
+            if mesh is not None and mesh.shape.get("model", 1) > 1:
+                # Tensor-parallel serving: the device pool shards by KV head
+                # over the "model" axis while the page-id space — the free
+                # list, refcounts, Request.pages and the prefix-cache radix
+                # tree above it — stays GLOBAL: every shard holds the same
+                # pages, each covering its own KV-head slice.
+                from jax.sharding import NamedSharding, PartitionSpec as _P
+
+                sh = NamedSharding(mesh, _P(None, None, None, "model", None))
+                self.k = jax.device_put(self.k, sh)
+                self.v = jax.device_put(self.v, sh)
         else:
             # Host pools honor the activation dtype's byte width: numpy has no
             # bfloat16, so 16-bit archs store float16 (2 bytes/elt — the
@@ -166,6 +179,22 @@ class PagePool:
             self.k[:, page_ids, offsets] = np.asarray(k_toks, self.k.dtype)
             self.v[:, page_ids, offsets] = np.asarray(v_toks, self.v.dtype)
 
+    # -- per-shard host views (TP host attention) -------------------------------
+    def kv_head_slice(self, shard: int, num_shards: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Writable numpy VIEWS of this host pool covering shard ``shard``'s
+        KV heads — per-shard :class:`HostAttention` instances read and append
+        through these, so the host tier stays ONE allocation (single NUMA
+        node, §5.1) with a single global page-id space."""
+        assert self.backend == "host"
+        KV = self.k.shape[3]
+        if KV % num_shards != 0:
+            raise ValueError(
+                f"{KV} kv heads do not divide across {num_shards} shards")
+        per = KV // num_shards
+        lo = shard * per
+        return (self.k[:, :, :, lo:lo + per, :],
+                self.v[:, :, :, lo:lo + per, :])
+
     # -- swap I/O ---------------------------------------------------------------
     def read_pages(self, pages: List[int]) -> Tuple[np.ndarray, np.ndarray]:
         """[L, n, page, KV, hd] numpy copies (device→host PCIe DMA analogue)."""
@@ -207,10 +236,12 @@ def _scatter_pages(pool, pages_data, layer, page_ids, valid):
 class DualPool:
     """Device + host pools plus whole-request swap (the scheduler's swap-in/out)."""
 
-    def __init__(self, cfg: ArchConfig, device_pages: int, host_pages: int):
+    def __init__(self, cfg: ArchConfig, device_pages: int, host_pages: int,
+                 *, mesh=None):
         self.cfg = cfg
         self.page_size = cfg.kv_block_size
-        self.device = PagePool(cfg, device_pages, backend="device")
+        self.mesh = mesh
+        self.device = PagePool(cfg, device_pages, backend="device", mesh=mesh)
         self.host = PagePool(cfg, host_pages, backend="host")
         # PCIe traffic accounting — updated from the engine thread (prefill
         # host writes, serial swaps) and the transfer worker; lock-protected

@@ -34,10 +34,15 @@ class PerfModel:
     cfg: ArchConfig
     hw: HardwareProfile
     ewma_alpha: float = 0.2
+    # tensor-parallel shard count: device-side resources in ``hw`` are
+    # already ×tp (for_arch), host-side gathers divide by it, and the
+    # collective term is non-zero only when tp > 1
+    tp: int = 1
     # online calibration factors (measured / predicted), one per stage kind
     scale: Dict[str, float] = field(
         default_factory=lambda: {"linear": 1.0, "gpu_attn": 1.0, "cpu_attn": 1.0,
-                                 "swap": 1.0, "host_prefix": 1.0}
+                                 "swap": 1.0, "host_prefix": 1.0,
+                                 "collective": 1.0}
     )
 
     @classmethod
@@ -47,7 +52,9 @@ class PerfModel:
         if tp > 1:
             # TP scales device compute/bandwidth and PCIe lanes; the host stays
             # a single NUMA node (§5.1: "We confine our system to running on a
-            # single NUMA node when running 2-GPU experiments").
+            # single NUMA node when running 2-GPU experiments").  pcie_bw × tp
+            # is what divides t_swap by the shard count — each shard's stream
+            # moves 1/tp of every page's kv heads over its own link.
             import dataclasses
 
             hw = dataclasses.replace(
@@ -57,7 +64,7 @@ class PerfModel:
                 device_hbm_bytes=hw.device_hbm_bytes * tp,
                 pcie_bw=hw.pcie_bw * tp,
             )
-        return cls(cfg=cfg, hw=hw, ewma_alpha=ewma_alpha)
+        return cls(cfg=cfg, hw=hw, ewma_alpha=ewma_alpha, tp=max(1, tp))
 
     # -- derived per-layer constants (cached: param counting is eval_shape) ----
     @functools.cached_property
@@ -135,13 +142,32 @@ class PerfModel:
         promoting it over PCIe — this term replaces the `t_swap` the promote
         path would pay).  Shares the host-bandwidth resource with the CPU
         attention stages, so the scheduler adds it to that side of the
-        no-bubble max."""
+        no-bubble max.  Under TP the per-shard HostAttention instances
+        gather disjoint kv-head slices concurrently, so wall time divides
+        by the shard count (host bytes are unchanged)."""
         if n_tokens <= 0:
             return 0.0
         bytes_ = n_tokens * self.kv_bytes_per_token_layer
         return self.scale["host_prefix"] * bytes_ / (
             self.hw.host_mem_bw * self.hw.host_bw_eff
-        )
+        ) / self.tp
+
+    def t_collective(self, n_tokens: int) -> float:
+        """Per-layer cross-shard gather cost of the TP seams (seconds).
+
+        Gather-TP concatenates two per-layer partials across shards: the
+        attention head outputs ([n, H, hd]) and the MLP hidden ([n, d_ff]).
+        A tiled all_gather moves ``bytes × (tp-1)/tp`` per device over the
+        inter-chip links (ICI on TPU profiles; falls back to pcie_bw where
+        the profile models NVLink-less GPUs).  Zero at tp == 1 — every
+        single-device estimate is untouched.
+        """
+        if self.tp <= 1 or n_tokens <= 0:
+            return 0.0
+        cfg = self.cfg
+        bytes_ = n_tokens * (cfg.num_heads * cfg.head_dim + cfg.d_ff) * 2
+        link_bw = self.hw.ici_bw if self.hw.ici_bw > 0 else self.hw.pcie_bw
+        return self.scale["collective"] * bytes_ * (self.tp - 1) / self.tp / link_bw
 
     def t_transfer_qo(self, n_rows: int) -> float:
         """Q down + attention-output up for offloaded rows (TrQKV/TrO)."""
@@ -178,6 +204,7 @@ class PerfModel:
         *,
         device_compute: float = 0.0,
         device_host_attn: float = 0.0,
+        device_collective: float = 0.0,
     ) -> float:
         """Per-layer steady-state time of a generalized lane plan: one
         optional device lane plus K host lanes (the unified form of the
@@ -188,6 +215,10 @@ class PerfModel:
         (t_l0 + t_ga0) and ``device_host_attn`` its embedded batch-0 host
         attention (t_ca0, which blocks inside the device graph's ordered
         callback); both are 0 for batch-1-only plans.
+        ``device_collective`` is the per-layer cross-shard all-gather time
+        of the TP seams — it rides the device lane (the gathers sit inside
+        the fused graph), so it joins both the device resource total and
+        the device lane's serial chain; 0 at TP=1.
 
         Each host lane serializes linear → host-attention within itself;
         across lanes every linear stage shares the device and every host
@@ -220,9 +251,9 @@ class PerfModel:
         """
         t_lin = [self.t_linear(n) for n, _ in lanes]
         t_att = [self.t_cpu_attn(kv) for _, kv in lanes]
-        device_total = device_compute + sum(t_lin)
+        device_total = device_compute + device_collective + sum(t_lin)
         host_total = device_host_attn + sum(t_att)
-        chains = [device_compute + device_host_attn]
+        chains = [device_compute + device_collective + device_host_attn]
         chains += [tl + ta for tl, ta in zip(t_lin, t_att)]
         period = max(device_total, host_total, *chains)
         L = max(self.cfg.num_layers, 1)
@@ -288,10 +319,15 @@ class PerfModel:
         if host_busy > 0:
             self.observe("cpu_attn", L * (stages.t_ca0 + stages.t_ca1), host_busy)
         if device_busy > 0:
-            pred = L * (stages.t_l0 + stages.t_ga0 + stages.t_ca0)
+            t_coll = getattr(stages, "t_coll", 0.0)
+            pred = L * (stages.t_l0 + stages.t_ga0 + stages.t_ca0 + t_coll)
             if not pipelined:
                 pred += L * (stages.t_l1 + stages.t_ca1)
             self.observe("linear", pred, device_busy)
+            if t_coll > 0:
+                # the all-gather rides the device dispatch window, so the
+                # collective scale tracks the same measured/predicted ratio
+                self.observe("collective", pred, device_busy)
         if swap_busy > 0:
             self.observe("swap", L * stages.t_swap, swap_busy)
         if host_prefix_busy > 0:

@@ -75,6 +75,10 @@ class StageEstimates:
     # cpu-placed prefills (zero-copy host serving; replaces the t_swap a
     # promotion would pay and shares the host-bandwidth resource with t_ca*)
     t_host_prefix: float = 0.0
+    # per-layer all-gather cost of the tensor-parallel column shards; rides
+    # the device dispatch window, so it lands on the device side of every
+    # overlap max.  Identically 0.0 at tp=1 — plans stay bit-identical.
+    t_coll: float = 0.0
 
 
 @dataclass
@@ -368,13 +372,16 @@ class NeoScheduler:
             dev_compute = self._t_l0(plan) + perf.t_gpu_attn(
                 self._kv_tokens(plan.decode_gpu))
             dev_attn = perf.t_cpu_attn(self._kv_tokens(plan.decode_cpu0))
+        dev_coll = perf.t_collective(plan.batch0_tokens + plan.batch1_tokens)
         kv = [r.kv_len + 1 for r in rows]
         best_t, best_splits = None, None
         for k_lanes in range(2, k_max + 1):
-            splits = self._lane_boundaries(kv, k_lanes, dev_compute, dev_attn)
+            splits = self._lane_boundaries(kv, k_lanes, dev_compute, dev_attn,
+                                           dev_coll)
             lanes = self._lane_loads(kv, splits)
             t = perf.lane_plan_time(lanes, device_compute=dev_compute,
-                                    device_host_attn=dev_attn)
+                                    device_host_attn=dev_attn,
+                                    device_collective=dev_coll)
             if best_t is None or t < best_t:
                 best_t, best_splits = t, splits
         plan.lane_splits = best_splits
@@ -388,7 +395,8 @@ class NeoScheduler:
         return [(b - a, sum(kv[a:b])) for a, b in zip(bounds, bounds[1:])]
 
     def _lane_boundaries(self, kv: List[int], k_lanes: int,
-                         dev_compute: float, dev_attn: float) -> List[int]:
+                         dev_compute: float, dev_attn: float,
+                         dev_coll: float = 0.0) -> List[int]:
         """Contiguous lane boundaries for ``k_lanes`` lanes over rows with
         per-row KV loads ``kv``.
 
@@ -408,7 +416,8 @@ class NeoScheduler:
                 kv_a += kv[k - 1]
                 t = perf.lane_plan_time(
                     [(k, kv_a), (n - k, total_kv - kv_a)],
-                    device_compute=dev_compute, device_host_attn=dev_attn)
+                    device_compute=dev_compute, device_host_attn=dev_attn,
+                    device_collective=dev_coll)
                 if best_t is None or t < best_t:
                     best_k, best_t = k, t
             return [best_k]
@@ -736,23 +745,26 @@ class NeoScheduler:
                 + promote_tokens
             ),
             t_host_prefix=perf.t_host_prefix(host_gather),
+            t_coll=perf.t_collective(plan.batch0_tokens + plan.batch1_tokens),
         )
         plan.stages = st
         L = self.cfg.num_layers
         if plan.mode == "serial":  # strawman #1: no overlap
             plan.est_iter_time = L * (st.t_l0 + st.t_l1 + st.t_ga0 + st.t_ca0
-                                      + st.t_ca1 + st.t_swap + st.t_host_prefix)
+                                      + st.t_ca1 + st.t_swap + st.t_host_prefix
+                                      + st.t_coll)
         elif plan.mode == "gpu_only" and not plan.decode_cpu1:
             plan.est_iter_time = perf.gpu_only_time(
                 batch_tokens=plan.batch0_tokens,
                 gpu_kv_tokens=self._kv_tokens(plan.decode_gpu),
                 prefill_sq_sum=self._prefill_sq(plan),
-            )
+            ) + L * st.t_coll
         else:
             # t_host_prefix shares the host-DRAM-bandwidth resource with the
-            # batch-0 CPU attention, so it lands on that side of the max
+            # batch-0 CPU attention, so it lands on that side of the max;
+            # the TP all-gather rides the device dispatch lane (t_l0 side)
             plan.est_iter_time = L * (
-                max(st.t_l0, st.t_ca1)
+                max(st.t_l0 + st.t_coll, st.t_ca1)
                 + max(st.t_l1 + st.t_ga0, st.t_ca0 + st.t_host_prefix, st.t_swap)
             )
         plan.est_tokens = len(plan.decode_rows) + len(plan.prefill)

@@ -28,6 +28,16 @@ both modes.  Copies are page-granular and layer-wise (each worker streams
 the engine can report measured PCIe bandwidth and how many bytes were
 hidden under compute.
 
+Under tensor parallelism (``shards > 1``) every request-swap fans out into
+one job **per shard per direction** — each shard's worker moves that
+shard's kv-head slice of the pages over its own stream (``out0``/``out1``/
+``in0``/…), modelling the per-device PCIe links whose aggregate bandwidth
+scales with the device count.  The kv-head slices partition the arrays, so
+summed byte accounting is EXACTLY the single-shard total; the handle joins
+all shards of a page (its event fires when the last shard job lands), and
+``TransferHandle.hidden_bytes`` sums per-job hidden bytes so the engine's
+counter reconciles span-for-span against the per-shard copy tracks.
+
 Thread-safety contract:
 
 * ``swap_out``/``swap_in`` and any ``join`` that applies a staged *device*
@@ -46,7 +56,7 @@ import queue
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, List, Optional
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -63,9 +73,12 @@ class TransferStats:
     bytes_in: int = 0  # host -> device
     busy_time: float = 0.0  # summed worker wall time spent copying
     # per-stream copy time ("out" / "in"; one "all" key in single-worker
-    # mode) — with per-direction streams the two can overlap, so their sum
-    # (== busy_time) may exceed the wall-clock copy window
+    # mode; "out0"/"in1"/… per shard under TP) — concurrent streams can
+    # overlap, so their sum (== busy_time) may exceed the wall-clock window
     busy_by_stream: Dict[str, float] = field(default_factory=dict)
+    # per-stream bytes moved — under TP this records the per-shard copy
+    # split (each shard's kv-head slice of every swapped page)
+    bytes_by_stream: Dict[str, int] = field(default_factory=dict)
     wait_time: float = 0.0  # time join() callers spent blocked
 
     @property
@@ -80,12 +93,18 @@ class TransferStats:
 
 
 class TransferHandle:
-    """Future for one queued request-swap; join before touching the pages."""
+    """Future for one queued request-swap; join before touching the pages.
+
+    One handle spans every copy job of the swap — a single job normally,
+    one per shard under TP (each moving its kv-head slice).  The event
+    fires when the LAST job lands, so a join waits for all shards of a
+    page; ``copy_start``/``copy_end`` bracket the union of the job windows.
+    """
 
     def __init__(self, kind: str, req: Request, nbytes: int):
         self.kind = kind  # "out" | "in"
         self.req = req
-        self.nbytes = nbytes
+        self.nbytes = nbytes  # total across all jobs
         # engine iteration that launched this swap (tracing: pairs the
         # worker's copy span with that iteration's dispatch window)
         self.trace_iter = 0
@@ -97,6 +116,10 @@ class TransferHandle:
         # its device-lane window to count bytes hidden under compute
         self.copy_start: float = 0.0
         self.copy_end: float = 0.0
+        # multi-job bookkeeping (worker-side, under the engine's lock)
+        self._jobs_total = 1
+        self._jobs_done = 0
+        self._job_spans: List[Tuple[int, float, float]] = []  # (nbytes, t0, t1)
 
     def hidden_fraction(self, window_start: float, window_end: float) -> float:
         """Fraction of this copy's wall time overlapped by [start, end]."""
@@ -105,6 +128,26 @@ class TransferHandle:
             return 0.0
         ov = min(self.copy_end, window_end) - max(self.copy_start, window_start)
         return max(0.0, min(1.0, ov / dur))
+
+    def hidden_bytes(self, window_start: float, window_end: float) -> int:
+        """Bytes of this swap hidden under [start, end], summed per job.
+
+        Computed span-by-span with the same ``int(nbytes * fraction)``
+        truncation :mod:`repro.obs.reconcile` applies to each traced copy
+        span — for a single-job handle this equals the legacy
+        ``int(nbytes * hidden_fraction(...))`` exactly, and under TP the
+        per-shard sum stays reconcilable where one whole-handle fraction
+        would not.
+        """
+        total = 0
+        for nb, t0, t1 in self._job_spans:
+            dur = t1 - t0
+            if dur <= 0:
+                continue
+            ov = min(t1, window_end) - max(t0, window_start)
+            frac = max(0.0, min(1.0, ov / dur))
+            total += int(nb * frac)
+        return total
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -117,6 +160,7 @@ class TransferHandle:
 class _Job:
     handle: TransferHandle
     fn: Callable[[], None]
+    nbytes: int  # this job's share (== handle.nbytes for single-job swaps)
 
 
 class TransferEngine:
@@ -128,7 +172,8 @@ class TransferEngine:
     test.
     """
 
-    def __init__(self, pool: DualPool, *, per_direction: bool = True):
+    def __init__(self, pool: DualPool, *, per_direction: bool = True,
+                 shards: int = 1):
         self.pool = pool
         self.stats = TransferStats()
         self._lock = threading.Lock()
@@ -137,7 +182,20 @@ class TransferEngine:
         self.tracer = None
         self.trace_iter = 0
         self.per_direction = per_direction
-        streams = ("out", "in") if per_direction else ("all",)
+        # TP: one stream (and worker) per shard per direction, each moving
+        # its kv-head slice of the swapped pages — aggregate PCIe bandwidth
+        # scales with the shard count while byte totals stay identical.
+        self.shards = max(1, int(shards))
+        kv_heads = pool.host.k.shape[3]
+        if self.shards > 1 and kv_heads % self.shards != 0:
+            raise ValueError(
+                f"shards={self.shards} must divide the pool's "
+                f"{kv_heads} kv head(s)")
+        dirs = ("out", "in") if per_direction else ("all",)
+        if self.shards == 1:
+            streams = dirs
+        else:
+            streams = tuple(f"{d}{s}" for d in dirs for s in range(self.shards))
         self._queues: Dict[str, "queue.Queue[Optional[_Job]]"] = {
             s: queue.Queue() for s in streams
         }
@@ -151,8 +209,9 @@ class TransferEngine:
             w.start()
         self._closed = False
 
-    def _stream(self, kind: str) -> str:
-        return kind if self.per_direction else "all"
+    def _stream(self, kind: str, shard: int = 0) -> str:
+        d = kind if self.per_direction else "all"
+        return d if self.shards == 1 else f"{d}{shard}"
 
     # ------------------------------------------------------------------
     # workers (one per copy stream)
@@ -163,27 +222,39 @@ class TransferEngine:
             job = q.get()
             if job is None:
                 return
+            h = job.handle
             t0 = time.perf_counter()
-            job.handle.copy_start = t0
+            failed = False
             try:
                 job.fn()
             except BaseException as e:  # surfaced at join
-                job.handle.error = e
+                h.error = e
+                failed = True
             t1 = time.perf_counter()
-            job.handle.copy_end = t1
             with self._lock:
                 self.stats.jobs += 1
                 self.stats.busy_time += t1 - t0
                 self.stats.busy_by_stream[stream] = (
                     self.stats.busy_by_stream.get(stream, 0.0) + (t1 - t0))
+                if not failed:
+                    self.stats.bytes_by_stream[stream] = (
+                        self.stats.bytes_by_stream.get(stream, 0) + job.nbytes)
+                # the handle's copy window brackets every shard job of the
+                # swap; per-job spans back hidden_bytes (engine) and the
+                # traced copy spans (reconcile) — same granularity
+                h.copy_start = t0 if h._jobs_done == 0 else min(h.copy_start, t0)
+                h.copy_end = max(h.copy_end, t1)
+                h._job_spans.append((job.nbytes, t0, t1))
+                h._jobs_done += 1
+                last = h._jobs_done >= h._jobs_total
             tr = self.tracer
             if tr is not None:
                 # emitted BEFORE the event fires so the span exists by the
                 # time any join on this handle returns
-                tr.emit(f"copy-{stream}", job.handle.kind, t0, t1,
-                        {"nbytes": job.handle.nbytes,
-                         "iter": job.handle.trace_iter})
-            job.handle._event.set()
+                tr.emit(f"copy-{stream}", h.kind, t0, t1,
+                        {"nbytes": job.nbytes, "iter": h.trace_iter})
+            if last:
+                h._event.set()
 
     # ------------------------------------------------------------------
     # launch (engine thread)
@@ -216,15 +287,40 @@ class TransferEngine:
         handle.trace_iter = self.trace_iter
         dst_idx = np.asarray(new_pages, np.int32)
 
-        def copy() -> None:
-            for layer in range(L):  # layer-wise, page-granular scatter
-                host.k[layer, dst_idx] = k_np[layer]
-                host.v[layer, dst_idx] = v_np[layer]
-            with self._lock:
-                self.stats.bytes_out += nbytes
-            self.pool.add_swap_bytes(nbytes)
+        if self.shards == 1:
+            def copy() -> None:
+                for layer in range(L):  # layer-wise, page-granular scatter
+                    host.k[layer, dst_idx] = k_np[layer]
+                    host.v[layer, dst_idx] = v_np[layer]
+                with self._lock:
+                    self.stats.bytes_out += nbytes
+                self.pool.add_swap_bytes(nbytes)
 
-        self._queues[self._stream("out")].put(_Job(handle, copy))
+            self._queues[self._stream("out")].put(_Job(handle, copy, nbytes))
+        else:
+            # one job per shard, each scattering its kv-head slice on its
+            # own stream; the slices partition the arrays so the per-shard
+            # bytes sum EXACTLY to the single-shard total
+            KV = k_np.shape[3]
+            per = KV // self.shards
+            handle._jobs_total = self.shards
+            for s in range(self.shards):
+                lo, hi = s * per, (s + 1) * per
+                nb_s = (k_np[:, :, :, lo:hi].nbytes
+                        + v_np[:, :, :, lo:hi].nbytes)
+
+                def copy_shard(lo=lo, hi=hi, nb_s=nb_s) -> None:
+                    for layer in range(L):
+                        host.k[layer, dst_idx, :, lo:hi] = \
+                            k_np[layer, :, :, lo:hi]
+                        host.v[layer, dst_idx, :, lo:hi] = \
+                            v_np[layer, :, :, lo:hi]
+                    with self._lock:
+                        self.stats.bytes_out += nb_s
+                    self.pool.add_swap_bytes(nb_s)
+
+                self._queues[self._stream("out", s)].put(
+                    _Job(handle, copy_shard, nb_s))
         with self._lock:
             self._pending.append(handle)
         return handle
@@ -251,21 +347,46 @@ class TransferEngine:
         handle.trace_iter = self.trace_iter
         staged = {}
 
-        def gather() -> None:
-            # DRAM-side read of the host pages (layer-major contiguous copy);
-            # pages return to the host free list only once read.
-            staged["k"] = host.k[:, src_idx].copy()
-            staged["v"] = host.v[:, src_idx].copy()
-            with self._lock:
-                self.stats.bytes_in += nbytes
-            self.pool.add_swap_bytes(nbytes)
-
         def apply() -> None:
             host.free(old_pages)
             dev.put_pages(new_pages, staged["k"], staged["v"])
 
         handle._apply = apply
-        self._queues[self._stream("in")].put(_Job(handle, gather))
+        if self.shards == 1:
+            def gather() -> None:
+                # DRAM-side read of the host pages (layer-major contiguous
+                # copy); pages return to the host free list only once read.
+                staged["k"] = host.k[:, src_idx].copy()
+                staged["v"] = host.v[:, src_idx].copy()
+                with self._lock:
+                    self.stats.bytes_in += nbytes
+                self.pool.add_swap_bytes(nbytes)
+
+            self._queues[self._stream("in")].put(_Job(handle, gather, nbytes))
+        else:
+            # preallocate the full staging buffers NOW; each shard job fills
+            # its kv-head slice on its own stream and the staged device
+            # write (apply, at join) uploads the assembled whole — the
+            # handle's event only fires once every shard landed
+            kshape = (host.k.shape[0], len(src_idx)) + host.k.shape[2:]
+            staged["k"] = np.empty(kshape, host.k.dtype)
+            staged["v"] = np.empty(kshape, host.v.dtype)
+            KV = host.k.shape[3]
+            per = KV // self.shards
+            nb_s = nbytes // self.shards  # exact: slices partition the pages
+            handle._jobs_total = self.shards
+            for s in range(self.shards):
+                lo, hi = s * per, (s + 1) * per
+
+                def gather_shard(lo=lo, hi=hi) -> None:
+                    staged["k"][:, :, :, lo:hi] = host.k[:, src_idx, :, lo:hi]
+                    staged["v"][:, :, :, lo:hi] = host.v[:, src_idx, :, lo:hi]
+                    with self._lock:
+                        self.stats.bytes_in += nb_s
+                    self.pool.add_swap_bytes(nb_s)
+
+                self._queues[self._stream("in", s)].put(
+                    _Job(handle, gather_shard, nb_s))
         with self._lock:
             self._pending.append(handle)
         return handle

@@ -2,8 +2,12 @@ from repro.distributed.sharding import (  # noqa: F401
     ShardingContext,
     activate,
     current_context,
+    gather_tp_spec,
     logical_spec,
     model_axis_size,
     shard,
     sharding_for,
+    tp_allgather,
+    tp_axis,
+    tp_body,
 )

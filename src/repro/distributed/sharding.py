@@ -152,6 +152,10 @@ def activate(ctx: Optional[ShardingContext]):
 
 def shard(x, *logical: Optional[str]):
     """Annotate `x` with logical axes; no-op without an active context."""
+    if tp_axis() is not None:
+        # Inside a shard_map TP body every array is already the local shard;
+        # global sharding constraints are meaningless (and rejected) there.
+        return x
     ctx = current_context()
     if ctx is None:
         return x
@@ -184,3 +188,67 @@ def mesh_axis_names() -> Tuple[str, ...]:
     if ctx is None:
         return ()
     return tuple(ctx.mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Gather-TP (reduction-free tensor parallelism)
+# ---------------------------------------------------------------------------
+# The serving engine's TP scheme shards the COLUMN dimension of QKV and the
+# MLP up-projections across the "model" axis, keeps the O/down projections
+# (and embeddings/norms) replicated, and concatenates the per-shard partial
+# activations with a tiled all_gather before each replicated projection.
+# Every cross-shard combine is a pure concatenation — no all-reduce — so the
+# float summation order inside every einsum is identical to the single-device
+# graph and greedy decode stays BITWISE identical at any TP degree.
+#
+# Model code marks the gather points with :func:`tp_allgather`, which is an
+# identity outside a TP body — the TP=1 graphs are untouched.  Executor code
+# wraps its shard_map bodies in ``with tp_body("model"):`` so the model's
+# ``shard(...)`` annotations (global-view constraints) turn into no-ops while
+# tracing the per-shard program.
+
+def tp_axis() -> Optional[str]:
+    """Mesh axis of the enclosing shard_map TP body, or None outside one."""
+    return getattr(_state, "tp_axis", None)
+
+
+@contextlib.contextmanager
+def tp_body(axis: str = "model"):
+    """Mark the dynamic extent in which a per-shard TP program is traced."""
+    prev = tp_axis()
+    _state.tp_axis = axis
+    try:
+        yield
+    finally:
+        _state.tp_axis = prev
+
+
+def tp_allgather(x, axis: int):
+    """Concatenate per-shard partials along ``axis`` (tiled all_gather).
+
+    Identity when not tracing inside :func:`tp_body` — single-device model
+    code is byte-for-byte unchanged.  ``tiled=True`` makes this a pure
+    concat of the shards in axis-index order, the reduction-free combine
+    that keeps gather-TP bitwise identical to the unsharded graph.
+    """
+    ax = tp_axis()
+    if ax is None:
+        return x
+    return jax.lax.all_gather(x, ax, axis=axis % x.ndim, tiled=True)
+
+
+def gather_tp_spec(logical: Sequence[Optional[str]], axis: str = "model") -> P:
+    """PartitionSpec for one parameter leaf under gather-TP.
+
+    Column-shard the MLP up-projections (trailing logical axis "d_ff") and
+    the QKV projections (trailing ("heads"|"kv_heads", head_dim) pair);
+    replicate everything else — O/down projections, embeddings, norms.
+    Works on the stacked per-layer leaves too (their logical tuples carry a
+    leading ``None`` for the layer axis).
+    """
+    t = tuple(logical)
+    if t and t[-1] == "d_ff":
+        return P(*((None,) * (len(t) - 1)), axis)
+    if len(t) >= 2 and t[-2] in ("heads", "kv_heads") and t[-1] is None:
+        return P(*((None,) * (len(t) - 2)), axis, None)
+    return P()

@@ -27,8 +27,19 @@ def make_mesh(cfg: MeshConfig):
 
 
 def make_local_mesh(model: Optional[int] = None):
-    """Mesh over whatever devices exist (tests / smoke runs)."""
+    """Mesh over whatever devices exist (tests / smoke runs).
+
+    Raises ``ValueError`` (not an assert — those vanish under ``python -O``)
+    when the model axis does not divide, or exceeds, the device count.
+    """
     n = len(jax.devices())
     model = model or 1
-    assert n % model == 0
+    if model > n:
+        raise ValueError(
+            f"model axis {model} exceeds the {n} available device(s); "
+            f"start with XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            f"or lower --tp")
+    if n % model != 0:
+        raise ValueError(
+            f"model axis {model} does not divide the {n} available device(s)")
     return jax.make_mesh((n // model, model), ("data", "model"))

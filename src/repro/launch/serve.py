@@ -356,6 +356,13 @@ def main(argv=None) -> int:
                     help="exit nonzero unless reconcile() — the span-vs-"
                          "EngineStats accounting audit — passes (implies "
                          "tracing; use with --trace-out)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shard count; column-sharded QKV/"
+                         "gate/up with a gather before the replicated O/down "
+                         "projections, so greedy outputs stay bitwise "
+                         "identical to --tp 1 (needs >= N local devices, "
+                         "e.g. XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=8)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -390,6 +397,7 @@ def main(argv=None) -> int:
         planahead=not args.no_planahead,
         max_waiting=args.max_waiting,
         tracing=tracing,
+        tp=args.tp,
         seed=args.seed,
     )
     open_loop = args.arrivals != "closed"
@@ -398,7 +406,7 @@ def main(argv=None) -> int:
           f"microbatch={not args.no_microbatch} "
           f"prefix_cache={args.prefix_cache} "
           f"planahead={not args.no_planahead} "
-          f"arrivals={args.arrivals} "
+          f"arrivals={args.arrivals} tp={args.tp} "
           f"pools=({args.device_pages},{args.host_pages})")
     engine = NeoEngine(cfg, ecfg)
     if args.arrivals.startswith("replay:"):

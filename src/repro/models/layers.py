@@ -13,7 +13,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.distributed import shard
+from repro.distributed import shard, tp_allgather
 
 Params = Dict[str, jnp.ndarray]
 
@@ -132,6 +132,9 @@ def swiglu_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
     up = jnp.einsum("...d,df->...f", x, p["w_up"])
     h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
     h = shard(h, *((None,) * (h.ndim - 1)), "d_ff")
+    # gather-TP seam: concat the d_ff shards before the replicated w_down so
+    # the contraction's float summation order matches the unsharded graph
+    h = tp_allgather(h, axis=-1)
     return jnp.einsum("...f,fd->...d", h, p["w_down"])
 
 

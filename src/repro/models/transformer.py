@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.config import ArchConfig, ShapeConfig
 from repro.distributed import shard
-from repro.distributed.sharding import current_context
+from repro.distributed.sharding import current_context, tp_allgather, tp_axis
 from repro.models import attention as attn_lib
 from repro.models.layers import (
     dense_init,
@@ -101,6 +101,8 @@ def attn_full(p: Params, cfg: ArchConfig, x: jnp.ndarray, *, causal: bool = True
     if current_context() is not None and cfg.num_heads % max(1, _model_axis()) == 0:
         q = shard(q, "batch", None, "heads", None)
     o = attn_lib.chunked_attention(q, k, v, causal=causal, window=window)
+    # gather-TP seam: concat per-shard head outputs before the replicated wo
+    o = tp_allgather(o, axis=2)
     out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
     return out, k, v
 
@@ -473,7 +475,9 @@ class DenseLM:
         pre_k = (
             jnp.stack([kv[0] for kv in kvs])
             if kvs
-            else jnp.zeros((0, B, S, cfg.num_kv_heads, cfg.head_dim), cfg.activation_dtype)
+            # KV head count from the scanned cache, not cfg: inside a TP
+            # shard_map body each shard carries num_kv_heads/tp heads
+            else jnp.zeros((0, B, S, g_k.shape[-2], cfg.head_dim), cfg.activation_dtype)
         )
         pre_v = (
             jnp.stack([kv[1] for kv in kvs])
@@ -603,19 +607,34 @@ class DenseLM:
         capacity = capacity or S
         positions = prefix_lens[:, None] + jnp.arange(S)[None, :]
         x = self._embed_tokens(params, tokens)
-        H, hd = cfg.num_heads, cfg.head_dim
-        partial_shapes = (
-            jax.ShapeDtypeStruct((B, S, H, hd), jnp.float32),
-            jax.ShapeDtypeStruct((B, S, H), jnp.float32),
-            jax.ShapeDtypeStruct((B, S, H), jnp.float32),
-        )
 
         def layer(p: Params, kind: str, lidx, x):
             h = rms_norm(x, p["ln1"], cfg.rms_eps)
             q, k, v = project_qkv(p["attn"], cfg, h, positions)
-            acc, l, m = io_callback(prefix_cb, partial_shapes, lidx, q,
-                                    ordered=True)
+            # Head counts derive from the LOCAL q: inside a TP shard_map
+            # body each shard holds H/tp query heads and the per-shard
+            # callback returns partials over exactly those heads.
+            Hq, hd = q.shape[2], q.shape[3]
+            partial_shapes = (
+                jax.ShapeDtypeStruct((B, S, Hq, hd), jnp.float32),
+                jax.ShapeDtypeStruct((B, S, Hq), jnp.float32),
+                jax.ShapeDtypeStruct((B, S, Hq), jnp.float32),
+            )
+            ax = tp_axis()
+            if ax is None:
+                acc, l, m = io_callback(prefix_cb, partial_shapes, lidx, q,
+                                        ordered=True)
+            else:
+                # Per-shard host partials: ordering across layers is carried
+                # by the data dependence (x threads through every layer), so
+                # the callback can be unordered — ordered io_callback is not
+                # supported inside shard_map bodies.
+                sidx = jax.lax.axis_index(ax)
+                acc, l, m = io_callback(prefix_cb, partial_shapes, sidx,
+                                        lidx, q, ordered=False)
             o = attn_lib.suffix_attention_merge(q, k, v, acc, l, m)
+            # gather-TP seam: concat head shards before the replicated wo
+            o = tp_allgather(o, axis=2)
             x = x + jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype),
                                p["attn"]["wo"])
             h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
@@ -650,7 +669,8 @@ class DenseLM:
         pre_k = (
             jnp.stack([kv[0] for kv in kvs])
             if kvs
-            else jnp.zeros((0, B, S, cfg.num_kv_heads, cfg.head_dim), cfg.activation_dtype)
+            # KV head count from the scanned cache (per-shard under TP)
+            else jnp.zeros((0, B, S, g_k.shape[-2], cfg.head_dim), cfg.activation_dtype)
         )
         pre_v = jnp.stack([kv[1] for kv in kvs]) if kvs else pre_k
         k_all = jnp.concatenate([pre_k, g_k.reshape((-1,) + g_k.shape[2:])], axis=0)

@@ -39,6 +39,9 @@ from typing import Any, Dict, List, Tuple
 from repro.obs.tracer import SpanEvent, SpanTracer
 
 _HOST_LANE = re.compile(r"^host(\d+)$")
+# prefixes: TP shards emit per-shard streams ("copy-out0", "copy-in1", ...);
+# the bare names are the single-shard streams.  "copy-sync" deliberately
+# does NOT match — synchronous page copies never overlap a dispatch window.
 _COPY_TRACKS = ("copy-out", "copy-in", "copy-all")
 
 
@@ -133,7 +136,7 @@ def reconcile(tracer: SpanTracer, stats, *, rtol: float = 1e-6,
                 lanes_by_iter.setdefault(it, []).append(e)
         elif e.ph == "X" and e.track == "engine" and e.name == "dispatch":
             dispatch_by_iter[(e.args or {})["iter"]] = (e.t0, e.t1)
-        elif e.ph == "X" and e.track in _COPY_TRACKS:
+        elif e.ph == "X" and e.track.startswith(_COPY_TRACKS):
             copies.append(e)
         elif e.ph == "X" and e.track == "engine" and e.name in (
                 "plan_fresh", "plan_harvest"):

@@ -125,6 +125,61 @@ print('DIFF', float(jnp.max(jnp.abs(o1 - o2))), float(jnp.max(jnp.abs(kc1 - kc2)
     assert max(nums) < 1e-4
 
 
+def test_make_local_mesh_rejects_oversized_model_axis():
+    """ValueError (not a bare assert — those vanish under python -O) with a
+    message that names the fix when the model axis exceeds the devices."""
+    from repro.launch.mesh import make_local_mesh
+
+    with pytest.raises(ValueError, match="exceeds the .* available device"):
+        make_local_mesh(model=9999)
+
+
+def test_make_local_mesh_rejects_non_dividing_model_axis():
+    out = run_subprocess("""
+from repro.launch.mesh import make_local_mesh
+try:
+    make_local_mesh(model=3)  # 8 devices, 3 does not divide
+except ValueError as e:
+    print('RAISED', e)
+""")
+    assert out.startswith("RAISED")
+    assert "does not divide" in out
+
+
+def test_blocksharded_decode_kv_indivisible_model_axis():
+    """KV heads (2) that don't divide the model axis (8): default_rules must
+    fall back to split-K (kv_seq == 'model', kv_heads replicated) and the
+    sharded decode must match the contiguous oracle on a (1, 8) mesh."""
+    out = run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.models import attention as A
+from repro.distributed.sharding import ShardingContext, activate, default_rules
+from repro.configs import get_config
+
+cfg = get_config('qwen3-0.6b').replace(kv_shard_mode='blocks')
+mesh = jax.make_mesh((1, 8), ('data', 'model'))
+rules = default_rules(cfg, mesh)
+assert rules['kv_seq'] == 'model', rules
+assert rules['kv_heads'] is None, rules
+rng = np.random.default_rng(0)
+B, S, KV, H, hd = 4, 32, 2, 4, 16
+q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+kc = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+vc = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+kn = jnp.asarray(rng.normal(size=(B, KV, hd)), jnp.float32)
+vn = jnp.asarray(rng.normal(size=(B, KV, hd)), jnp.float32)
+lens = jnp.asarray([3, 17, 31, 8], jnp.int32)
+ctx = ShardingContext.for_arch(cfg, mesh)
+with activate(ctx):
+    o1, kc1, vc1 = jax.jit(lambda *a: A.decode_attention_blocksharded(*a))(q, kc, vc, kn, vn, lens)
+kc2, vc2 = A.write_kv(kc, vc, kn, vn, lens)
+o2 = A.decode_attention(q, kc2, vc2, lens + 1)
+print('DIFF', float(jnp.max(jnp.abs(o1 - o2))), float(jnp.max(jnp.abs(kc1 - kc2))))
+""")
+    nums = [float(x) for x in out.split()[1:3]]
+    assert max(nums) < 1e-4
+
+
 def test_elastic_remesh_subprocess():
     """Drop a data replica mid-run: step re-lowers and numerics continue."""
     out = run_subprocess("""
