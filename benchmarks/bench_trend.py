@@ -4,7 +4,7 @@ perf-trajectory regression vs the checked-in baseline.
 
 This is the CI ``bench-trend`` job's entry point (the summary file is
 uploaded as a build artifact, so the trajectory is inspectable per commit).
-Schema (``neo-bench-trend/v5``; documented in ``benchmarks/README.md``):
+Schema (``neo-bench-trend/v6``; documented in ``benchmarks/README.md``):
 
 * ``engine.*_tok_s``      — smoke token throughputs (RECORDED, not gated:
   they are wall-times of whatever machine ran the job);
@@ -35,7 +35,15 @@ Schema (``neo-bench-trend/v5``; documented in ``benchmarks/README.md``):
   TP=1 vs TP=2 on a fake-device CPU mesh): ``tp2_bitwise_ok`` (GATED:
   gather-TP may never change greedy outputs), ``swap_bytes_equal`` and
   ``stream_split_exact`` (GATED: per-shard copy streams must partition
-  the TP=1 byte totals exactly), plus the recorded per-shard byte split.
+  the TP=1 byte totals exactly), plus the recorded per-shard byte split;
+* ``spec.*`` (v6) — the speculative-decoding A/B (``engine_real.py
+  --spec-only``, low-concurrency fastdecode smoke): ``bitwise_ok`` (GATED:
+  neither drafter may ever change greedy outputs), ``oracle_accepted``
+  (GATED > 0: the verify pass must actually accept) and
+  ``oracle_accept_len_hist`` (GATED: populated at length >= 1), plus
+  ``oracle_speedup`` (GATED > 1: accepted tokens ride the verify pass
+  instead of full engine iterations) and the recorded n-gram-drafter
+  accept counters.
 
 ``--write-baseline`` refreshes ``benchmarks/BENCH_baseline.json`` (commit
 the result deliberately — that is the trajectory being gated).
@@ -50,7 +58,7 @@ import sys
 
 from benchmarks.common import FIG_DIR, HERE
 
-SCHEMA = "neo-bench-trend/v5"
+SCHEMA = "neo-bench-trend/v6"
 REPO_ROOT = os.path.dirname(HERE)
 BASELINE_PATH = os.path.join(HERE, "BENCH_baseline.json")
 SUMMARY_PATH = os.path.join(REPO_ROOT, "BENCH_engine.json")
@@ -77,6 +85,7 @@ def collect(n: int) -> tuple[int, dict]:
     rc |= engine_real.main(["--microbatch-only", "--n", str(n)])
     rc |= engine_real.main(["--mixed-lane-only"])
     rc |= engine_real.main(["--obs-only", "--n", str(n)])
+    rc |= engine_real.main(["--spec-only", "--n", str(n)])
     rc |= prefix_cache.main(["--quick", "--host-serving"])
     rc |= engine_sharded.main([])
     sus = run_sustained(n=max(n, 12), rate=8.0, seed=0)
@@ -129,6 +138,17 @@ def collect(n: int) -> tuple[int, dict]:
             "reconcile_ok": er["obs_tracing_on"]["reconcile_ok"],
             "trace_events": er["obs_tracing_on"]["trace_events"],
             "trace_dropped": er["obs_tracing_on"]["trace_dropped"],
+        },
+        "spec": {
+            "bitwise_ok": er["spec_gates"]["bitwise_ok"],
+            "oracle_speedup": er["spec_gates"]["oracle_speedup"],
+            "oracle_accepted": er["spec_oracle"]["accepted_tokens"],
+            "oracle_accept_len_hist": er["spec_oracle"]["accept_len_hist"],
+            "ngram_drafted": er["spec_ngram"]["drafted_tokens"],
+            "ngram_accepted": er["spec_ngram"]["accepted_tokens"],
+            "spec_off_tok_s": er["spec_off"]["token_throughput"],
+            "spec_ngram_tok_s": er["spec_ngram"]["token_throughput"],
+            "spec_oracle_tok_s": er["spec_oracle"]["token_throughput"],
         },
         "sharded": {
             "tp2_bitwise_ok": sh["tp2_bitwise_ok"],
@@ -196,6 +216,24 @@ def gate(summary: dict, baseline: dict) -> int:
     if not s_sh.get("stream_split_exact", False):
         print("[bench_trend] FAIL: per-shard copy-stream bytes do not "
               "partition the totals in the sharded smoke")
+        fails += 1
+    s_sp = summary.get("spec", {})
+    if not s_sp.get("bitwise_ok", False):
+        print("[bench_trend] FAIL: speculative decoding changed greedy "
+              "outputs in the spec smoke")
+        fails += 1
+    if s_sp.get("oracle_accepted", 0) <= 0:
+        print("[bench_trend] FAIL: the verify pass accepted 0 drafted "
+              "tokens in the spec smoke")
+        fails += 1
+    hist = s_sp.get("oracle_accept_len_hist", {})
+    if not any(int(k) >= 1 and v > 0 for k, v in hist.items()):
+        print("[bench_trend] FAIL: accepted-length histogram empty at >= 1 "
+              "in the spec smoke")
+        fails += 1
+    if s_sp.get("oracle_speedup", 0.0) <= 1.0:
+        print(f"[bench_trend] FAIL: no speculative throughput win "
+              f"(oracle_speedup={s_sp.get('oracle_speedup')})")
         fails += 1
     s_obs = summary.get("obs", {})
     if s_obs.get("tracing_overhead", 0.0) > TRACING_OVERHEAD_TOL:

@@ -332,6 +332,23 @@ class EngineConfig:
     # decode/prefill graphs, the device KV pool, the host-attention KV heads
     # and the copy streams while the scheduler stays device-count-agnostic.
     tp: int = 1
+    # Speculative decoding (SpecOffload-style): decode-only iterations draft
+    # up to ``spec_k`` tokens per row (n-gram prompt lookup by default) and
+    # verify them with chained passes of the SAME fused decode graph, so
+    # greedy outputs stay bitwise identical to non-speculative decode BY
+    # CONSTRUCTION (verification recomputes the exact serial logits; a
+    # rejection truncates the row — out_tokens AND speculative KV pages —
+    # back to them).  Eligibility is structural (decode-only plans, greedy
+    # sampling); the perf model prices the chain depth K per step via
+    # PerfModel.t_verify, mirroring how lane counts are chosen.
+    spec_decode: bool = False
+    # Maximum draft length per row per step (the scheduler picks the
+    # realized K in [0, spec_k] each iteration from the accept-rate EWMA).
+    spec_k: int = 4
+    # N-gram order for the prompt-lookup drafter: the trailing spec_ngram
+    # tokens are matched against the request's earlier tokens and the
+    # continuation of the most recent match is proposed.
+    spec_ngram: int = 3
     seed: int = 0
 
 

@@ -23,6 +23,21 @@ One :meth:`step` = one inference iteration (Fig. 5), executed in explicit
   device lane **borrow** those lanes for their surplus host rows instead of
   serializing them behind the short device dispatch.
 
+**Speculative decoding** (``EngineConfig.spec_decode``; SpecOffload-style)
+rides the step after the base decode emits: drafting rows expand into
+pseudo-rows at successive KV positions and ONE extra batched pass of the
+UNCHANGED fused decode graph verifies every draft position at once
+(:meth:`_run_spec_chain`) — the pass recomputes the exact logits serial
+decode would produce at each position, so greedy outputs stay bitwise
+identical to non-speculative decode BY CONSTRUCTION; a rejection leaves
+``out_tokens`` at the serially-correct emission (drafts are fed through
+detached pseudo-rows, never the row itself) and rolls back the pages the
+chain grew (never a page the row held before the chain, so prefix-shared
+pages are structurally untouchable).  Verify wall time accrues to
+``EngineStats.spec_busy_time`` (NOT device/lane busy time) and its spans
+ride the dedicated unaudited ``spec`` track, keeping
+:func:`repro.obs.reconcile.reconcile` green by construction.
+
 :class:`EngineStats` records the *measured* overlap (pipeline bubble
 fraction, swap bytes hidden under compute, host-vs-device busy time), which
 also feeds :meth:`PerfModel.observe_iteration` so calibration sees real
@@ -119,6 +134,17 @@ class EngineStats:
     planahead_hidden_time: float = 0.0
     # open-loop admission control: arrivals bounced by offer()
     rejected_requests: int = 0
+    # -- speculative decoding ----------------------------------------------
+    # steps that ran a verify chain; drafted/accepted/rejected token counts
+    # (rejected_drafts == drafted_tokens - accepted_tokens); chain wall time
+    # (kept OUT of device/lane busy time so reconcile()'s audit is
+    # untouched); histogram: accepted chain length -> drafting-row count
+    spec_steps: int = 0
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+    rejected_drafts: int = 0
+    spec_busy_time: float = 0.0
+    accept_len_hist: Dict[int, int] = field(default_factory=dict)
     plans: List[str] = field(default_factory=list)
 
     def record_plan(self, plan: BatchPlan) -> None:
@@ -151,6 +177,20 @@ class EngineStats:
         if self.device_busy_time <= 0:
             return float("inf") if self.host_busy_time > 0 else 0.0
         return self.host_busy_time / self.device_busy_time
+
+
+class _SpecRow:
+    """Lightweight decode-row view for batched draft verification: feeds one
+    token at an advanced KV position over the REAL row's page table (shared
+    list — the verify pass scatters its KV into the same pooled pages).
+    Carries exactly the fields :meth:`PagedExecutor.decode` reads."""
+
+    __slots__ = ("all_tokens", "kv_len", "pages")
+
+    def __init__(self, token: int, kv_len: int, pages: List[int]):
+        self.all_tokens = (token,)
+        self.kv_len = kv_len
+        self.pages = pages
 
 
 class NeoEngine:
@@ -212,6 +252,14 @@ class NeoEngine:
                             token_granular=engine_cfg.prefix_token_granular)
                 if engine_cfg.prefix_cache else None
             )
+            # Speculative-decoding drafter (injectable: serve.py swaps in a
+            # DraftModelDrafter for --draft-model, tests inject stubs).  The
+            # drafter is a pure token-level oracle — all KV/page bookkeeping
+            # stays in _run_spec_chain.
+            self.drafter = None
+            if engine_cfg.spec_decode:
+                from repro.core.spec import NgramDrafter
+                self.drafter = NgramDrafter(engine_cfg.spec_ngram)
         else:
             slots = min(engine_cfg.max_requests, 64)
             capacity = engine_cfg.max_batch_tokens
@@ -223,6 +271,7 @@ class NeoEngine:
             self.host_attn = None
             self.transfer = None
             self.prefix_cache = None
+            self.drafter = None  # speculation is a paged-engine feature
         self._rng = np.random.default_rng(engine_cfg.seed)
         self._next_rid = 0
         self.requests: Dict[int, Request] = {}
@@ -659,6 +708,7 @@ class NeoEngine:
             swap_in=rmap(plan_s.swap_in),
             preempt=rmap(plan_s.preempt),
             lane_splits=list(plan_s.lane_splits),
+            spec_k=plan_s.spec_k,
             est_iter_time=plan_s.est_iter_time,
             est_tokens=plan_s.est_tokens,
             stages=plan_s.stages,
@@ -716,6 +766,7 @@ class NeoEngine:
         host_busy0 = self._host_busy_total()
         prefix_busy0 = self._host_prefix_busy_total()
         dev_busy0 = self.stats.device_busy_time
+        spec_busy0 = self.stats.spec_busy_time
         swap_busy0 = self.transfer.stats.busy_time if self.transfer else 0.0
 
         # -- PLAN --------------------------------------------------------------
@@ -783,6 +834,7 @@ class NeoEngine:
                 if self.transfer else 0.0,
                 host_prefix_busy=(self._host_prefix_busy_total() - prefix_busy0)
                 / self.tp if self.host_attn else 0.0,
+                spec_busy=self.stats.spec_busy_time - spec_busy0,
                 pipelined=self.engine_cfg.pipeline and plan.mode != "serial",
             )
         if self.tracer is not None:
@@ -1154,6 +1206,13 @@ class NeoEngine:
             for i, r in enumerate(rows):
                 self._emit(r, row_logits[i], now, emitted)
 
+            # speculative draft -> verify -> accept (deferred verification):
+            # runs AFTER the base emission so the chain's first pass scores
+            # the token just emitted, and BEFORE the JOIN drain so rolled
+            # back pages return to the pool within this step
+            if plan.spec_k > 0 and self.drafter is not None:
+                self._run_spec_chain(plan, rows, now, emitted)
+
         # ==== JOIN phase ====================================================
         # barrier on any transfer not consumed by a dependent dispatch (e.g.
         # gpu_only swap-outs whose victims do not decode this iteration) so
@@ -1177,6 +1236,148 @@ class NeoEngine:
                 for h in out_handles + in_handles:
                     self.stats.swap_hidden_bytes += h.hidden_bytes(
                         dispatch_t0, win_end)
+
+    # -- speculative decoding (draft -> verify -> accept) ----------------------
+    def _run_spec_chain(self, plan: BatchPlan, rows: List[Request], now: float,
+                        emitted: List[Tuple[int, int]]) -> None:
+        """Batched draft verification over this step's decode rows in ONE
+        extra pass of the UNCHANGED fused decode graph.
+
+        Each speculated row expands into ``len(drafts) + 1`` pseudo-rows
+        (:class:`_SpecRow`) at successive KV positions over the row's own
+        page table: pseudo-row 0 feeds the base token the step just emitted
+        (its logits are the next serial token — a free "bonus" even for rows
+        that drafted nothing), pseudo-row ``j >= 1`` feeds draft ``D_{j-1}``
+        at position ``kv_len + j``.  One batched :meth:`PagedExecutor.decode`
+        call then verifies every draft position at once — the graph writes
+        ALL rows' new KV before attention within each layer (device: scatter
+        precedes ``paged_decode_attention``; host: ``append_tokens`` precedes
+        the per-row attention loop), so pseudo-row ``j`` attends over the
+        fresh KV of pseudo-rows ``< j`` exactly as serial decode would.
+        Pseudo-row ``j``'s logits are bitwise the serial logits at that
+        position PROVIDED the shallower feeds all matched the serial tokens
+        — which is precisely the accept condition walked below — so every
+        emitted token equals what non-speculative greedy decode would have
+        produced, by construction.  One dispatch per step (instead of one
+        per accepted token) is where the throughput win comes from: at
+        decode batch sizes the pass cost is dominated by fixed dispatch
+        overhead, not by the extra pseudo-rows.
+
+        Rollback invariants:
+
+        * ``out_tokens`` is only ever appended to by :meth:`_emit` in the
+          accept walk — drafts are fed through detached pseudo-rows, never
+          through the row itself — so a rejection leaves the row exactly at
+          its serial state.  The rejected tail's KV sits at positions
+          ``>= kv_len`` — unread by attention, overwritten by the next
+          serial feed at the same slot, and never adopted by the prefix
+          cache (adoption stops at ``kv_len``).
+        * Pages are rolled back only past the count the row held BEFORE the
+          chain, so a prefix-cache-shared page a sibling still references is
+          structurally untouchable; chain-grown pages are fresh ``alloc``'d
+          refcount-1 pages by definition.
+        * Pool exhaustion during up-front growth caps that row's draft depth
+          to the positions its pages cover (a row whose base write position
+          cannot be covered rides plain decode this step instead).
+
+        Verify wall time accrues to ``spec_busy_time`` and the ``spec``
+        span track only — device/lane busy time and the reconcile() audit
+        are untouched.
+        """
+        if self.engine_cfg.decode_sample != "greedy":
+            return
+        page = self._page
+        cand = [r for r in rows
+                if r.state == RequestState.RUNNING and not r.is_done()]
+        if not cand:
+            return
+        cand_drafts: Dict[int, List[int]] = {}
+        for r in cand:
+            cap = min(plan.spec_k, r.max_new_tokens - len(r.out_tokens) - 1)
+            cand_drafts[r.rid] = (
+                list(self.drafter.propose(r.all_tokens, cap)[:cap])
+                if cap > 0 else [])
+        if not any(cand_drafts.values()):
+            return  # nothing drafted anywhere: skip the verify pass entirely
+        # Up-front page growth: a depth-d row writes KV at positions
+        # kv_len .. kv_len + d, so it needs (kv_len + d) // page + 1 pages.
+        # Exhaustion caps the depth to covered positions; surplus pages roll
+        # back in the accept walk.
+        erows: List[Request] = []
+        drafts: List[List[int]] = []
+        base_pages: List[int] = []
+        for r in cand:
+            d = cand_drafts[r.rid]
+            host = r.location == "cpu"
+            pool = self.pool.host if host else self.pool.device
+            pre = len(r.pages)
+            need = (r.kv_len + len(d)) // page + 1
+            while len(r.pages) < need:
+                if self.prefix_cache is not None:
+                    self.prefix_cache.make_room("cpu" if host else "gpu", 1)
+                if pool.free_pages < 1:
+                    break
+                r.pages = r.pages + pool.alloc(1)
+            max_depth = len(r.pages) * page - 1 - r.kv_len
+            if max_depth < 0:
+                continue  # base write position uncovered: plain decode
+            erows.append(r)
+            drafts.append(d[:max_depth])
+            base_pages.append(pre)
+        if not erows:
+            return
+        tr = self.tracer
+        t0 = time.perf_counter()
+        eflags = [r.location == "cpu" for r in erows]
+        prows: List[_SpecRow] = []
+        pflags: List[bool] = []
+        starts: List[int] = []
+        for i, r in enumerate(erows):
+            starts.append(len(prows))
+            for j, tok in enumerate([r.all_tokens[-1]] + drafts[i]):
+                prows.append(_SpecRow(tok, r.kv_len + j, r.pages))
+                pflags.append(eflags[i])
+        logits = np.asarray(self.executor.decode(prows, pflags))
+        # ---- accept walk: emit serially from the verified logits ----------
+        drafted = sum(len(d) for d in drafts)
+        accepted_total = 0
+        for i, r in enumerate(erows):
+            d = drafts[i]
+            acc = 0
+            for j in range(len(d) + 1):
+                if r.is_done():
+                    break
+                self._emit(r, logits[starts[i] + j], now, emitted)
+                tok = r.out_tokens[-1]
+                if j < len(d):
+                    if tok == d[j]:
+                        acc += 1
+                    else:
+                        break  # the emitted token IS the serial correction
+            accepted_total += acc
+            if d:
+                self.stats.accept_len_hist[acc] = (
+                    self.stats.accept_len_hist.get(acc, 0) + 1)
+            # roll back pages grown past the final KV coverage; never below
+            # the pre-chain count (shared prefix pages live there)
+            need = max(base_pages[i], r.kv_len // page + 1)
+            if len(r.pages) > need:
+                extra = r.pages[need:]
+                r.pages = r.pages[:need]
+                pool = self.pool.host if eflags[i] else self.pool.device
+                pool.free(extra)
+        t1 = time.perf_counter()
+        self.stats.spec_steps += 1
+        self.stats.drafted_tokens += drafted
+        self.stats.accepted_tokens += accepted_total
+        self.stats.rejected_drafts += drafted - accepted_total
+        self.stats.spec_busy_time += t1 - t0
+        self.perf.observe_accept(drafted, accepted_total)
+        if tr is not None:
+            tr.emit("spec", "verify", t0, t1,
+                    {"iter": self.stats.iterations, "k": plan.spec_k,
+                     "rows": len(erows), "pseudo_rows": len(prows),
+                     "drafted": drafted, "accepted": accepted_total})
 
     # -- contiguous families ---------------------------------------------------
     def _step_contiguous(self, plan: BatchPlan, now: float, emitted: List[Tuple[int, int]]) -> None:

@@ -10,6 +10,13 @@ its scale factor up and the scheduler offloads less.
 
 All times are PER TRANSFORMER LAYER, matching the paper's
 ``T_tr = L × (max{T_l0, T_ca1} + max{T_l1 + T_ga0, T_ca0})``.
+
+Speculative decoding adds a ``"verify"`` scale (:meth:`PerfModel.t_verify`
+— the per-layer cost of the batched pseudo-row verification pass at
+depth K) and an EWMA-tracked accept rate (``spec_accept``,
+:meth:`observe_accept`); :meth:`spec_expected_emitted` turns the accept
+rate into the expected emitted-token count the scheduler maximizes when
+pricing K (``docs/spec_decode.md``).
 """
 
 from __future__ import annotations
@@ -42,8 +49,14 @@ class PerfModel:
     scale: Dict[str, float] = field(
         default_factory=lambda: {"linear": 1.0, "gpu_attn": 1.0, "cpu_attn": 1.0,
                                  "swap": 1.0, "host_prefix": 1.0,
-                                 "collective": 1.0}
+                                 "collective": 1.0, "verify": 1.0}
     )
+    # EWMA of the speculative-decoding per-draft accept rate (fraction of
+    # drafted tokens the verify chain accepts).  Drives the scheduler's
+    # choice of chain depth K: expected emissions per row for a depth-k
+    # chain are the geometric sum (1 - a^(k+1)) / (1 - a).  Starts at 0.5
+    # so the first speculative steps draft shallow chains until measured.
+    spec_accept: float = 0.5
 
     @classmethod
     def for_arch(cls, cfg: ArchConfig, hw_name: str = "tpu_v5e",
@@ -168,6 +181,49 @@ class PerfModel:
         bytes_ = n_tokens * (cfg.num_heads * cfg.head_dim + cfg.d_ff) * 2
         link_bw = self.hw.ici_bw if self.hw.ici_bw > 0 else self.hw.pcie_bw
         return self.scale["collective"] * bytes_ * (self.tp - 1) / self.tp / link_bw
+
+    def t_verify(self, k: int, *, n_rows: int, host_kv_tokens: int = 0,
+                 dev_kv_tokens: int = 0) -> float:
+        """Per-layer cost of a depth-``k`` speculative verify chain
+        (seconds).
+
+        Verification reuses the UNCHANGED fused decode graph: after the base
+        decode emits, the engine runs up to ``k`` extra chained decode passes
+        over the drafting rows (plus the pass that scores the final draft),
+        so a depth-k chain prices as ``k + 1`` serial decode steps — linear
+        stage over ``n_rows`` plus the rows' attention on whichever side
+        their KV lives.  The composed estimators carry their own EWMA
+        scales; the ``"verify"`` scale on top absorbs chain-dispatch
+        overhead the per-stage models don't see (k+1 graph launches per
+        step).  Zero at k == 0 — a non-speculative plan prices exactly as
+        before.
+        """
+        if k <= 0 or n_rows <= 0:
+            return 0.0
+        per_pass = (self.t_linear(n_rows) + self.t_cpu_attn(host_kv_tokens)
+                    + self.t_gpu_attn(dev_kv_tokens))
+        return self.scale["verify"] * (k + 1) * per_pass
+
+    def spec_expected_emitted(self, k: int) -> float:
+        """Expected tokens emitted per drafting row by a depth-``k`` chain
+        under the current accept-rate EWMA ``a``: the geometric sum
+        ``1 + a + a² + … + a^k`` (base/bonus token plus each draft that
+        survives given all earlier drafts survived).  k = 0 -> 1.0 (the
+        plain decode emission)."""
+        a = min(max(self.spec_accept, 0.0), 0.999)
+        return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+    def observe_accept(self, drafted: int, accepted: int) -> None:
+        """EWMA-refresh the speculative accept rate from one iteration's
+        drafted/accepted token counts (straggler-clamped like the stage
+        scales: the rate lives in [0.01, 0.99] so a cold streak cannot
+        permanently disable drafting — k=0 stays available every step)."""
+        if drafted <= 0:
+            return
+        a = self.ewma_alpha
+        rate = accepted / drafted
+        s = (1 - a) * self.spec_accept + a * rate
+        self.spec_accept = min(max(s, 0.01), 0.99)
 
     def t_transfer_qo(self, n_rows: int) -> float:
         """Q down + attention-output up for offloaded rows (TrQKV/TrO)."""
@@ -294,6 +350,7 @@ class PerfModel:
     def observe_iteration(self, stages, *, host_busy: float = 0.0,
                           device_busy: float = 0.0, swap_busy: float = 0.0,
                           host_prefix_busy: float = 0.0,
+                          spec_busy: float = 0.0,
                           pipelined: bool = False) -> None:
         """Refresh calibration from one iteration's MEASURED lane times.
 
@@ -335,3 +392,8 @@ class PerfModel:
             # delta for this iteration vs the plan's priced t_host_prefix —
             # the last analytic-only stage joins the EWMA loop
             self.observe("host_prefix", L * stages.t_host_prefix, host_prefix_busy)
+        t_verify = getattr(stages, "t_verify", 0.0)
+        if spec_busy > 0 and t_verify > 0:
+            # speculative verify chain: wall time of the extra chained decode
+            # passes vs the plan's priced t_verify(K)
+            self.observe("verify", L * t_verify, spec_busy)

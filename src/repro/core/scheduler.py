@@ -22,6 +22,13 @@ Policies:
                      attention offloaded to the host; no balance constraint.
   * ``simple``     — strawman #1 (§3.1): full offload, no overlap (the perf
                      model adds stages serially instead of max-combining).
+
+Plan annotation: after policy selection the plan is annotated with lane
+splits (``_annotate_lanes``, ROADMAP PR 3/4) and a speculation depth
+(``_annotate_spec``): eligibility is STRUCTURAL (decode-only greedy
+plans), while the depth ``K ∈ [1, spec_k]`` is PRICED — argmax of
+expected emitted tokens per second using ``PerfModel.t_verify`` and the
+EWMA accept rate (see ``docs/spec_decode.md``).
 """
 
 from __future__ import annotations
@@ -79,6 +86,10 @@ class StageEstimates:
     # the device dispatch window, so it lands on the device side of every
     # overlap max.  Identically 0.0 at tp=1 — plans stay bit-identical.
     t_coll: float = 0.0
+    # per-layer cost of the speculative verify chain (K+1 chained decode
+    # passes over the drafting rows); priced by PerfModel.t_verify when the
+    # plan drafts (spec_k > 0), identically 0.0 otherwise.
+    t_verify: float = 0.0
 
 
 @dataclass
@@ -106,6 +117,13 @@ class BatchPlan:
     # decode-only plans BORROW the lanes so their surplus host rows overlap
     # the short device lane instead of serializing behind it.
     lane_splits: List[int] = field(default_factory=list)
+    # Speculative-decoding chain depth for this iteration: each decode row
+    # drafts up to ``spec_k`` tokens which the engine verifies with chained
+    # passes of the unchanged fused decode graph.  Set by
+    # :meth:`NeoScheduler._annotate_spec` on decode-only plans when
+    # ``EngineConfig.spec_decode`` is on (structural eligibility); the perf
+    # model PRICES the depth — 0 means draft nothing (plain decode).
+    spec_k: int = 0
     # estimates
     est_iter_time: float = 0.0
     est_tokens: int = 0
@@ -170,7 +188,7 @@ class BatchPlan:
             f"dec_cpu0={len(self.decode_cpu0)} dec_cpu1={len(self.decode_cpu1)} "
             f"swap_out={len(self.swap_out)} swap_in={len(self.swap_in)} "
             f"preempt={len(self.preempt)} "
-            f"lanes={self.num_host_lanes} "
+            f"lanes={self.num_host_lanes} spec_k={self.spec_k} "
             f"est={self.est_iter_time * 1e3:.2f}ms/{self.est_tokens}tok"
         )
 
@@ -315,6 +333,7 @@ class NeoScheduler:
         else:
             plan = self._plan_neo(pools, st)
         self._annotate_lanes(plan)
+        self._annotate_spec(plan)
         if tr is not None:
             tr.emit("sched", "plan", t0, time.perf_counter(),
                     {"mode": plan.mode, "speculative": state is not None})
@@ -387,6 +406,62 @@ class NeoScheduler:
         plan.lane_splits = best_splits
         plan.est_iter_time = self.cfg.num_layers * max(
             best_t, plan.stages.t_swap)
+
+    # ------------------------------------------------------------------
+    # speculative-decoding annotation
+    # ------------------------------------------------------------------
+    def _annotate_spec(self, plan: BatchPlan) -> None:
+        """Choose the speculative chain depth K for a decode-only plan.
+
+        Mirrors the lane-plan split: eligibility is STRUCTURAL (speculation
+        on, greedy sampling, decode rows present, no prefill — a prefill
+        step already saturates the device, and at smoke scale a model-gated
+        on/off decision would never fire), while the perf model PRICES the
+        depth.  For each K in [0, ``EngineConfig.spec_k``] the expected
+        iteration emits ``rows × spec_expected_emitted(K)`` tokens in
+        ``est_iter_time + L × t_verify(K)`` seconds (the verify chain is
+        K+1 extra serial passes of the same decode graph, priced by the
+        EWMA-calibrated :meth:`PerfModel.t_verify`); the K maximizing that
+        expected throughput wins.  Like the lane split's K ∈ [2, max_host_lanes],
+        the candidate set is K ∈ [1, spec_k]: once structurally eligible the
+        plan always drafts and the model picks only the DEPTH (an accept-rate
+        collapse drives K to 1, the cheapest probe that keeps the EWMA
+        refreshed — per-row caps in the engine still shrink a row's chain
+        to 0 when its token budget is exhausted).
+        """
+        plan.spec_k = 0
+        plan.stages.t_verify = 0.0
+        cfg = self.engine_cfg
+        if not (cfg.spec_decode and cfg.spec_k > 0):
+            return
+        if cfg.decode_sample != "greedy":
+            return  # verification recomputes exact greedy argmax logits
+        if plan.prefill or plan.mode == "idle" or not plan.decode_rows:
+            return
+        perf = self.perf
+        L = max(self.cfg.num_layers, 1)
+        rows = plan.decode_rows
+        host_kv = self._kv_tokens(plan.host_rows)
+        dev_kv = self._kv_tokens(plan.decode_gpu)
+        base_t = plan.est_iter_time
+        if base_t <= 0.0:
+            # serial/unestimated plans: price the base step as one decode pass
+            base_t = L * (perf.t_linear(len(rows)) + perf.t_cpu_attn(host_kv)
+                          + perf.t_gpu_attn(dev_kv))
+        best_k, best_rate = 1, 0.0
+        for k in range(1, cfg.spec_k + 1):
+            t_v = perf.t_verify(k, n_rows=len(rows), host_kv_tokens=host_kv,
+                                dev_kv_tokens=dev_kv)
+            rate = len(rows) * perf.spec_expected_emitted(k) / (base_t + L * t_v)
+            if rate > best_rate:
+                best_k, best_rate = k, rate
+        plan.spec_k = best_k
+        plan.stages.t_verify = perf.t_verify(
+            best_k, n_rows=len(rows), host_kv_tokens=host_kv,
+            dev_kv_tokens=dev_kv)
+        plan.est_iter_time = base_t + L * plan.stages.t_verify
+        plan.est_tokens += int(
+            len(rows) * (perf.spec_expected_emitted(best_k) - 1.0))
 
     @staticmethod
     def _lane_loads(kv: List[int], splits: List[int]) -> List[Tuple[int, int]]:

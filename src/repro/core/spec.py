@@ -1,0 +1,110 @@
+"""Speculative-decoding drafters (SpecOffload-style, arXiv 2505.10259).
+
+NEO's offload schedule leaves the device with spare compute exactly when
+rows are latency-bound on host attention (host-placed and batch-1 decode
+rows emit one token per step).  Speculative decoding spends that headroom:
+a cheap DRAFTER proposes up to K tokens per row, and the engine VERIFIES
+them with chained passes of the *unchanged* fused decode graph
+(``NeoEngine._run_spec_chain``) — each pass recomputes the exact logits
+serial decode would have produced at that position, so greedy outputs are
+bitwise identical to non-speculative decode BY CONSTRUCTION and a
+rejection simply truncates the row back to the serially-correct state
+(see ``docs/spec_decode.md`` for the full argument).
+
+Two drafters, selected at engine construction:
+
+* :class:`NgramDrafter` (default — zero extra weights): prompt-lookup /
+  n-gram drafting.  The row's trailing ``n``-gram is matched against its
+  own earlier tokens (prompt + generated); the continuation of the most
+  recent match is proposed.  Multi-turn and summarization traces — the
+  same workloads whose prefix-cache hit rates prove heavy token reuse —
+  repeat long spans verbatim, which is what makes this free drafter
+  accept at all.
+* :class:`DraftModelDrafter`: a tiny stateless draft model (e.g.
+  ``configs/qwen3_0_6b.py`` drafting for ``qwen3_14b.py``) greedily rolls
+  out K tokens by re-prefilling a trailing token window per draft.  The
+  draft model never touches the KV pools — it is a pure token-level
+  oracle, so pool accounting, rollback, and the bitwise argument are
+  identical for both drafters.
+
+Drafters are pure: ``propose(tokens, k)`` returns at most ``k`` token ids
+and mutates nothing.  Engine-side caps (row budget, plan ``spec_k``)
+and all KV/page bookkeeping live in the engine, keeping the drafter
+surface small enough for tests to stub (a wrong-token stub forces the
+rejection path; replaying a recorded serial output forces full accepts).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+class NgramDrafter:
+    """Prompt-lookup drafting: propose the continuation of the most recent
+    earlier occurrence of the row's trailing ``n``-gram.
+
+    Matching degrades gracefully: if the full ``n``-gram has no earlier
+    occurrence, shorter suffixes down to a single token are tried.  Returns
+    an empty list when nothing matches — the row then rides the verify
+    chain for its free bonus token only (a depth-0 chain row).
+    """
+
+    def __init__(self, n: int = 3, min_n: int = 1):
+        self.n = max(1, int(n))
+        self.min_n = max(1, int(min_n))
+
+    def propose(self, tokens: Sequence[int], k: int) -> List[int]:
+        if k <= 0 or len(tokens) < self.min_n + 1:
+            return []
+        toks = list(tokens)
+        for n in range(min(self.n, len(toks) - 1), self.min_n - 1, -1):
+            tail = toks[-n:]
+            # most recent earlier occurrence of the trailing n-gram
+            for start in range(len(toks) - n - 1, -1, -1):
+                if toks[start:start + n] == tail:
+                    cont = toks[start + n:start + n + k]
+                    if cont:
+                        return cont
+        return []
+
+
+class DraftModelDrafter:
+    """Greedy rollout from a tiny stateless draft model.
+
+    Each of the K drafts re-prefills the last ``window`` tokens of the
+    row's context through ``model.prefill`` and takes the argmax — no KV
+    cache, no pool pages, no device-state coupling with the target model.
+    K short prefills of a 0.6B draft are far cheaper than one decode step
+    of a 14B target, which is the SpecOffload trade; at smoke scale the
+    win is measured by the same gates as the n-gram drafter.
+
+    The draft and target vocabularies must match (token ids are proposed
+    verbatim); the qwen3 family satisfies this.
+    """
+
+    def __init__(self, model, params, *, window: int = 64,
+                 vocab_size: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.window = max(8, int(window))
+        self.vocab_size = vocab_size
+
+    def propose(self, tokens: Sequence[int], k: int) -> List[int]:
+        import jax.numpy as jnp
+
+        if k <= 0 or not len(tokens):
+            return []
+        ctx = list(tokens)
+        out: List[int] = []
+        for _ in range(k):
+            win = ctx[-self.window:]
+            logits, _ = self.model.prefill(
+                self.params, jnp.asarray([win], dtype=jnp.int32))
+            tok = int(np.argmax(np.asarray(logits[0])))
+            if self.vocab_size is not None and not (0 <= tok < self.vocab_size):
+                break
+            out.append(tok)
+            ctx.append(tok)
+        return out

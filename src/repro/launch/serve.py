@@ -59,6 +59,12 @@ def _mirror_stats(engine: NeoEngine, metrics: ServeMetrics) -> None:
     metrics.plan_busy_time = engine.stats.plan_busy_time
     metrics.planahead_hidden_time = engine.stats.planahead_hidden_time
     metrics.rejected_requests = engine.stats.rejected_requests
+    metrics.spec_steps = engine.stats.spec_steps
+    metrics.drafted_tokens = engine.stats.drafted_tokens
+    metrics.accepted_tokens = engine.stats.accepted_tokens
+    metrics.rejected_drafts = engine.stats.rejected_drafts
+    metrics.spec_busy_time = engine.stats.spec_busy_time
+    metrics.accept_len_hist = dict(engine.stats.accept_len_hist)
     if engine.pool is not None:
         metrics.swap_bytes = engine.pool.swap_bytes
     if getattr(engine, "prefix_cache", None) is not None:
@@ -363,6 +369,22 @@ def main(argv=None) -> int:
                          "identical to --tp 1 (needs >= N local devices, "
                          "e.g. XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=8)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="speculative decoding: n-gram drafter + chained "
+                         "verification on the unchanged fused decode graph; "
+                         "greedy outputs stay bitwise identical to "
+                         "non-speculative decode (see docs/spec_decode.md)")
+    ap.add_argument("--spec-k", type=int, default=EngineConfig.spec_k,
+                    help="max drafted tokens per row per step; the perf "
+                         "model prices K in [1, spec_k] each plan")
+    ap.add_argument("--draft-model", default="",
+                    help="arch name of a tiny draft model (e.g. qwen3-0.6b) "
+                         "to use instead of the n-gram drafter; implies "
+                         "--spec-decode")
+    ap.add_argument("--require-accepts", action="store_true",
+                    help="exit nonzero if speculative decoding accepted 0 "
+                         "drafted tokens (CI smoke gate; use with "
+                         "--spec-decode)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -398,6 +420,8 @@ def main(argv=None) -> int:
         max_waiting=args.max_waiting,
         tracing=tracing,
         tp=args.tp,
+        spec_decode=args.spec_decode or bool(args.draft_model),
+        spec_k=args.spec_k,
         seed=args.seed,
     )
     open_loop = args.arrivals != "closed"
@@ -407,8 +431,26 @@ def main(argv=None) -> int:
           f"prefix_cache={args.prefix_cache} "
           f"planahead={not args.no_planahead} "
           f"arrivals={args.arrivals} tp={args.tp} "
+          f"spec={ecfg.spec_decode} "
           f"pools=({args.device_pages},{args.host_pages})")
     engine = NeoEngine(cfg, ecfg)
+    if args.draft_model:
+        import jax
+
+        from repro.core.spec import DraftModelDrafter
+        from repro.models.api import get_model
+        dcfg = (get_smoke_config(args.draft_model) if args.smoke
+                else get_config(args.draft_model))
+        if dcfg.vocab_size != cfg.vocab_size:
+            print(f"[serve] FAIL: draft vocab {dcfg.vocab_size} != target "
+                  f"vocab {cfg.vocab_size} (token ids are proposed verbatim)")
+            return 1
+        dmodel = get_model(dcfg)
+        dparams = dmodel.init(jax.random.key(args.seed + 1))
+        engine.drafter = DraftModelDrafter(dmodel, dparams,
+                                           vocab_size=cfg.vocab_size)
+        print(f"[serve] draft model: {dcfg.name} "
+              f"(window={engine.drafter.window})")
     if args.arrivals.startswith("replay:"):
         trace = get_trace(args.arrivals, args.n, args.rate, args.seed)
     else:
@@ -445,6 +487,15 @@ def main(argv=None) -> int:
     if args.require_hits and m.prefix_hit_rate <= 0.0:
         print("[serve] FAIL: prefix-cache hit rate is 0 on a shared-prefix trace")
         return 1
+    if ecfg.spec_decode:
+        s = engine.stats
+        print(f"[serve] spec: steps={s.spec_steps} drafted={s.drafted_tokens} "
+              f"accepted={s.accepted_tokens} rejected={s.rejected_drafts} "
+              f"hist={dict(sorted(s.accept_len_hist.items()))}")
+        if args.require_accepts and s.accepted_tokens == 0:
+            print("[serve] FAIL: speculative decoding accepted 0 drafted "
+                  "tokens under --require-accepts")
+            return 1
     if args.host_serving:
         # epsilon: two pages of slack plus 10% of the host-served volume —
         # occasional BY-DESIGN promotions are tolerated (a host preference

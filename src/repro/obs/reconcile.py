@@ -26,6 +26,12 @@ instrumentation; all timestamps are shared-clock ``perf_counter``):
 * ``copy-out`` / ``copy-in`` / ``copy-all`` tracks — one span per
   async copy job with ``args.nbytes`` and ``args.iter``.
 
+The ``spec`` track (batched draft-verification passes) is deliberately
+OUTSIDE this audit, like ``copy-sync``: verify wall time accrues only to
+``EngineStats.spec_busy_time`` and never enters the lane busy / overlap
+/ bubble formulas recomputed here, so speculation cannot perturb the
+audited numbers by construction (see ``docs/spec_decode.md``).
+
 The pass refuses to certify a wrapped ring (``tracer.dropped > 0``): a
 truncated timeline cannot audit cumulative counters.
 """

@@ -126,6 +126,16 @@ class ServeMetrics:
     planahead_hidden_time: float = 0.0
     # open-loop admission control: requests refused at offer() time
     rejected_requests: int = 0
+    # speculative decoding (EngineStats mirror; zeros when --spec-decode is
+    # off): chained-verify steps run, drafts proposed/accepted/rejected,
+    # wall time spent in verify passes, and the accepted-length histogram
+    # (accepted-run length per speculated row per step)
+    spec_steps: int = 0
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+    rejected_drafts: int = 0
+    spec_busy_time: float = 0.0
+    accept_len_hist: Dict[int, int] = field(default_factory=dict)
 
     # ------------------------------------------------------------------
     @property
@@ -302,6 +312,14 @@ class ServeMetrics:
             "plan_busy_s": round(self.plan_busy_time, 3),
             "planahead_hidden_s": round(self.planahead_hidden_time, 3),
             "rejected_requests": self.rejected_requests,
+            # speculative decoding (all zeros when disabled)
+            "spec_steps": self.spec_steps,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "rejected_drafts": self.rejected_drafts,
+            "spec_busy_s": round(self.spec_busy_time, 3),
+            "accept_len_hist": {str(k): v for k, v in
+                                sorted(self.accept_len_hist.items())},
             # terminal accounting: every offered request lands in exactly
             # one bucket (rejections/cancellations no longer vanish)
             "terminal_counts": self.terminal_counts,

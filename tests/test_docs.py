@@ -1,0 +1,59 @@
+"""Docs hygiene: the user-facing docs exist, cross-link each other, and
+every relative markdown link resolves to a real file.
+
+This backs the CI docs-hygiene step — a renamed module or moved doc must
+fail here, not silently 404 for a reader.
+"""
+
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = [
+    REPO / "README.md",
+    REPO / "docs" / "architecture.md",
+    REPO / "docs" / "spec_decode.md",
+    REPO / "benchmarks" / "README.md",
+    REPO / "ROADMAP.md",
+]
+
+# [text](target) — skip images, anchors-only, and absolute URLs
+_LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)#\s]+)(?:#[^)]*)?\)")
+
+
+def _links(doc: Path):
+    for m in _LINK.finditer(doc.read_text()):
+        target = m.group(1)
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        yield target
+
+
+def test_docs_exist():
+    for doc in DOCS:
+        assert doc.is_file(), f"missing doc: {doc.relative_to(REPO)}"
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda d: str(d.relative_to(REPO)))
+def test_relative_links_resolve(doc):
+    broken = [t for t in _links(doc) if not (doc.parent / t).exists()]
+    assert not broken, f"broken links in {doc.relative_to(REPO)}: {broken}"
+
+
+def test_docs_cross_linked():
+    """README <-> architecture must point at each other, and both must
+    reach spec_decode.md and benchmarks/README.md."""
+    readme = (REPO / "README.md").read_text()
+    arch = (REPO / "docs" / "architecture.md").read_text()
+    assert "docs/architecture.md" in readme
+    assert "docs/spec_decode.md" in readme
+    assert "benchmarks/README.md" in readme
+    assert "README.md" in arch and "spec_decode.md" in arch
+
+
+def test_docs_mention_tier1_command():
+    """The quickstart must carry the exact tier-1 invocation ROADMAP pins."""
+    readme = (REPO / "README.md").read_text()
+    assert "PYTHONPATH=src python -m pytest -x -q" in readme

@@ -1,0 +1,250 @@
+"""Speculative decoding: greedy outputs must be bitwise identical with
+speculation on, off, and under forced rejection / forced acceptance — across
+full-offload (fastdecode) and mixed NEO plans, preemption, and prefix-cache
+page sharing — while rollback never leaks or double-frees a pooled page.
+
+The drafter seam is exercised three ways: the real n-gram drafter, a replay
+drafter that proposes exactly the serial continuation (forces full accepts),
+and a wrong-token drafter that perturbs it (forces full rejection).  Identity
+must hold for all three: the chain verifies with the UNCHANGED decode graph,
+so draft quality may only move throughput, never tokens.
+"""
+
+import jax
+import pytest
+
+from repro.config import EngineConfig
+from repro.configs import get_smoke_config
+from repro.core.engine import NeoEngine
+from repro.core.perfmodel import PerfModel
+from repro.core.request import RequestState
+from repro.core.spec import NgramDrafter
+from repro.models.api import get_model
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_smoke_config("qwen3-0.6b")
+    model = get_model(cfg)
+    params = model.init(jax.random.key(7))
+    return cfg, model, params
+
+
+def _run(cfg, params, prompts, *, policy, spec, n_out=8, drafter=None,
+         device_pages=8, host_pages=128, **kw):
+    kw.setdefault("planahead", False)
+    ecfg = EngineConfig(device_pool_pages=device_pages,
+                        host_pool_pages=host_pages,
+                        max_batch_tokens=256, policy=policy,
+                        pipeline=True, microbatch=True,
+                        spec_decode=spec, **kw)
+    eng = NeoEngine(cfg, ecfg, params=params)
+    if drafter is not None:
+        eng.drafter = drafter
+    rids = [eng.submit(p, n_out) for p in prompts]
+    done = eng.run_until_done(500)
+    out = {r: done[r] for r in rids}
+    stats = eng.stats
+    states = {r: eng.requests[r].state for r in rids}
+    # page-leak probe: (device, host) pages still referenced after the run
+    # — spec runs must match the non-spec baseline exactly (rollback frees
+    # every chain-grown page)
+    pool_used = (eng.pool.device.used_pages, eng.pool.host.used_pages)
+    stats.prefix_hits = (eng.prefix_cache.stats.hits
+                         if eng.prefix_cache is not None else 0)
+    eng.close()
+    return out, stats, states, pool_used
+
+
+class ReplayDrafter:
+    """Proposes exactly the serial continuation (recorded from a reference
+    run) — every draft must be accepted."""
+
+    def __init__(self, prompts, ref_out):
+        self.table = {}
+        for p, o in zip(prompts, ref_out.values()):
+            seq = list(p) + list(o)
+            for t in range(len(o)):
+                self.table[tuple(seq[:len(p) + t])] = list(o[t:])
+
+    def propose(self, tokens, k):
+        return self.table.get(tuple(tokens), [])[:k]
+
+
+class WrongDrafter(ReplayDrafter):
+    """Proposes one token that provably differs from the serial next token —
+    every draft must be rejected, exercising rollback on every spec step."""
+
+    def __init__(self, prompts, ref_out, vocab):
+        super().__init__(prompts, ref_out)
+        self.vocab = vocab
+
+    def propose(self, tokens, k):
+        cont = super().propose(tokens, k)
+        return [(cont[0] + 1) % self.vocab] if cont else []
+
+
+# ---------------------------------------------------------------------------
+def test_ngram_drafter_proposes_repeats():
+    d = NgramDrafter(3)
+    # trailing 3-gram [4,5,6] occurred earlier; its continuation is 7,8,9
+    assert d.propose([4, 5, 6, 7, 8, 9, 1, 4, 5, 6], 3) == [7, 8, 9]
+    assert d.propose([4, 5, 6, 7, 8, 9, 1, 4, 5, 6], 2) == [7, 8]
+    # no repeat anywhere -> nothing proposed
+    assert d.propose([1, 2, 3, 4, 5, 6, 7], 4) == []
+    # degradation: the 3-gram is novel but the trailing 1-gram repeats;
+    # the MOST RECENT earlier occurrence (the middle 9) wins
+    assert d.propose([9, 1, 9, 2, 9], 2) == [2, 9]
+    assert d.propose([], 4) == []
+    assert d.propose([1, 2, 3], 0) == []
+
+
+@pytest.mark.parametrize("policy", ["fastdecode", "neo"])
+def test_spec_bitwise_identical(dense_setup, rng, policy):
+    """Spec on (n-gram drafter) vs off: identical greedy outputs; the
+    speculated run must actually run verify chains and leave clean pools."""
+    cfg, _, params = dense_setup
+    # repetition-heavy prompts so the n-gram drafter actually proposes
+    base = list(map(int, rng.integers(1, 500, size=8)))
+    prompts = [base * 3 + list(map(int, rng.integers(1, 500, size=n)))
+               for n in (5, 9, 7)]
+    ref, ref_stats, _, ref_used = _run(cfg, params, prompts, policy=policy,
+                                       spec=False)
+    on, on_stats, states, on_used = _run(cfg, params, prompts, policy=policy,
+                                         spec=True)
+    assert on == ref
+    assert ref_stats.spec_steps == 0 and ref_stats.drafted_tokens == 0
+    assert on_stats.spec_steps > 0 and on_stats.drafted_tokens > 0
+    assert all(s == RequestState.FINISHED for s in states.values())
+    assert on_used == ref_used, "spec run leaked pooled pages"
+
+
+def test_spec_forced_accept_and_reject(dense_setup, rng):
+    """Replay drafter (always right) and wrong drafter (always wrong) bracket
+    the accept rate; outputs stay bitwise identical at both extremes and the
+    accepted-length histogram reconciles with the token counters."""
+    cfg, _, params = dense_setup
+    prompts = [list(map(int, rng.integers(1, 500, size=n)))
+               for n in (20, 33, 27)]
+    ref, _, _, ref_used = _run(cfg, params, prompts, policy="fastdecode",
+                               spec=False)
+
+    good, g_stats, _, g_used = _run(
+        cfg, params, prompts, policy="fastdecode", spec=True,
+        drafter=ReplayDrafter(prompts, ref))
+    assert good == ref
+    assert g_stats.drafted_tokens > 0
+    assert g_stats.rejected_drafts == 0
+    assert g_stats.accepted_tokens == g_stats.drafted_tokens
+    # hist counts per speculated row-step; weights must equal accepted tokens
+    assert sum(k * v for k, v in g_stats.accept_len_hist.items()) \
+        == g_stats.accepted_tokens
+    assert any(k >= 1 for k in g_stats.accept_len_hist)
+    assert g_used == ref_used
+
+    bad, b_stats, _, b_used = _run(
+        cfg, params, prompts, policy="fastdecode", spec=True,
+        drafter=WrongDrafter(prompts, ref, cfg.vocab_size))
+    assert bad == ref, "rejected drafts must not disturb greedy outputs"
+    assert b_stats.drafted_tokens > 0
+    assert b_stats.accepted_tokens == 0
+    assert b_stats.rejected_drafts == b_stats.drafted_tokens
+    assert set(b_stats.accept_len_hist) == {0}
+    assert b_used == ref_used, "rollback leaked pooled pages"
+
+
+def test_spec_rollback_under_preemption(dense_setup, rng):
+    """Tiny host pool + starvation forces drop-and-replay preemption while
+    every draft is rejected: truncation rollback must compose with preemption
+    without leaking pages or changing outputs."""
+    cfg, _, params = dense_setup
+    prompts = [list(map(int, rng.integers(1, 500, size=n)))
+               for n in (22, 26, 24)]
+    kw = dict(policy="fastdecode", n_out=10, device_pages=8, host_pages=6,
+              starvation_limit=2)
+    ref, ref_stats, _, ref_used = _run(cfg, params, prompts, spec=False, **kw)
+    preempts = sum(int(s.split("preempt=")[1].split()[0])
+                   for s in ref_stats.plans)
+    assert preempts > 0, "scenario must actually preempt"
+    on, on_stats, states, on_used = _run(
+        cfg, params, prompts, spec=True,
+        drafter=WrongDrafter(prompts, ref, cfg.vocab_size), **kw)
+    assert on == ref
+    assert on_stats.spec_steps > 0 and on_stats.accepted_tokens == 0
+    assert all(s == RequestState.FINISHED for s in states.values())
+    assert on_used == ref_used
+
+
+def test_spec_rollback_never_touches_shared_pages(dense_setup, rng):
+    """Prefix-cache COW sharing + forced rejection: the rejected tail's page
+    rollback frees only chain-grown (refcount-1) pages — a double release of
+    a sibling-shared page would raise inside PagePool.free.
+
+    Two waves: the first request seeds the radix cache, then two siblings
+    decode on shared prefix pages while every draft is rejected."""
+    cfg, _, params = dense_setup
+    shared = list(map(int, rng.integers(1, 500, size=24)))
+    waves = [[shared + [11]], [shared + [13], shared + [17]]]
+
+    def run_waves(spec, drafter=None):
+        ecfg = EngineConfig(device_pool_pages=8, host_pool_pages=128,
+                            max_batch_tokens=256, policy="fastdecode",
+                            pipeline=True, microbatch=True, planahead=False,
+                            prefix_cache=True, spec_decode=spec)
+        eng = NeoEngine(cfg, ecfg, params=params)
+        if drafter is not None:
+            eng.drafter = drafter
+        out = {}
+        for wave in waves:
+            rids = [eng.submit(p, 8) for p in wave]
+            done = eng.run_until_done(500)
+            out.update({r: done[r] for r in rids})
+        stats, hits = eng.stats, eng.prefix_cache.stats.hits
+        states = [eng.requests[r].state for r in out]
+        eng.close()
+        return out, stats, hits, states
+
+    ref, _, ref_hits, _ = run_waves(spec=False)
+    assert ref_hits > 0, "siblings must actually share cached prefix pages"
+    prompts = waves[0] + waves[1]
+    on, on_stats, on_hits, states = run_waves(
+        spec=True, drafter=WrongDrafter(prompts, ref, cfg.vocab_size))
+    assert on == ref
+    assert on_stats.spec_steps > 0 and on_stats.rejected_drafts > 0
+    assert on_hits > 0
+    assert all(s == RequestState.FINISHED for s in states)
+
+
+def test_spec_requires_greedy(dense_setup, rng):
+    """Structural eligibility: temperature sampling disables speculation
+    entirely (no chain may run where acceptance cannot be exact)."""
+    cfg, _, params = dense_setup
+    prompts = [list(map(int, rng.integers(1, 500, size=12)))]
+    _, stats, _, _ = _run(cfg, params, prompts, policy="fastdecode",
+                          spec=True, decode_sample="temperature")
+    assert stats.spec_steps == 0 and stats.drafted_tokens == 0
+
+
+# ---------------------------------------------------------------------------
+def test_perfmodel_verify_pricing():
+    """t_verify grows with K, spec_expected_emitted is bounded by K+1 and
+    monotone in the accept rate, and observe_accept moves the EWMA toward
+    the measured rate."""
+    pm = PerfModel.for_arch(get_smoke_config("qwen3-0.6b"))
+    t1 = pm.t_verify(1, n_rows=4, host_kv_tokens=256, dev_kv_tokens=256)
+    t4 = pm.t_verify(4, n_rows=4, host_kv_tokens=256, dev_kv_tokens=256)
+    assert 0 < t1 < t4
+    for k in (1, 2, 4, 8):
+        e = pm.spec_expected_emitted(k)
+        assert 1.0 <= e <= k + 1
+    lo = pm.spec_accept
+    pm.observe_accept(10, 10)  # perfect round: EWMA must move up
+    assert pm.spec_accept > lo
+    hi = pm.spec_accept
+    pm.observe_accept(10, 0)  # dry round: EWMA must move down
+    assert pm.spec_accept < hi
+    # expected emitted length tracks the accept rate
+    pm.spec_accept = 0.1
+    low = pm.spec_expected_emitted(4)
+    pm.spec_accept = 0.9
+    assert pm.spec_expected_emitted(4) > low
