@@ -1,0 +1,73 @@
+"""repro.analysis — AST-based invariant linter + static thread-role race
+checker for the offload engine.
+
+Run it as ``python -m repro.analysis --strict`` (see ``__main__``), or use
+:func:`run_analysis` from tests.  ``docs/static_analysis.md`` has the rule
+catalog, the thread-role map and the suppression policy.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List, Optional, Sequence
+
+from .baseline import EXPECTED_CLEAN, check_baseline
+from .lint import Finding, Module, ProjectRule, Rule, load_module, load_tree, run_rules
+from .report import render_json, render_text, unsuppressed
+from .roles import LockOrder, RoleChecker, ROLE_SEEDS, SHARED_STATE_WHITELIST
+from .rules import (
+    INVARIANT_RULES,
+    NoOrderedCallbackInTP,
+    NoWallClockInPlan,
+    PageOwnership,
+    SpanClock,
+    TracerEmitGuard,
+)
+
+__all__ = [
+    "Finding",
+    "Module",
+    "Rule",
+    "ProjectRule",
+    "all_rules",
+    "default_root",
+    "run_analysis",
+    "render_text",
+    "render_json",
+    "unsuppressed",
+    "ROLE_SEEDS",
+    "SHARED_STATE_WHITELIST",
+    "EXPECTED_CLEAN",
+    "check_baseline",
+]
+
+
+def all_rules(strict: bool = False) -> List[Rule]:
+    """The full rule set.  The role/lock checkers are project rules and
+    always included; strictness only changes the meta (suppression)
+    findings added by :func:`repro.analysis.lint.run_rules`."""
+    rules: List[Rule] = [cls() for cls in INVARIANT_RULES]
+    rules.append(RoleChecker())
+    rules.append(LockOrder())
+    return rules
+
+
+def default_root() -> str:
+    """The ``repro`` package directory this module is installed in."""
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_analysis(
+    root: Optional[str] = None,
+    strict: bool = True,
+    rules: Optional[Sequence[Rule]] = None,
+) -> List[Finding]:
+    root = root or default_root()
+    modules = load_tree(root)
+    findings = run_rules(modules,
+                         list(rules) if rules is not None else all_rules(strict),
+                         strict=strict)
+    if strict:
+        findings.extend(check_baseline(findings))
+        findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings

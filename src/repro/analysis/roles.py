@@ -1,0 +1,345 @@
+"""Static thread-role race checker.
+
+The engine's concurrency story spans six thread roles:
+
+================  ==========================================================
+role              where it runs
+================  ==========================================================
+engine            the caller's thread: submit/offer/step/close and the
+                  whole plan → launch → join loop
+planner           the single plan-ahead worker (``neo-planner`` pool) that
+                  plans iteration N+1 against shadow queues
+lane              host-attention lane threads (``neo-hostlane`` pool)
+                  running lane decode graphs and cached-prefix prefill
+copy-stream       per-direction (× per-shard under TP) transfer workers
+                  (``neo-transfer-<s>``) executing swap copy jobs
+host-callback     io_callback bodies of the unsharded decode/prefix graphs
+per-shard-callback io_callback bodies under shard_map (one per TP shard)
+================  ==========================================================
+
+The checker seeds those roles on the thread entry points below (plus any
+``# repro-role:`` comment on a ``def`` line), propagates them through the
+heuristic call graph (cross-thread handoffs like ``pool.submit`` do NOT
+propagate — that is the role boundary), and then audits shared state:
+any ``self.X`` written under one role and read under another must be
+lock-protected at both sites or listed in ``SHARED_STATE_WHITELIST`` with
+a documented handoff.  ``__init__`` writes are construction-time and
+excluded (thread creation is the happens-before edge).
+
+A small lock-order pass rides along: nested ``with ...lock`` scopes (plus
+one level of calls made while holding a lock) form a digraph that must
+stay acyclic.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .graph import Access, FuncInfo, FunctionIndex
+from .lint import Finding, Module, ProjectRule
+
+__all__ = [
+    "RoleChecker", "LockOrder", "ROLE_SEEDS", "SHARED_STATE_WHITELIST",
+    "ROLE_SCOPE",
+]
+
+# The roles span the engine core and the observability layer; serving-sim /
+# launch / model code is single-threaded from the engine's point of view.
+ROLE_SCOPE = ("core/", "obs/")
+
+
+def _scope(modules: Sequence[Module]) -> List[Module]:
+    return [m for m in modules
+            if any(m.relpath.startswith(d) for d in ROLE_SCOPE)]
+
+
+# Entry-point → role map.  Patterns match FuncInfo.shortname; ``Class.*``
+# matches direct methods only, ``Class.m.<locals>.*`` matches the closures
+# defined inside ``m`` (which is how work is shipped to pools and queues).
+ROLE_SEEDS: Dict[str, Tuple[str, ...]] = {
+    "engine": (
+        # every public/stepping method of the engine runs on the caller's
+        # thread, as do the executor/transfer methods it calls inline —
+        # those inherit "engine" through call-graph propagation.
+        "NeoEngine.*",
+    ),
+    "planner": (
+        # the closure submitted to the neo-planner pool
+        "NeoEngine._launch_planahead.<locals>.*",
+    ),
+    "lane": (
+        # closures submitted to the neo-hostlane pool
+        "PagedExecutor.submit_host_lane.<locals>.*",
+        "PagedExecutor._prefill_cached_host",
+    ),
+    "copy-stream": (
+        # the worker loop; the copy/gather job closures it dequeues carry
+        # `# repro-role: copy-stream` annotations at their defs (swap_in's
+        # `apply` closure runs engine-side at join time, so a closure glob
+        # here would mis-role it)
+        "TransferEngine._run",
+    ),
+    "host-callback": (
+        "PagedExecutor._host_cb",
+        "PagedExecutor._host_prefix_cb",
+        "PagedExecutor._host_cb_lane",
+        "PagedExecutor._build_decode_lane.<locals>.*",
+    ),
+    "per-shard-callback": (
+        "PagedExecutor._host_cb_tp",
+        "PagedExecutor._host_prefix_cb_tp",
+    ),
+}
+
+KNOWN_ROLES = frozenset(ROLE_SEEDS)
+
+# (Class, attr) pairs that ARE touched cross-role without a common lock,
+# each with the documented handoff that makes the access safe.  Strict
+# mode flags stale entries, so the list cannot rot silently.
+SHARED_STATE_WHITELIST: Dict[Tuple[str, str], str] = {
+    # --- launch-then-call handoffs (io_callback operand slots) ------------
+    ("PagedExecutor", "_cb_prefix_state"): (
+        "engine writes the prefix-callback operands strictly before "
+        "dispatching the prefill graph; the io_callback that reads them "
+        "runs inside that dispatch, and the engine only resumes after the "
+        "graph returns (launch-then-call handoff)"
+    ),
+    ("PagedExecutor", "_cb_lane_state"): (
+        "per-lane slot written by submit_host_lane before the lane future "
+        "is submitted; the lane's io_callback reads only its own slot "
+        "inside that future (pool.submit is the happens-before edge) and "
+        "the slot is not reused until the future is joined"
+    ),
+    # --- jit compile caches: GIL-atomic memo publish ----------------------
+    ("PagedExecutor", "_lane_fns"): (
+        "keyed by lane id; a lane id is active on at most one thread at a "
+        "time (lane-scoped plans), dict get/set are GIL-atomic, and a "
+        "racing duplicate compile would publish an equivalent jitted fn"
+    ),
+    ("PagedExecutor", "_prefill_fns"): (
+        "shape-bucket memo of jitted prefill fns: dict publish is "
+        "GIL-atomic and values for a key are interchangeable, so the "
+        "worst case is one redundant trace"
+    ),
+    # --- page-granular single-writer pools --------------------------------
+    ("PagePool", "k"): (
+        "page-granular ownership: device-pool rebinds happen only in "
+        "engine-thread jitted writes; host-pool rows touched by a lane "
+        "belong to that lane's row partition, and swapped pages are not "
+        "readable until their TransferHandle event fires"
+    ),
+    ("PagePool", "v"): (
+        "same page-granular single-writer protocol as PagePool.k"
+    ),
+    ("HostAttention", "pool_k"): (
+        "numpy views over the host pool: the unsharded and per-shard "
+        "callbacks never run in the same serve, per-shard callbacks write "
+        "disjoint kv-head slices (kv_head_slice), and append/attend for a "
+        "row happen inside one ordered callback chain"
+    ),
+    ("HostAttention", "pool_v"): (
+        "same disjoint per-shard slice protocol as pool_k"
+    ),
+    # --- stale-read-tolerant planner heuristics ---------------------------
+    ("PerfModel", "scale"): (
+        "EMA float rebound on the engine thread between steps; the "
+        "planner reading a slightly stale scale only shifts the plan "
+        "heuristic, and plan-ahead adoption revalidates signatures"
+    ),
+    ("PerfModel", "spec_accept"): (
+        "same stale-read-tolerant EMA protocol as PerfModel.scale"
+    ),
+    # --- per-call snapshots ----------------------------------------------
+    ("PoolView", "device_free"): (
+        "PoolView is a per-plan snapshot: the engine plans against a live "
+        "view, the planner against its own shadow copy — instances are "
+        "never shared across roles"
+    ),
+    ("PoolView", "host_free"): (
+        "same per-instance snapshot argument as device_free"
+    ),
+    # --- TransferEngine post-join/teardown state --------------------------
+    ("TransferEngine", "_closed"): (
+        "reject-after-close flag: written only by the idempotent close() "
+        "on the engine thread; workers read it to drop late jobs during "
+        "teardown, and the queue sentinel (not this flag) is what "
+        "terminates the worker loop"
+    ),
+}
+
+
+class RoleChecker(ProjectRule):
+    name = "cross-role-state"
+    description = (
+        "any self.X written under one thread role and read under another "
+        "must be locked at both sites, Event-mediated, or whitelisted "
+        "with a documented handoff"
+    )
+
+    def __init__(self) -> None:
+        self.last_roles: Dict[str, Set[str]] = {}
+
+    # -- role propagation ---------------------------------------------------
+
+    def propagate(self, index: FunctionIndex) -> Dict[str, Set[str]]:
+        roles: Dict[str, Set[str]] = {q: set() for q in index.functions}
+        for role, patterns in ROLE_SEEDS.items():
+            for pat in patterns:
+                for qual in index.by_shortname(pat):
+                    roles[qual].add(role)
+        for qual, info in index.functions.items():
+            for role in info.role_comments:
+                roles[qual].add(role)
+        changed = True
+        while changed:
+            changed = False
+            for qual, info in index.functions.items():
+                if not roles[qual]:
+                    continue
+                for call in info.calls:
+                    for callee in index.resolve_call(call, info):
+                        missing = roles[qual] - roles[callee]
+                        if missing:
+                            roles[callee] |= missing
+                            changed = True
+        return roles
+
+    # -- shared-state audit -------------------------------------------------
+
+    def check_project(self, modules: Sequence[Module]) -> List[Finding]:
+        index = FunctionIndex(_scope(modules))
+        roles = self.propagate(index)
+        self.last_roles = roles
+
+        # collect per-(class, attr) access sites with their function roles
+        sites: Dict[Tuple[str, str], List[Tuple[FuncInfo, Access, Set[str]]]] = {}
+        for qual, info in index.functions.items():
+            if info.classname is None:
+                continue
+            fn_roles = roles[qual]
+            if not fn_roles:
+                continue  # unreached from any seeded entry point
+            if info.shortname.endswith("__init__") and "<locals>" not in info.shortname:
+                continue  # construction-time writes happen before threads
+            for acc in info.accesses:
+                sites.setdefault((info.classname, acc.attr), []).append(
+                    (info, acc, fn_roles))
+
+        out: List[Finding] = []
+        used_whitelist: Set[Tuple[str, str]] = set()
+        for key in sorted(sites):
+            entries = sites[key]
+            writes = [e for e in entries if e[1].is_write]
+            if not writes:
+                continue
+            all_roles: Set[str] = set()
+            for _, _, r in entries:
+                all_roles |= r
+            if len(all_roles) < 2:
+                continue  # single-role state
+            unlocked = [e for e in entries if e[1].lock is None]
+            if not unlocked:
+                continue  # every site holds a lock
+            if key in SHARED_STATE_WHITELIST:
+                used_whitelist.add(key)
+                continue
+            cls, attr = key
+            detail = "; ".join(
+                f"{'write' if a.is_write else 'read'}@"
+                f"{i.module.relpath}:{a.line} [{'/'.join(sorted(r))}]"
+                f"{' unlocked' if a.lock is None else f' lock={a.lock}'}"
+                for i, a, r in entries[:6]
+            )
+            more = f" (+{len(entries) - 6} more sites)" if len(entries) > 6 else ""
+            out.append(Finding(
+                self.name, writes[0][0].module.relpath, writes[0][1].line,
+                f"`{cls}.{attr}` is written under one role and touched "
+                f"under others ({'/'.join(sorted(all_roles))}) with "
+                f"unlocked sites — lock both sides, mediate with an "
+                f"Event, or whitelist with a documented handoff. "
+                f"Sites: {detail}{more}",
+            ))
+
+        # stale whitelist entries can hide future regressions
+        for key in sorted(set(SHARED_STATE_WHITELIST) - used_whitelist):
+            if not any(key[0] == info.classname for info in index.functions.values()):
+                continue  # class not in the analyzed module set (tests)
+            out.append(Finding(
+                self.name, "analysis/roles.py", 1,
+                f"whitelist entry `{key[0]}.{key[1]}` no longer matches a "
+                "cross-role unlocked access — delete the stale exemption",
+            ))
+        return out
+
+
+class LockOrder(ProjectRule):
+    name = "lock-order"
+    description = (
+        "the lock-acquisition digraph (nested `with ...lock` scopes plus "
+        "one call level) must stay acyclic"
+    )
+
+    def check_project(self, modules: Sequence[Module]) -> List[Finding]:
+        index = FunctionIndex(_scope(modules))
+        edges: Dict[str, Set[str]] = {}
+        where: Dict[Tuple[str, str], Tuple[str, int]] = {}
+
+        def add(a: str, b: str, relpath: str, line: int) -> None:
+            if a == b:
+                return
+            edges.setdefault(a, set()).add(b)
+            where.setdefault((a, b), (relpath, line))
+
+        for qual, info in index.functions.items():
+            for a, b, line in info.lock_edges:
+                add(a, b, info.module.relpath, line)
+            # one interprocedural level: call made while holding a lock,
+            # into a function that acquires its own top-level lock
+            for held, call in info.calls_under_lock:
+                for callee in index.resolve_call(call, info):
+                    for acquired, line in index.functions[callee].acquired_locks:
+                        add(held, acquired,
+                            index.functions[callee].module.relpath, line)
+
+        out: List[Finding] = []
+        seen_cycles: Set[Tuple[str, ...]] = set()
+        for start in sorted(edges):
+            cycle = _find_cycle(start, edges)
+            if cycle is None:
+                continue
+            canon = tuple(sorted(cycle))
+            if canon in seen_cycles:
+                continue
+            seen_cycles.add(canon)
+            relpath, line = where.get((cycle[0], cycle[1]), ("<project>", 1))
+            out.append(Finding(
+                self.name, relpath, line,
+                "lock-order cycle: " + " -> ".join(cycle + (cycle[0],)),
+            ))
+        return out
+
+
+def _find_cycle(start: str, edges: Dict[str, Set[str]]) -> Optional[Tuple[str, ...]]:
+    path: List[str] = []
+    on_path: Set[str] = set()
+    done: Set[str] = set()
+
+    def dfs(node: str) -> Optional[Tuple[str, ...]]:
+        if node in on_path:
+            i = path.index(node)
+            return tuple(path[i:])
+        if node in done:
+            return None
+        path.append(node)
+        on_path.add(node)
+        for nxt in sorted(edges.get(node, ())):
+            found = dfs(nxt)
+            if found is not None:
+                return found
+        path.pop()
+        on_path.discard(node)
+        done.add(node)
+        return None
+
+    return dfs(start)

@@ -1406,15 +1406,21 @@ class NeoEngine:
     # lifecycle
     # ------------------------------------------------------------------
     def close(self) -> None:
-        """Join and stop the background transfer/dispatch/planner threads."""
+        """Join and stop the background transfer/dispatch/planner threads.
+
+        Idempotent; a transfer that failed in flight surfaces its error
+        here, but only after every worker pool has been torn down.
+        """
         self._spec = None
         if self._planner is not None:
             self._planner.shutdown(wait=True)
             self._planner = None
-        if self.transfer is not None:
-            self.transfer.close()
-        if self.paged:
-            self.executor.close()
+        try:
+            if self.transfer is not None:
+                self.transfer.close()
+        finally:
+            if self.paged:
+                self.executor.close()
 
     # ------------------------------------------------------------------
     # drivers

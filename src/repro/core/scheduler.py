@@ -323,6 +323,7 @@ class NeoScheduler:
         what the engine's plan-ahead thread runs against.
         """
         tr = self.tracer
+        # repro-lint: allow[no-wall-clock-in-plan] -- tracer timestamping only, guarded so plan() stays pure when tracing is off
         t0 = time.perf_counter() if tr is not None else 0.0
         st = self if state is None else state
         self._admission_control(pools, st)
@@ -335,6 +336,7 @@ class NeoScheduler:
         self._annotate_lanes(plan)
         self._annotate_spec(plan)
         if tr is not None:
+            # repro-lint: allow[no-wall-clock-in-plan] -- closes the guarded sched/plan span; plan content never depends on the clock
             tr.emit("sched", "plan", t0, time.perf_counter(),
                     {"mode": plan.mode, "speculative": state is not None})
         return plan

@@ -216,12 +216,28 @@ class TransferEngine:
     # ------------------------------------------------------------------
     # workers (one per copy stream)
     # ------------------------------------------------------------------
-    def _run(self, stream: str) -> None:
+    def _run(self, stream: str) -> None:  # repro-role: copy-stream
         q = self._queues[stream]
         while True:
             job = q.get()
             if job is None:
                 return
+            if self._closed:
+                # Teardown: close() only sets _closed after draining every
+                # legitimately-launched handle, so a job seen here was
+                # enqueued against a closed engine — skip the copy (its
+                # pages may already be retired) but still complete the
+                # handle so no joiner blocks forever.
+                h = job.handle
+                if h.error is None:
+                    h.error = RuntimeError(
+                        "transfer job enqueued after close()")
+                with self._lock:
+                    h._jobs_done += 1
+                    last = h._jobs_done >= h._jobs_total
+                if last:
+                    h._event.set()
+                continue
             h = job.handle
             t0 = time.perf_counter()
             failed = False
@@ -261,6 +277,7 @@ class TransferEngine:
     # ------------------------------------------------------------------
     def swap_out(self, req: Request) -> TransferHandle:
         """Device -> host.  Pages/location move now; data moves in background."""
+        self._ensure_open()
         dev, host = self.pool.device, self.pool.host
         if not req.pages:
             req.location = "cpu"
@@ -288,7 +305,7 @@ class TransferEngine:
         dst_idx = np.asarray(new_pages, np.int32)
 
         if self.shards == 1:
-            def copy() -> None:
+            def copy() -> None:  # repro-role: copy-stream
                 for layer in range(L):  # layer-wise, page-granular scatter
                     host.k[layer, dst_idx] = k_np[layer]
                     host.v[layer, dst_idx] = v_np[layer]
@@ -309,7 +326,7 @@ class TransferEngine:
                 nb_s = (k_np[:, :, :, lo:hi].nbytes
                         + v_np[:, :, :, lo:hi].nbytes)
 
-                def copy_shard(lo=lo, hi=hi, nb_s=nb_s) -> None:
+                def copy_shard(lo=lo, hi=hi, nb_s=nb_s) -> None:  # repro-role: copy-stream
                     for layer in range(L):
                         host.k[layer, dst_idx, :, lo:hi] = \
                             k_np[layer, :, :, lo:hi]
@@ -331,6 +348,7 @@ class TransferEngine:
         read completes); the device upload + pool scatter happen at join
         time on the engine thread — device ops issued from a second thread
         would contend with the in-flight decode graphs on this backend."""
+        self._ensure_open()
         dev, host = self.pool.device, self.pool.host
         if not req.pages:
             req.location = "gpu"
@@ -347,13 +365,13 @@ class TransferEngine:
         handle.trace_iter = self.trace_iter
         staged = {}
 
-        def apply() -> None:
+        def apply() -> None:  # repro-role: engine -- runs at join time
             host.free(old_pages)
             dev.put_pages(new_pages, staged["k"], staged["v"])
 
         handle._apply = apply
         if self.shards == 1:
-            def gather() -> None:
+            def gather() -> None:  # repro-role: copy-stream
                 # DRAM-side read of the host pages (layer-major contiguous
                 # copy); pages return to the host free list only once read.
                 staged["k"] = host.k[:, src_idx].copy()
@@ -378,7 +396,7 @@ class TransferEngine:
             for s in range(self.shards):
                 lo, hi = s * per, (s + 1) * per
 
-                def gather_shard(lo=lo, hi=hi) -> None:
+                def gather_shard(lo=lo, hi=hi) -> None:  # repro-role: copy-stream
                     staged["k"][:, :, :, lo:hi] = host.k[:, src_idx, :, lo:hi]
                     staged["v"][:, :, :, lo:hi] = host.v[:, src_idx, :, lo:hi]
                     with self._lock:
@@ -403,6 +421,7 @@ class TransferEngine:
         async swap paths.  The source pages are left untouched — the prefix
         cache releases them via refcounted ``free`` when appropriate.
         """
+        self._ensure_open()
         src_pool = self.pool.pool(src)
         dst_pool = self.pool.pool(dst)
         if not pages:
@@ -480,12 +499,40 @@ class TransferEngine:
         """Join every outstanding transfer (step barrier / shutdown)."""
         self.join(list(self._pending))
 
-    def close(self) -> None:
+    def close(self, timeout: float = 5.0) -> None:
+        """Idempotent shutdown: drain every outstanding transfer, stop the
+        worker threads via queue sentinels, and join them with a timeout.
+
+        A transfer that failed in flight must not leave the workers
+        running: its error is captured, the remaining handles keep
+        draining, and the first error re-raises only after every worker
+        has been joined.  After close() returns, swap_out/swap_in/
+        copy_pages raise rather than enqueue onto dead queues.
+        """
         if self._closed:
             return
+        errors: List[BaseException] = []
+        # Drain to quiescence.  join() marks a failed handle consumed
+        # before raising, so each failed round strictly shrinks
+        # self._pending and this loop terminates.
+        while True:
+            try:
+                self.drain()
+                break
+            except BaseException as e:
+                errors.append(e)
         self._closed = True
-        self.drain()
         for q in self._queues.values():
             q.put(None)
-        for w in self._workers.values():
-            w.join(timeout=5.0)
+        for s, w in self._workers.items():
+            w.join(timeout=timeout)
+            if w.is_alive():
+                errors.append(RuntimeError(
+                    f"copy-stream worker {s!r} did not exit within "
+                    f"{timeout:.1f}s of its shutdown sentinel"))
+        if errors:
+            raise errors[0]
+
+    def _ensure_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("TransferEngine is closed")

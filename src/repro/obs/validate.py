@@ -1,7 +1,9 @@
 """Validate an exported Chrome trace-event JSON (the CI trace-smoke gate).
 
 Checks the structural contract the instrumentation promises — the file is
-valid Perfetto-loadable JSON, every span's thread row is named, the lane /
+valid Perfetto-loadable JSON, every span's thread row is named, every
+track (including the per-shard ``hostattn-*-s<N>`` rows under TP) is
+single-writer well-formed (spans nest or are disjoint), the lane /
 planner / request timelines are populated, speculative plans were actually
 adopted, and (optionally) the copy streams carried traffic:
 
@@ -33,6 +35,7 @@ def validate(path: str, *, expect_host_lane: bool = False,
         e["tid"]: e["args"]["name"] for e in evs
         if e.get("ph") == "M" and e.get("name") == "thread_name"}
     spans_per_track: Dict[str, int] = {}
+    track_spans: Dict[str, list] = {}
     for e in evs:
         if e.get("ph") != "X":
             continue
@@ -43,6 +46,22 @@ def validate(path: str, *, expect_host_lane: bool = False,
             fails.append(f"malformed span {e['name']!r}")
         track = tid_names[e["tid"]]
         spans_per_track[track] = spans_per_track.get(track, 0) + 1
+        track_spans.setdefault(track, []).append(
+            (e["ts"], e["ts"] + e.get("dur", 0), e["name"]))
+
+    # Single-writer well-formedness: within any one track the spans must
+    # nest or be disjoint.  Two overlapping-but-not-nested spans mean two
+    # writers shared a track — under TP that is exactly the bug of two
+    # shard callbacks emitting onto one `hostattn-*-s<N>` row instead of
+    # their own per-shard rows (PR-8's open item), so per-shard tracks
+    # get the same check as every unsharded track.
+    for track, spans in sorted(track_spans.items()):
+        bad = _overlap_violation(spans)
+        if bad is not None:
+            (a0, a1, an), (b0, b1, bn) = bad
+            fails.append(
+                f"track {track!r} is not single-writer: span {an!r} "
+                f"[{a0},{a1}] overlaps {bn!r} [{b0},{b1}] without nesting")
 
     # every named lane-style track must actually carry spans
     for tid, track in tid_names.items():
@@ -82,6 +101,20 @@ def validate(path: str, *, expect_host_lane: bool = False,
               f"tracks={sorted(spans_per_track)}, adopts={adopts}, "
               f"requests={len(begun)}")
     return fails
+
+
+def _overlap_violation(spans):
+    """First pair of spans in one track that overlap without nesting, or
+    None.  Spans are (t0, t1, name); sorted enclosing-first, a stack proves
+    nest-or-disjoint exactly like the tracer's own design contract."""
+    stack = []
+    for t0, t1, name in sorted(spans, key=lambda s: (s[0], -s[1])):
+        while stack and stack[-1][1] <= t0:
+            stack.pop()
+        if stack and t1 > stack[-1][1]:
+            return (stack[-1], (t0, t1, name))
+        stack.append((t0, t1, name))
+    return None
 
 
 def main(argv=None) -> int:

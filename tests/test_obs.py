@@ -366,3 +366,112 @@ def test_cancelled_excluded_from_latency_stats():
     assert m.total_output_tokens == 4  # only the finished one
     assert np.isfinite(m.ttft())
     assert m.ttft() == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# validate: single-writer well-formedness incl. per-shard TP tracks (PR-8
+# open item: the hostattn-*-s<N> rows must get the same nest-or-disjoint
+# check as the unsharded tracks)
+# ---------------------------------------------------------------------------
+
+
+def _chrome_doc(extra_tracks):
+    """A minimal valid trace doc: device + planner rows, one request
+    lifecycle, plus ``extra_tracks`` as {name: [(ts, dur, name), ...]}."""
+    tracks = {"device": [(0, 10, "decode")],
+              "planner": [(0, 2, "plan")]}
+    tracks.update(extra_tracks)
+    evs = []
+    for tid, (track, spans) in enumerate(sorted(tracks.items()), start=1):
+        evs.append({"ph": "M", "name": "thread_name", "pid": 1, "tid": tid,
+                    "args": {"name": track}})
+        for ts, dur, name in spans:
+            evs.append({"ph": "X", "pid": 1, "tid": tid, "ts": ts,
+                        "dur": dur, "name": name, "args": {}})
+    evs.append({"ph": "b", "cat": "req", "name": "req", "id": 1, "pid": 1,
+                "tid": 1, "ts": 0})
+    evs.append({"ph": "e", "cat": "req", "name": "req", "id": 1, "pid": 1,
+                "tid": 1, "ts": 10})
+    return {"traceEvents": evs, "otherData": {"events_dropped": 0}}
+
+
+def _validate_doc(tmp_path, doc):
+    from repro.obs.validate import validate
+    p = tmp_path / "trace.json"
+    p.write_text(json.dumps(doc))
+    return validate(str(p))
+
+
+def test_validate_accepts_wellformed_tp2_shard_tracks(tmp_path):
+    # TP=2 fixture: each shard callback owns its own hostattn row; spans
+    # within a row nest or are disjoint
+    doc = _chrome_doc({
+        "hostattn-b0-s0": [(0, 4, "layer0"), (1, 2, "attend"), (5, 3, "layer1")],
+        "hostattn-b0-s1": [(0, 4, "layer0"), (5, 3, "layer1")],
+        "hostattn-prefix-s0": [(20, 2, "prefix")],
+        "hostattn-prefix-s1": [(20, 2, "prefix")],
+    })
+    assert _validate_doc(tmp_path, doc) == []
+
+
+def test_validate_flags_two_writers_on_one_shard_track(tmp_path):
+    # the regression validate must catch: two shard callbacks emitting onto
+    # ONE per-shard row — overlapping spans that do not nest
+    doc = _chrome_doc({
+        "hostattn-b0-s0": [(0, 5, "layer0"), (3, 6, "layer0")],
+        "hostattn-b0-s1": [(0, 4, "layer0")],
+    })
+    fails = _validate_doc(tmp_path, doc)
+    assert any("hostattn-b0-s0" in f and "single-writer" in f for f in fails)
+
+
+def test_validate_flags_overlap_on_unsharded_track_too(tmp_path):
+    doc = _chrome_doc({"copy-out": [(0, 5, "out"), (4, 4, "out")]})
+    fails = _validate_doc(tmp_path, doc)
+    assert any("copy-out" in f and "single-writer" in f for f in fails)
+
+
+def test_validate_real_tp2_export_passes(tmp_path):
+    """End-to-end TP=2 fixture: a traced TP=2 serve on a fake-device mesh
+    exports per-shard hostattn tracks, and the export passes validate's
+    single-writer check (subprocess: needs XLA fake host devices)."""
+    from tests.conftest import run_subprocess
+
+    out = run_subprocess("""
+import json
+import os
+import tempfile
+import numpy as np
+from repro.config import EngineConfig
+from repro.configs import get_smoke_config
+from repro.core.engine import NeoEngine
+from repro.core.request import RequestState
+from repro.obs.tracer import SpanTracer
+from repro.obs.validate import validate
+
+cfg = get_smoke_config('qwen3-0.6b')
+ecfg = EngineConfig(device_pool_pages=10, host_pool_pages=64,
+                    max_batch_tokens=1024, policy='neo', tp=2)
+eng = NeoEngine(cfg, ecfg)
+tracer = SpanTracer()
+eng.attach_tracer(tracer)
+rng = np.random.default_rng(0)
+rids = [eng.submit(rng.integers(0, cfg.vocab_size, size=24 + 3 * i).tolist(), 6)
+        for i in range(4)]
+for _ in range(300):
+    eng.step()
+    if all(eng.requests[r].state == RequestState.FINISHED for r in rids):
+        break
+eng.close()
+path = os.path.join(tempfile.mkdtemp(), 'trace_tp2_test.json')
+doc = tracer.export_chrome(path)
+tracks = sorted({e['args']['name'] for e in doc['traceEvents']
+                 if e.get('ph') == 'M' and e.get('name') == 'thread_name'})
+fails = validate(path)
+print(json.dumps({'tracks': tracks, 'fails': fails}))
+""")
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["fails"] == []
+    shard_tracks = [t for t in res["tracks"]
+                    if t.startswith("hostattn") and t.endswith(("-s0", "-s1"))]
+    assert shard_tracks, f"no per-shard hostattn tracks in {res['tracks']}"

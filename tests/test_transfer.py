@@ -105,6 +105,57 @@ def test_transfer_empty_request(dense_setup):
     te.close()
 
 
+def test_close_is_idempotent_and_joins_workers(dense_setup):
+    cfg, _, _ = dense_setup
+    pool = DualPool(cfg, device_pages=8, host_pages=8)
+    te = TransferEngine(pool)
+    req = _mk_request(0, pool, 2)
+    _fill_pages(cfg, pool, req)
+    h = te.swap_out(req)
+    te.close()
+    # draining close: the in-flight swap completed before the join
+    assert h.done() and h.error is None
+    for w in te._workers.values():
+        assert not w.is_alive()
+    te.close()  # second close is a no-op, not an error
+    assert te._closed
+
+
+def test_swap_after_close_raises(dense_setup):
+    cfg, _, _ = dense_setup
+    pool = DualPool(cfg, device_pages=8, host_pages=8)
+    te = TransferEngine(pool)
+    te.close()
+    req = _mk_request(1, pool, 1)
+    with pytest.raises(RuntimeError, match="closed"):
+        te.swap_out(req)
+    with pytest.raises(RuntimeError, match="closed"):
+        te.swap_in(req)
+    with pytest.raises(RuntimeError, match="closed"):
+        te.copy_pages([0], "gpu", "cpu")
+
+
+def test_close_survives_failed_transfer(dense_setup):
+    """A job that raised in flight must not wedge close(): the error is
+    re-raised only after every queue is drained and every worker joined."""
+    cfg, _, _ = dense_setup
+    pool = DualPool(cfg, device_pages=8, host_pages=8)
+    te = TransferEngine(pool)
+    req = _mk_request(0, pool, 2)
+    _fill_pages(cfg, pool, req)
+    h = te.swap_out(req)
+    te.join([h])
+    boom = RuntimeError("injected copy failure")
+    bad = te.swap_in(req)
+    bad._event.wait(5.0)  # let the gather finish before poisoning
+    bad.error = boom
+    with pytest.raises(RuntimeError, match="injected copy failure"):
+        te.close()
+    assert te._closed
+    for w in te._workers.values():
+        assert not w.is_alive()
+
+
 def _fill_pages(cfg, pool, req, seed=0, location="gpu"):
     rng = np.random.default_rng(seed)
     shape = (cfg.num_attention_layers, len(req.pages), cfg.kv_block_size,
